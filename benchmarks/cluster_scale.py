@@ -1,0 +1,66 @@
+"""Beyond-paper: K-channel partitioning at fleet scale (64 / 256 / 1024
+channels) with online Bayesian estimation, straggler injection and elastic
+recovery — the 1000-node operating regime the framework targets.
+
+Compares policies on realized join-time mean / variance / p99:
+  equal        — map-reduce style uniform split (paper's foil),
+  inverse_mu   — deterministic load balance (ignores variance),
+  frontier     — the paper's mean-variance partitioner (K-channel PGD).
+Also benchmarks the scheduler tick cost (posterior update + re-partition) at
+each fleet size — the number that must stay off the step critical path.
+"""
+import time
+
+import numpy as np
+
+from .common import emit, save_table, timeit
+
+
+def _run_policy(n, policy, steps=120, seed=0, inject=True):
+    from repro.sched import UncertaintyAwareBalancer
+    from repro.sim import ClusterSim
+
+    sim = ClusterSim.heterogeneous(n, seed=seed)
+    bal = UncertaintyAwareBalancer(n, lam=0.02, policy=policy,
+                               refresh_every=(1 if n <= 64 else 10),
+                               pgd_steps=(150 if n <= 256 else 60))
+    times = []
+    tick_costs = []
+    for i in range(steps):
+        t0 = time.perf_counter()
+        w = bal.weights()
+        tick_costs.append(time.perf_counter() - t0)
+        t, durs = sim.run_step(w)
+        bal.observe(durs, w)
+        if inject and i == steps // 2:
+            sim.inject_slowdown(0, 3.0)   # mid-run hotspot on channel 0
+        if i >= 30:
+            times.append(t)
+    times = np.asarray(times)
+    return (times.mean(), times.var(), np.percentile(times, 99),
+            np.mean(tick_costs) * 1e6)
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for n in (64, 256, 1024):
+        for policy in ("equal", "inverse_mu", "frontier"):
+            steps = 120 if n <= 256 else 60
+            mu, var, p99, tick_us = _run_policy(n, policy, steps=steps)
+            rows.append((n, policy, mu, var, p99, tick_us))
+            out[(n, policy)] = (mu, var, p99)
+            emit(f"cluster_{n}ch_{policy}", tick_us,
+                 f"join_mu={mu:.3f};join_var={var:.4f};p99={p99:.3f}")
+    save_table("cluster_scale.csv", "n,policy,join_mu,join_var,p99,tick_us", rows)
+
+    for n in (64, 256, 1024):
+        eq, fr = out[(n, "equal")], out[(n, "frontier")]
+        assert fr[0] < eq[0], f"frontier should beat equal mean at n={n}"
+        assert fr[2] < eq[2], f"frontier should beat equal p99 at n={n}"
+    return {f"{n}:{p}": out[(n, p)] for n in (64, 256, 1024)
+            for p in ("equal", "frontier")}
+
+
+if __name__ == "__main__":
+    print(run())

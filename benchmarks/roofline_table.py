@@ -1,0 +1,58 @@
+"""Aggregate the dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits a
+CSV + markdown table with the three roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio and memory analysis per (arch x shape x mesh).
+"""
+import glob
+import json
+import os
+
+from .common import RESULTS_DIR, emit, save_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> dict:
+    recs = load_records()
+    rows = []
+    ok = skipped = failed = 0
+    for r in recs:
+        if r["status"] == "skipped":
+            skipped += 1
+            rows.append((r["arch"], r["shape"], r["mesh"], "SKIP",
+                         "", "", "", "", "", r.get("reason", "")))
+            continue
+        if r["status"] != "ok":
+            failed += 1
+            rows.append((r["arch"], r["shape"], r["mesh"], "FAIL",
+                         "", "", "", "", "", r.get("error", "")[:80]))
+            continue
+        ok += 1
+        t = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], "ok",
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}", t["dominant"].replace("_s", ""),
+            f"{t['roofline_fraction']:.4f}",
+            f"{r.get('useful_flops_ratio') or 0:.3f}",
+        ))
+    path = save_table(
+        "roofline_table.csv",
+        "arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+        "roofline_fraction,useful_flops_ratio", rows)
+    emit("roofline_cells_ok", float(ok), f"skipped={skipped};failed={failed}")
+    assert failed == 0, f"{failed} dry-run cells failed"
+    return {"ok": ok, "skipped": skipped, "failed": failed, "table": path}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,73 @@
+"""End-to-end driver: train a language model for a few hundred steps with the
+paper's uncertainty-aware partitioner scheduling per-pod microbatch counts.
+
+The model is a reduced SmolLM config by default so a few hundred steps fit in
+CPU minutes; pass --full-360m to train the real smollm-360m config (same
+code path — sized for a real pod). Two simulated heterogeneous pods supply
+the step-time physics; the gradient math is real (per-pod variable-trip-count
+accumulation under shard_map + cross-pod psum), the loss goes down, and the
+scheduler's split converges while join-time mean AND variance beat the
+equal-split baseline run.
+
+Run:  PYTHONPATH=src python examples/train_partitioned.py --steps 300
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--policy", default="frontier",
+                    choices=("frontier", "equal", "inverse_mu"))
+    ap.add_argument("--full-360m", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.models.transformer import ShardCtx
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config("smollm-360m")
+    if not args.full_360m:
+        cfg = cfg.tiny()
+    cfg = cfg.replace(remat=False)
+
+    mesh = make_local_mesh(("pod", "data", "model"))
+    ctx = ShardCtx(mesh=mesh, batch_axes=("data",))
+    model = build_model(cfg, ctx)
+
+    tcfg = TrainerConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq, lr=1e-3,
+        ckpt_dir=args.ckpt_dir, ckpt_interval=100, log_every=25,
+        partitioned=True, num_pods=2, microbatch=2, max_micro=6,
+        policy=args.policy,
+        sim_mus=(0.9, 1.5), sim_sigmas=(0.05, 0.45),
+    )
+    trainer = Trainer(model, cfg, tcfg, mesh=mesh)
+    state, hist = trainer.run()
+
+    losses = [h["loss"] for h in hist]
+    joins = np.asarray([h["sim_join_time"] for h in hist if "sim_join_time" in h])
+    k_last = hist[-1].get("k_pods")
+    print("\n=== summary ===")
+    print(f"policy={args.policy}")
+    print(f"loss: first10={np.mean(losses[:10]):.3f}  "
+          f"last10={np.mean(losses[-10:]):.3f}")
+    print(f"simulated join time: mean={joins[20:].mean():.3f}s  "
+          f"var={joins[20:].var():.4f}  p99={np.percentile(joins[20:], 99):.3f}s")
+    print(f"final per-pod microbatch split: {k_last}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Partitioning Uncertain Workflows (Huberman & Chua, 2015) as a
+multi-pod JAX training/serving framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Sharded checkpointing with atomic commit and async writes."""
+from .store import CheckpointManager, latest_step, restore, save
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

@@ -1,0 +1,42 @@
+"""repro.core — the paper's contribution: partitioning uncertain workflows.
+
+Public API:
+    frontier_2ch / curve_2ch     — paper Figs 1 & 2 (curves + efficient frontier)
+    optimize_2ch                 — the paper's split procedure for two channels
+    optimize_weights             — K-channel simplex generalization
+    max_moments_quad             — survival-integral oracle (paper's integrals)
+    clark_max_moments_2 / _seq   — closed-form / sequential moment matching
+    NIGState, nig_*              — Bayesian on-the-fly channel estimation
+    select_channels              — how many channels to enlist (group testing ext.)
+"""
+from .normal import Phi, Phi_c, phi, safe_cdf, scaled_channel_params
+from .maxstat import (
+    clark_max_moments_2,
+    clark_max_moments_seq,
+    joint_cdf,
+    max_moments_mc,
+    max_moments_quad,
+    time_grid,
+)
+from .frontier import (
+    FrontierResult,
+    curve_2ch,
+    curve_weights,
+    frontier_2ch,
+    moments_for_split,
+    pareto_mask,
+    select_on_frontier,
+)
+from .partitioner import (
+    PartitionDecision,
+    equal_split,
+    inverse_mu_split,
+    objective,
+    optimize_2ch,
+    optimize_weights,
+    predict_moments,
+)
+from .bayes import NIGState, nig_init, nig_point_estimates, nig_update, nig_update_batch
+from .group import GroupChoice, select_channels, select_channels_exhaustive
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,122 @@
+"""Efficient-frontier computation over workflow splits (paper Figs 1 & 2).
+
+For two channels the split is a scalar ``f`` (channel i gets f, channel j gets
+1-f); for K channels it is a simplex weight vector ``w``. For every candidate
+split we evaluate the joint-completion moments (mu, sigma^2) and extract the
+Pareto-efficient subset — the paper's bolded red frontier.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .maxstat import max_moments_quad
+from .normal import scaled_channel_params
+
+__all__ = [
+    "FrontierResult",
+    "moments_for_split",
+    "curve_2ch",
+    "curve_weights",
+    "pareto_mask",
+    "frontier_2ch",
+    "select_on_frontier",
+]
+
+
+@dataclass(frozen=True)
+class FrontierResult:
+    """μ(f), σ²(f) samples plus the Pareto-efficient subset."""
+
+    f: np.ndarray          # (F,) or (F,K) candidate splits
+    mu: np.ndarray         # (F,)
+    var: np.ndarray        # (F,)
+    efficient: np.ndarray  # (F,) bool — Pareto-efficient in (mu, var)
+
+    @property
+    def f_min_mu(self) -> float:
+        return float(np.asarray(self.f)[int(np.argmin(self.mu))] if np.ndim(self.f) == 1
+                     else np.argmin(self.mu))
+
+    @property
+    def f_min_var(self) -> float:
+        return float(np.asarray(self.f)[int(np.argmin(self.var))] if np.ndim(self.f) == 1
+                     else np.argmin(self.var))
+
+
+def moments_for_split(w, mus, sigmas, num: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """(mu, var) of the joint completion time for one split vector ``w``."""
+    means, stds = scaled_channel_params(w, mus, sigmas)
+    return max_moments_quad(means, stds, num=num)
+
+
+@partial(jax.jit, static_argnames=("num_f", "num_t"))
+def curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048):
+    """μ(f), σ²(f) for f in [0,1]: channel i gets f, channel j gets 1-f.
+
+    Matches the paper's Figure 1 setup exactly. Returns (f, mu, var) arrays.
+    """
+    fs = jnp.linspace(0.0, 1.0, num_f)
+
+    mus = jnp.stack([jnp.asarray(mu_i, jnp.float32), jnp.asarray(mu_j, jnp.float32)])
+    sgs = jnp.stack([jnp.asarray(sigma_i, jnp.float32), jnp.asarray(sigma_j, jnp.float32)])
+
+    def one(f):
+        w = jnp.stack([f, 1.0 - f])
+        return moments_for_split(w, mus, sgs, num=num_t)
+
+    mu, var = jax.vmap(one)(fs)
+    return fs, mu, var
+
+
+@partial(jax.jit, static_argnames=("num_t",))
+def curve_weights(W, mus, sigmas, num_t: int = 2048):
+    """Vectorized (mu, var) over a batch of K-channel weight vectors W: (F, K)."""
+    def one(w):
+        return moments_for_split(w, mus, sigmas, num=num_t)
+    return jax.vmap(one)(W)
+
+
+def pareto_mask(mu: np.ndarray, var: np.ndarray) -> np.ndarray:
+    """Boolean mask of Pareto-efficient points (minimize both mu and var).
+
+    O(F log F): sort by mu then sweep keeping a running min of var.
+    Ties handled so duplicated points are both kept only if non-dominated.
+    """
+    mu = np.asarray(mu)
+    var = np.asarray(var)
+    order = np.lexsort((var, mu))  # primary mu, tie-break var
+    eff = np.zeros(mu.shape[0], dtype=bool)
+    best_var = np.inf
+    for idx in order:
+        if var[idx] < best_var - 1e-15:
+            eff[idx] = True
+            best_var = var[idx]
+    return eff
+
+
+def frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048) -> FrontierResult:
+    """Full paper pipeline for two channels: curves + efficient frontier."""
+    fs, mu, var = curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t)
+    fs, mu, var = np.asarray(fs), np.asarray(mu), np.asarray(var)
+    return FrontierResult(f=fs, mu=mu, var=var, efficient=pareto_mask(mu, var))
+
+
+def select_on_frontier(result: FrontierResult, lam: float = 0.0):
+    """Pick the frontier point minimizing mu + lam * var.
+
+    lam=0 reproduces "fastest expected completion"; large lam prioritizes
+    certainty. Only efficient points are eligible (the paper leaves the final
+    choice on the frontier to the operator; this is the scalarized default).
+    """
+    idx_all = np.nonzero(result.efficient)[0]
+    if idx_all.size == 0:  # degenerate: single point
+        idx_all = np.arange(result.mu.shape[0])
+    score = result.mu[idx_all] + lam * result.var[idx_all]
+    pick = idx_all[int(np.argmin(score))]
+    return pick, (np.asarray(result.f)[pick], result.mu[pick], result.var[pick])

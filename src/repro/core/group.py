@@ -1,0 +1,90 @@
+"""Choosing the *number* of channels (paper's group-testing extension, refs [23,24]).
+
+Splitting across more channels shrinks each share (means scale with w) but the
+max over more fluctuating channels grows with K, and every extra channel adds a
+join cost. Given a fleet of candidate channels (mu_i, sigma_i) and an optional
+per-channel enlistment overhead, select the subset to enlist.
+
+Strategy (two-stage, in the spirit of Dorfman/Mezard group testing): a cheap
+stage ranks channels by a scalar score; an exact stage evaluates nested prefix
+groups with the full partitioner and keeps the best scalarized objective.
+Exhaustive subset search is provided for small fleets as the oracle.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .partitioner import PartitionDecision, optimize_weights, predict_moments
+
+__all__ = ["GroupChoice", "select_channels", "select_channels_exhaustive"]
+
+
+@dataclass(frozen=True)
+class GroupChoice:
+    indices: np.ndarray          # selected channel ids (into the fleet arrays)
+    decision: PartitionDecision  # split over the selected channels
+    objective: float
+
+
+def _score(mus: np.ndarray, sigmas: np.ndarray) -> np.ndarray:
+    """Cheap ranking: fast channels first, variance-penalized.
+
+    1/mu is throughput; sigma/mu is the relative jitter penalty.
+    """
+    return 1.0 / mus - 0.5 * sigmas / (mus * mus)
+
+
+def select_channels(mus: Sequence[float], sigmas: Sequence[float], lam: float = 0.0,
+                    join_cost: float = 0.0, max_k: Optional[int] = None,
+                    pgd_steps: int = 120) -> GroupChoice:
+    """Greedy nested-prefix selection of how many (and which) channels to use.
+
+    join_cost models the per-channel overhead of joining outputs (the paper's
+    "pieced together" step); it makes the objective non-monotone in K so an
+    interior K* exists.
+    """
+    mus = np.asarray(mus, np.float64)
+    sigmas = np.asarray(sigmas, np.float64)
+    order = np.argsort(-_score(mus, sigmas))
+    max_k = max_k or len(mus)
+
+    best: Optional[GroupChoice] = None
+    for k in range(1, min(max_k, len(mus)) + 1):
+        idx = order[:k]
+        if k == 1:
+            dec = PartitionDecision(weights=np.ones(1), mu=float(mus[idx[0]]),
+                                    var=float(sigmas[idx[0]] ** 2), method="single")
+        else:
+            dec = optimize_weights(mus[idx], sigmas[idx], lam=lam, steps=pgd_steps)
+        obj = dec.mu + lam * dec.var + join_cost * k
+        if best is None or obj < best.objective:
+            best = GroupChoice(indices=np.asarray(idx), decision=dec, objective=float(obj))
+    assert best is not None
+    return best
+
+
+def select_channels_exhaustive(mus: Sequence[float], sigmas: Sequence[float],
+                               lam: float = 0.0, join_cost: float = 0.0,
+                               pgd_steps: int = 120) -> GroupChoice:
+    """Oracle subset search (exponential — small fleets only, used in tests)."""
+    mus = np.asarray(mus, np.float64)
+    sigmas = np.asarray(sigmas, np.float64)
+    n = len(mus)
+    best: Optional[GroupChoice] = None
+    for k in range(1, n + 1):
+        for combo in itertools.combinations(range(n), k):
+            idx = np.asarray(combo)
+            if k == 1:
+                dec = PartitionDecision(weights=np.ones(1), mu=float(mus[idx[0]]),
+                                        var=float(sigmas[idx[0]] ** 2), method="single")
+            else:
+                dec = optimize_weights(mus[idx], sigmas[idx], lam=lam, steps=pgd_steps)
+            obj = dec.mu + lam * dec.var + join_cost * k
+            if best is None or obj < best.objective:
+                best = GroupChoice(indices=idx, decision=dec, objective=float(obj))
+    assert best is not None
+    return best

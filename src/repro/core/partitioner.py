@@ -1,0 +1,147 @@
+"""Split optimizers: choose the work partition across uncertain channels.
+
+Three tiers, all pure JAX:
+
+* :func:`optimize_2ch` — dense-grid + local refinement over scalar f (exactly
+  the paper's procedure: trace the curve, pick from the frontier).
+* :func:`optimize_weights` — K-channel simplex optimization of the scalarized
+  objective ``mu(w) + lam * var(w)`` by projected gradient through the
+  survival-integral moments (beyond-paper: the integral is differentiable).
+* Baselines: :func:`equal_split` (map-reduce style, the paper's foil) and
+  :func:`inverse_mu_split` (deterministic load balancing that ignores variance).
+
+The scheduler layer (repro.sched) consumes these to assign integer workloads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .frontier import frontier_2ch, select_on_frontier
+from .maxstat import clark_max_moments_seq, max_moments_quad
+from .normal import scaled_channel_params
+
+__all__ = [
+    "PartitionDecision",
+    "equal_split",
+    "inverse_mu_split",
+    "optimize_2ch",
+    "optimize_weights",
+    "objective",
+]
+
+
+@dataclass(frozen=True)
+class PartitionDecision:
+    """The chosen split plus its predicted joint moments."""
+
+    weights: np.ndarray  # (K,) nonneg, sums to 1
+    mu: float            # predicted E[completion]
+    var: float           # predicted Var[completion]
+    method: str
+
+    def speedup_vs(self, other: "PartitionDecision") -> float:
+        return float(other.mu / max(self.mu, 1e-12))
+
+
+def equal_split(k: int) -> jnp.ndarray:
+    """Map-reduce baseline: equal shares regardless of channel statistics."""
+    return jnp.full((k,), 1.0 / k)
+
+
+def inverse_mu_split(mus) -> jnp.ndarray:
+    """Deterministic balance: w_i ∝ 1/mu_i equalizes *expected* finish times.
+
+    Optimal if sigmas were all zero; ignores uncertainty (the paper's point is
+    that this is not enough).
+    """
+    inv = 1.0 / jnp.asarray(mus)
+    return inv / jnp.sum(inv)
+
+
+def objective(w, mus, sigmas, lam: float, num_t: int = 1024):
+    """Scalarized mean-variance objective on the joint completion time."""
+    means, stds = scaled_channel_params(w, mus, sigmas)
+    mu, var = max_moments_quad(means, stds, num=num_t)
+    return mu + lam * var
+
+
+def optimize_2ch(mu_i, sigma_i, mu_j, sigma_j, lam: float = 0.0,
+                 num_f: int = 401, num_t: int = 2048) -> PartitionDecision:
+    """Paper's two-channel procedure: dense f-grid, frontier, scalarized pick."""
+    res = frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t)
+    _, (f, mu, var) = select_on_frontier(res, lam=lam)
+    w = np.asarray([f, 1.0 - f], dtype=np.float64)
+    return PartitionDecision(weights=w, mu=float(mu), var=float(var), method="grid-2ch")
+
+
+def _project_simplex(v):
+    """Euclidean projection of v onto the probability simplex (Held et al.)."""
+    k = v.shape[-1]
+    u = jnp.sort(v)[::-1]
+    css = jnp.cumsum(u) - 1.0
+    idx = jnp.arange(1, k + 1, dtype=v.dtype)
+    cond = u - css / idx > 0
+    rho = jnp.max(jnp.where(cond, jnp.arange(k), -1))
+    theta = css[rho] / (rho + 1.0)
+    return jnp.maximum(v - theta, 0.0)
+
+
+@partial(jax.jit, static_argnames=("steps", "num_t"))
+def _pgd(w0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024, lr: float = 0.05):
+    """Projected gradient descent on the simplex with cosine-decayed step."""
+    grad_fn = jax.grad(objective)
+
+    def body(i, w):
+        g = grad_fn(w, mus, sigmas, lam, num_t)
+        # normalize gradient scale so lr is unitless across problem magnitudes
+        g = g / (jnp.linalg.norm(g) + 1e-12)
+        step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / steps))
+        return _project_simplex(w - step * g)
+
+    return jax.lax.fori_loop(0, steps, body, w0)
+
+
+def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
+                     num_t: int = 1024, restarts: int = 3,
+                     key: Optional[jax.Array] = None) -> PartitionDecision:
+    """K-channel simplex optimization (beyond paper's 2-channel exposition).
+
+    Multi-start PGD: deterministic starts at equal-split and inverse-mu plus
+    random Dirichlet restarts; returns the best by scalarized objective.
+    """
+    mus = jnp.asarray(mus, jnp.float32)
+    sigmas = jnp.asarray(sigmas, jnp.float32)
+    k = mus.shape[0]
+    starts = [equal_split(k), inverse_mu_split(mus)]
+    if restarts > 0:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        dirichlet = jax.random.dirichlet(key, jnp.ones((k,)), (restarts,))
+        starts += [dirichlet[i] for i in range(restarts)]
+
+    best_w, best_obj = None, np.inf
+    for w0 in starts:
+        w = _pgd(w0, mus, sigmas, jnp.float32(lam), steps=steps, num_t=num_t)
+        val = float(objective(w, mus, sigmas, lam, num_t))
+        if val < best_obj:
+            best_obj, best_w = val, w
+
+    means, stds = scaled_channel_params(best_w, mus, sigmas)
+    mu, var = max_moments_quad(means, stds, num=2048)
+    return PartitionDecision(weights=np.asarray(best_w, np.float64),
+                             mu=float(mu), var=float(var), method="pgd-simplex")
+
+
+def predict_moments(w, mus, sigmas, exact: bool = True, num_t: int = 2048) -> Tuple[float, float]:
+    """Predicted (mu, var) for an arbitrary split; Clark fast-path optional."""
+    means, stds = scaled_channel_params(jnp.asarray(w), jnp.asarray(mus), jnp.asarray(sigmas))
+    if exact:
+        mu, var = max_moments_quad(means, stds, num=num_t)
+    else:
+        mu, var = clark_max_moments_seq(means, stds)
+    return float(mu), float(var)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import Batch, SyntheticStream
+
+__all__ = ["Batch", "SyntheticStream"]

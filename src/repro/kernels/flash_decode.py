@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: single-token attention over a long KV cache.
+
+The §Perf decode analysis (EXPERIMENTS.md) shows XLA-naive decode is
+memory-bound at <0.1% of roofline because the (B, Hkv, G, S) score chain
+materializes in HBM per layer. This kernel streams the cache through VMEM in
+blocks with running max/sum (online softmax) — HBM traffic collapses to one
+read of the cache plus O(B*H*d) — the ~70x analytic headroom claimed there.
+
+Layout: q (B, Hkv, G, D) [G = grouped query heads per kv head],
+k/v (B, Hkv, S, D), valid (S,) slot-validity mask. Grid (B, Hkv, S/block):
+the cache-block axis iterates sequentially; scratch carries the (G, D) f32
+accumulator and the (G, 1) running max / normalizer, finalized on the last
+block. D and block sizes should be 128-multiples on real TPUs (MXU/lane
+alignment); interpret mode (CPU tests) accepts any shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, sm_scale: float, num_blocks: int):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bs, D)
+    ok = valid_ref[...]                          # (bs,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(ok[None, :], s, NEG_INF)       # (G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    dead = m_new <= NEG_INF * 0.5
+    p = jnp.exp(s - jnp.where(dead, 0.0, m_new))
+    p = jnp.where(ok[None, :], p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF * 0.5, 0.0,
+                      jnp.exp(m_prev - jnp.where(dead, 0.0, m_new)))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == num_blocks - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s", "interpret"))
+def flash_decode(q, k, v, valid, *, sm_scale=None, block_s: int = 512,
+                 interpret: bool = False):
+    """q: (B, Hkv, G, D); k, v: (B, Hkv, S, D); valid: (S,) bool.
+
+    Returns (B, Hkv, G, D). S must divide block_s (callers pad the ring
+    buffer; cache lengths here are powers of two).
+    """
+    B, Hkv, G, D = q.shape
+    S = k.shape[2]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    nb = S // block_s
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_decode_kernel, sm_scale=scale, num_blocks=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ib: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, ib: (b, h, ib, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, ib: (b, h, ib, 0)),
+            pl.BlockSpec((block_s,), lambda b, h, ib: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ib: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

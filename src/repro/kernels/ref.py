@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels must match them (asserted by
+tests/test_kernels.py across shape/dtype sweeps, kernels run in
+interpret=True on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["frontier_grid_ref", "flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref", "decode_attention_ref"]
+
+
+def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
+    """(mu, var) of the joint max-completion time for each candidate split.
+
+    W: (F, K) rows on the simplex; mus/sigmas: (K,).
+    Per-candidate integration grid [0, max_i(w_i*(mu_i + z*sigma_i))], num_t pts.
+    Mirrors repro.core.maxstat.max_moments_quad but with a per-row grid so the
+    whole batch is one fused computation (this is the kernel's contract).
+    """
+    W = jnp.asarray(W, jnp.float32)
+    mus = jnp.asarray(mus, jnp.float32)
+    sigmas = jnp.asarray(sigmas, jnp.float32)
+    means = W * mus  # (F, K)
+    stds = W * sigmas
+    tmax = jnp.maximum(jnp.max(means + z * stds, axis=-1), 1e-12)  # (F,)
+    ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
+
+    zscore = (ts[:, :, None] - means[:, None, :]) / jnp.where(stds[:, None, :] > 0,
+                                                              stds[:, None, :], 1.0)
+    cdf = 0.5 * (1.0 + jax.lax.erf(zscore / jnp.sqrt(2.0).astype(jnp.float32)))
+    point = (ts[:, :, None] >= means[:, None, :]).astype(jnp.float32)
+    cdf = jnp.where(stds[:, None, :] > 0, cdf, point)
+    logF = jnp.sum(jnp.log(jnp.clip(cdf, 1e-38, 1.0)), axis=-1)  # (F, T)
+    surv = 1.0 - jnp.exp(logF)
+
+    dt = tmax / (num_t - 1)
+    mu = (jnp.sum(surv, -1) - 0.5 * (surv[:, 0] + surv[:, -1])) * dt
+    tsurv = ts * surv
+    m2 = 2.0 * (jnp.sum(tsurv, -1) - 0.5 * (tsurv[:, 0] + tsurv[:, -1])) * dt
+    var = jnp.maximum(m2 - mu * mu, 0.0)
+    return mu, var
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, sm_scale: Optional[float] = None):
+    """Reference GQA attention. q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D).
+
+    Rectangular Sq != Sk supported (cross-attention); causal then aligns the
+    last query with the last key (standard self-attn when Sq == Sk).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, D_skip=None):
+    """Naive sequential Mamba2 SSD recurrence (the semantics oracle).
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes (softplus already applied)
+    A:  (H,)           negative per-head decay rates
+    Bm: (B, S, G, N)   input projections (G groups, H % G == 0)
+    Cm: (B, S, G, N)   output projections
+    D_skip: (H,) or None — skip connection
+    Returns y: (B, S, H, P).
+
+        state_t = exp(dt_t A_h) state_{t-1} + dt_t * (B_t ⊗ x_t)
+        y_t     = C_t · state_t (+ D_h x_t)
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        dA = jnp.exp(dt_t * Af)  # (B,H)
+        state = state * dA[..., None, None] + (dt_t[..., None, None]
+                                               * x_t[..., :, None] * b_t[..., None, :])
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh.astype(jnp.float32), 1, 0), jnp.moveaxis(Ch.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    if D_skip is not None:
+        y = y + D_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid, sm_scale=None):
+    """Single-token GQA attention oracle. q: (B, Hkv, G, D); caches
+    (B, Hkv, S, D); valid: (S,) bool -> (B, Hkv, G, D)."""
+    D = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel (rows tiled into VMEM, f32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm"]
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (br, D)
+    w = w_ref[...].astype(jnp.float32)  # (1, D)
+    rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = (x * rms * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256, interpret: bool = False):
+    """x: (..., D) normalized over the last axis; w: (D,) scale."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, D)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, D), x2.dtype)], 0)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((rows + pad) // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                  pl.BlockSpec((1, D), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, D), x.dtype),
+        interpret=interpret,
+    )(x2, w[None, :])
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we jit the appropriate step with explicit in_shardings,
+``.lower().compile()`` against the production mesh (16x16 single-pod /
+2x16x16 multi-pod), print memory_analysis() and cost_analysis(), run the
+static roofline analyzer over the compiled HLO, and persist everything to
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..models import build_model
+from ..models.transformer import ShardCtx
+from ..optim.adamw import cosine_schedule
+from ..train.step import init_state, make_train_step
+from .mesh import batch_axes, make_production_mesh
+from .roofline import analyze_hlo, count_params, model_flops, roofline_terms
+from .shardings import batch_specs, cache_specs, named, param_specs, state_specs
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _div_ok(n, mesh, axes):
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    return n % prod == 0
+
+
+def build_partitioned_cell(arch: str, mesh, *, max_micro: int = 8,
+                           compress: bool = False, seq_parallel: bool = False):
+    """THE PAPER CELL: lower the uncertainty-partitioned train step (per-pod
+    variable microstep counts + cross-pod join) on the multi-pod mesh."""
+    from ..train.step import make_partitioned_train_step
+
+    assert "pod" in mesh.axis_names, "partitioned step needs the pod axis"
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    npods = mesh.shape["pod"]
+    mb = shape.global_batch // max_micro          # per-microstep global batch
+    ctx = ShardCtx(mesh=mesh, batch_axes=("data",),
+                   seq_axis="model" if seq_parallel else None)
+    model = build_model(cfg, ctx)
+    lr = cosine_schedule(3e-4, 100, 10_000)
+    state_sds = jax.eval_shape(lambda k: init_state(model, k),
+                               jax.random.PRNGKey(0))
+    sspec = state_specs(state_sds, mesh, cfg)
+    step = make_partitioned_train_step(model, cfg, mesh, lr,
+                                       max_micro=max_micro,
+                                       compress_pod_reduce=compress,
+                                       grad_specs=sspec.params)
+    dspec = P(None, ("pod", "data"), None)
+    tokens = jax.ShapeDtypeStruct((max_micro, mb, shape.seq_len), jnp.int32)
+    kspec = jax.ShapeDtypeStruct((npods,), jnp.int32)
+    args = (state_sds, tokens, tokens, kspec)
+    shardings = (named(mesh, sspec), NamedSharding(mesh, dspec),
+                 NamedSharding(mesh, dspec), NamedSharding(mesh, P("pod")))
+    meta = {"arch": arch, "shape": "train_4k(partitioned)", "kind": "train",
+            "max_micro": max_micro, "compress_pod_reduce": compress,
+            "mesh": dict(mesh.shape)}
+    return step, args, shardings, meta
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, accum: int = 8,
+               seq_parallel: bool = False, remat: bool = True,
+               attention_impl: str = "xla", capacity_factor: float = None,
+               remat_policy: str = "full", accum_dtype: str = "float32"):
+    """Returns (fn, example_args, in_shardings, meta) ready to lower."""
+    cfg = get_config(arch).replace(remat=remat, attention_impl=attention_impl,
+                                   remat_policy=remat_policy)
+    if capacity_factor is not None:
+        cfg = cfg.replace(capacity_factor=capacity_factor)
+    shape = SHAPES[shape_name]
+    ba = batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch_shardable = _div_ok(B, mesh, ba)
+    bspec_axes = ba if batch_shardable else ()
+
+    # long-context attn decode: shard the cache sequence instead of batch.
+    # Intra-pod axis only: two-axis manual LSE-combine trips an XLA 0.8.2
+    # partitioner CHECK, and replicating the cache across pods is the sane
+    # production layout anyway (decode requests are pod-local).
+    seq_axes = None
+    if shape.kind == "decode" and not batch_shardable and cfg.family in ("hybrid",):
+        seq_axes = ("data",)
+
+    extra = tuple(a for a in mesh.axis_names
+                  if a not in ("model", "data") and a not in bspec_axes)
+    ctx = ShardCtx(mesh=mesh, batch_axes=bspec_axes,
+                   seq_axis="model" if seq_parallel else None,
+                   decode_seq_axes=seq_axes, manual_extra=extra)
+    model = build_model(cfg, ctx)
+    bspec = P(bspec_axes or None, None)
+    espec = P(bspec_axes or None, None, None)
+    adt = jnp.bfloat16
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "global_batch": B, "seq_len": S, "mesh": dict(mesh.shape),
+            "batch_shardable": batch_shardable,
+            "cache_seq_axes": list(seq_axes) if seq_axes else None}
+
+    if shape.kind == "train":
+        accum = min(accum, B)
+        lr = cosine_schedule(3e-4, 100, 10_000)
+        step = make_train_step(model, cfg, lr, accum=accum,
+                               accum_dtype=getattr(jnp, accum_dtype))
+        meta["accum"] = accum
+        meta["accum_dtype"] = accum_dtype
+        state_sds = jax.eval_shape(lambda k: init_state(model, k),
+                                   jax.random.PRNGKey(0))
+        sspec = state_specs(state_sds, mesh, cfg)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        args = [state_sds, tokens, labels]
+        shardings = [named(mesh, sspec), NamedSharding(mesh, bspec),
+                     NamedSharding(mesh, bspec)]
+        if cfg.num_patches or cfg.is_encoder_decoder:
+            n_extra = cfg.num_patches or cfg.encoder_seq
+            if cfg.num_patches:
+                tokens = jax.ShapeDtypeStruct((B, S - cfg.num_patches), jnp.int32)
+                args[1] = tokens
+                args[2] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            args.append(jax.ShapeDtypeStruct((B, n_extra, cfg.d_model), adt))
+            shardings.append(NamedSharding(mesh, espec))
+        return step, tuple(args), tuple(shardings), meta
+
+    params_sds = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    pspec = param_specs(params_sds, mesh, cfg)
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            fn = lambda p, t, f: model.prefill(p, t, f)
+            args = (params_sds, jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), adt))
+            shardings = (named(mesh, pspec), NamedSharding(mesh, bspec),
+                         NamedSharding(mesh, espec))
+        elif cfg.num_patches:
+            fn = lambda p, t, e: model.prefill(p, t, e)
+            args = (params_sds,
+                    jax.ShapeDtypeStruct((B, S - cfg.num_patches), jnp.int32),
+                    jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), adt))
+            shardings = (named(mesh, pspec), NamedSharding(mesh, bspec),
+                         NamedSharding(mesh, espec))
+        else:
+            fn = lambda p, t: model.prefill(p, t)
+            args = (params_sds, jax.ShapeDtypeStruct((B, S), jnp.int32))
+            shardings = (named(mesh, pspec), NamedSharding(mesh, bspec))
+        return fn, args, shardings, meta
+
+    # ---- decode: one token against a seq_len cache
+    cache_len = min(S, cfg.window) if cfg.window else S
+    meta["cache_len"] = cache_len
+    if cfg.is_encoder_decoder:
+        cache_sds = jax.eval_shape(
+            lambda: model.cache_init(B, cache_len, cfg.encoder_seq))
+    else:
+        cache_sds = jax.eval_shape(lambda: model.cache_init(B, cache_len))
+    cspec = cache_specs(cache_sds, mesh, cfg, seq_axes=seq_axes)
+    if not batch_shardable:  # e.g. long_500k batch=1: replicate batch dims
+        pass  # cache_specs already consulted seq_axes; batch axes dropped below
+    fn = model.decode_step
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    args = (params_sds, cache_sds, tok)
+    shardings = (named(mesh, pspec), named(mesh, cspec),
+                 NamedSharding(mesh, bspec))
+    return fn, args, shardings, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str = DEFAULT_OUT,
+             partitioned: bool = False, tag: str = "", **opts) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name.replace("(partitioned)", "")] if not partitioned \
+        else SHAPES["train_4k"]
+    mesh_tag = {"single": "pod16x16", "multi": "pod2x16x16"}[mesh_kind]
+    record = {"arch": arch,
+              "shape": shape_name if not partitioned else "train_4k(partitioned)",
+              "mesh": mesh_tag}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return _dump(record, out_dir)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    try:
+        t0 = time.time()
+        if partitioned:
+            fn, args, shardings, meta = build_partitioned_cell(
+                arch, mesh, compress=opts.get("compress", False),
+                seq_parallel=opts.get("seq_parallel", False))
+        else:
+            opts.pop("compress", None)
+            if opts.get("remat_policy") is None:
+                opts.pop("remat_policy", None)
+            if opts.get("accum_dtype") is None:
+                opts.pop("accum_dtype", None)
+            fn, args, shardings, meta = build_cell(arch, shape_name, mesh, **opts)
+        meta["tag"] = tag
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        stats = analyze_hlo(compiled.as_text())
+        terms = roofline_terms(stats, chips)
+        total_p, active_p = count_params(cfg)
+        mf = model_flops(cfg, shape)
+        hlo_flops_global = stats.flops * chips
+        record.update(
+            status="ok", meta=meta,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory_analysis={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost_analysis={k: cost.get(k) for k in ("flops", "bytes accessed")},
+            hlo_stats=stats.to_dict(), roofline=terms,
+            params={"total": total_p, "active": active_p},
+            model_flops=mf,
+            useful_flops_ratio=(mf / hlo_flops_global) if hlo_flops_global else None,
+        )
+        print(f"[OK] {arch} {shape_name} {mesh_tag}: compile {t_compile:.0f}s "
+              f"dominant={terms['dominant']} "
+              f"bound={terms['step_lower_bound_s']*1e3:.1f}ms "
+              f"frac={terms['roofline_fraction']:.3f}")
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {arch} {shape_name} {mesh_tag}: {e}")
+    return _dump(record, out_dir)
+
+
+def _dump(record: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = record.get("meta", {}).get("tag", "") if isinstance(record.get("meta"), dict) else ""
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(
+        out_dir, f"{record['arch']}__{record['shape']}__{record['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--accum", type=int, default=8)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--partitioned", action="store_true",
+                    help="lower the paper's per-pod partitioned train step")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-free cross-pod gradient reduction")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--remat-policy", default="full", choices=("full", "dots"))
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--tag", default="", help="suffix for the output filename")
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = ([(a, s) for a in ARCHS for s in SHAPES]
+             if args.all else [(args.arch, args.shape or "train_4k")])
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, out_dir=args.out, accum=args.accum,
+                           seq_parallel=args.seq_parallel,
+                           remat=not args.no_remat,
+                           partitioned=args.partitioned,
+                           compress=args.compress,
+                           capacity_factor=args.capacity_factor,
+                           remat_policy=args.remat_policy,
+                           accum_dtype=args.accum_dtype,
+                           tag=args.tag)
+            failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

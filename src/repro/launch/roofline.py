@@ -1,0 +1,437 @@
+"""Static roofline analysis of compiled (post-SPMD) HLO.
+
+Why not just ``compiled.cost_analysis()``: XLA's cost analysis counts each
+while-loop *body once*, but our layer stacks run under lax.scan (and train
+steps under grad-accumulation scans), so FLOPs/bytes/collectives would be
+undercounted by the trip count (~100x). This module parses the HLO text,
+builds the computation call graph (entry -> while bodies -> fusions), derives
+per-computation execution multipliers from loop trip counts, and accumulates:
+
+  * FLOPs           — 2 * prod(out dims) * prod(contracting dims) per dot,
+                      recursing into fusion computations.
+  * HBM bytes       — materialized-buffer traffic: per top-level op, operand
+                      bytes + output bytes (fusion internals elided, matching
+                      what fusion actually saves).
+  * Collective wire bytes per chip — ring model per op type from output
+    shape and replica group size g:
+        all-reduce      2 (g-1)/g * size
+        all-gather        (g-1)/g * size        (size = gathered output)
+        reduce-scatter    (g-1)/g * size_in = (g-1) * size_out
+        all-to-all        (g-1)/g * size
+        collective-permute          size
+    Groups whose device ids span >= 256 cross pods (DCN), tracked separately.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (one link direction assumed — conservative), 25 GB/s DCN.
+The compiled module is the per-device program, so all three terms are
+per-chip seconds directly comparable as roofline components.
+
+Known approximations (documented in EXPERIMENTS.md):
+  * while trip count = max integer literal in the loop condition computation
+    (exact for lax.scan; dynamic while loops fall back to 1).
+  * only ``dot`` FLOPs are counted (elementwise/reduce FLOPs are noise next
+    to matmuls at these shapes).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloStats", "roofline_terms", "model_flops", "HW"]
+
+HW = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link (1 link assumed)
+    "dcn_bw": 25e9,            # bytes/s per chip across pods
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Op:
+    name: str
+    defn: str           # full rhs text
+    opcode: str
+    out_bytes: int
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: Dict[str, _Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", stripped)
+        if header and not stripped.startswith("//") and "=" not in stripped.split("(")[0]:
+            cur = _Computation(name=header.group(1))
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = _OPCODE_RE.match(rhs)
+        opcode = opm.group(1) if opm else ""
+        if rhs.startswith("("):  # tuple output: shapes up to the closing paren
+            out_text = rhs[:rhs.index(")") + 1]
+        else:
+            out_text = rhs.split("(")[0]
+        out_bytes = _shape_bytes(out_text)
+        cur.ops[name] = _Op(name=name, defn=rhs, opcode=opcode, out_bytes=out_bytes)
+        cur.order.append(name)
+    return comps
+
+
+def _group_size(defn: str) -> Tuple[int, bool]:
+    """(group size, crosses_pod) from replica_groups annotation.
+
+    A group crosses pods iff its member ids span >= 256 (pods are the
+    slowest-varying 256-id blocks of the 512-device mesh). Iota-form groups
+    ([G,S]<=[dims]T(perm)) are decoded exactly with numpy.
+    """
+    import numpy as _np
+
+    m = _GROUPS_IOTA_RE.search(defn)
+    if m:
+        num_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(5):
+            perm = [int(x) for x in m.group(5).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(num_groups, group_size)
+        spans = groups.max(axis=1) - groups.min(axis=1)
+        return group_size, bool((spans >= 256).any())
+    m = _GROUPS_LIST_RE.search(defn)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        crosses = (max(ids) - min(ids)) >= 256
+        return max(len(ids), 1), crosses
+    return 1, False
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_dims = _first_shape_dims(op.defn) or []
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    mlhs = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.defn)
+    operands = _OPERANDS_RE.search(op.defn)
+    contract = 1
+    if mlhs and operands:
+        first = operands.group(1).split(",")[0].strip().lstrip("%")
+        lhs = comp.ops.get(first)
+        lhs_dims = _first_shape_dims(lhs.defn) if lhs else None
+        if lhs_dims:
+            for idx in mlhs.group(1).split(","):
+                if idx:
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_type: Dict[str, float] = field(default_factory=dict)
+    notes: List[str] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("flops", "hbm_bytes", "ici_bytes", "dcn_bytes",
+                 "collective_counts", "collective_bytes_by_type", "notes")}
+
+
+def _trip_count(cond: _Computation) -> int:
+    best = 1
+    for op in cond.ops.values():
+        for c in _CONST_RE.findall(op.defn):
+            best = max(best, int(c))
+    return best
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _parse_computations(hlo)
+    entry = comps.get("__entry__")
+    stats = HloStats()
+    if entry is None:
+        stats.notes.append("no ENTRY computation found")
+        return stats
+
+    def walk(comp: _Computation, mult: float, as_fusion: bool, seen: tuple):
+        if comp.name in seen:
+            return
+        seen = seen + (comp.name,)
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.opcode == "dot":
+                stats.flops += mult * _dot_flops(op, comp)
+            if any(op.opcode.startswith(c) for c in _COLLECTIVES):
+                base = op.opcode.split(".")[0]
+                for c in _COLLECTIVES:
+                    if op.opcode.startswith(c):
+                        base = c
+                        break
+                if op.opcode.endswith("-done"):
+                    continue  # counted at -start
+                g, crosses = _group_size(op.defn)
+                size = op.out_bytes
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / max(g, 1) * size
+                elif base == "all-gather":
+                    wire = (g - 1) / max(g, 1) * size
+                elif base == "reduce-scatter":
+                    wire = (g - 1) * size
+                elif base == "all-to-all":
+                    wire = (g - 1) / max(g, 1) * size
+                else:  # collective-permute
+                    wire = size
+                stats.collective_counts[base] = (
+                    stats.collective_counts.get(base, 0) + 1)
+                stats.collective_bytes_by_type[base] = (
+                    stats.collective_bytes_by_type.get(base, 0.0) + mult * wire)
+                if crosses:
+                    stats.dcn_bytes += mult * wire
+                else:
+                    stats.ici_bytes += mult * wire
+            if op.opcode == "while":
+                body = cond = None
+                mcalls = re.search(r"body=%([\w.\-]+)", op.defn)
+                mcond = re.search(r"condition=%([\w.\-]+)", op.defn)
+                if mcalls:
+                    body = comps.get(mcalls.group(1))
+                if mcond:
+                    cond = comps.get(mcond.group(1))
+                trips = _trip_count(cond) if cond else 1
+                if body:
+                    walk(body, mult * trips, False, seen)
+                if cond:
+                    walk(cond, mult * trips, False, seen)
+            elif op.opcode in ("fusion", "call", "conditional", "map"):
+                for callee in _CALL_RE.findall(op.defn):
+                    sub = comps.get(callee)
+                    if sub and not sub.name.startswith("region"):
+                        # fusion internals: FLOPs count, memory does not
+                        walk_fused(sub, mult, seen)
+
+    def walk_fused(comp: _Computation, mult: float, seen: tuple):
+        if comp.name in seen:
+            return
+        seen = seen + (comp.name,)
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.opcode == "dot":
+                stats.flops += mult * _dot_flops(op, comp)
+            for callee in _CALL_RE.findall(op.defn):
+                sub = comps.get(callee)
+                if sub:
+                    walk_fused(sub, mult, seen)
+
+    def mem_walk(comp: _Computation, mult: float, seen: tuple):
+        if comp.name in seen:
+            return
+        seen = seen + (comp.name,)
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "while", "copy", "copy-start",
+                             "copy-done", "partition-id", "replica-id"):
+                # copies are CPU-backend aliasing artifacts (in-place on TPU)
+                pass
+            elif op.opcode in ("dynamic-update-slice", "dynamic-slice",
+                               "gather", "scatter"):
+                # in-place / indexed on TPU: traffic ~ the touched slice, not
+                # the whole buffer. For DUS the update operand is the slice.
+                operands = _OPERANDS_RE.search(op.defn)
+                touched = op.out_bytes
+                if op.opcode == "dynamic-update-slice" and operands:
+                    parts = [o.strip().lstrip("%")
+                             for o in operands.group(1).split(",")]
+                    if len(parts) >= 2 and parts[1] in comp.ops:
+                        touched = comp.ops[parts[1]].out_bytes
+                stats.hbm_bytes += mult * 2 * touched
+            else:
+                # operand bytes: sum of producer output bytes.
+                operands = _OPERANDS_RE.search(op.defn)
+                in_bytes = 0
+                if operands:
+                    for o in operands.group(1).split(","):
+                        o = o.strip().lstrip("%")
+                        prod = comp.ops.get(o)
+                        if prod is not None:
+                            in_bytes += prod.out_bytes
+                if op.opcode == "fusion":
+                    # TPU-fusion traffic model: a fusion streams ~O(out) data;
+                    # operands that are whole loop-carried stacks (sliced
+                    # inside) or elementwise upcast chains do not re-read
+                    # their full size. Cap fused in-traffic at 2x out.
+                    in_bytes = min(in_bytes, 2 * op.out_bytes)
+                stats.hbm_bytes += mult * (op.out_bytes + in_bytes)
+            if op.opcode == "while":
+                mb = re.search(r"body=%([\w.\-]+)", op.defn)
+                mc = re.search(r"condition=%([\w.\-]+)", op.defn)
+                trips = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb and mb.group(1) in comps:
+                    mem_walk(comps[mb.group(1)], mult * trips, seen)
+
+    walk(entry, 1.0, False, ())
+    mem_walk(entry, 1.0, ())
+    return stats
+
+
+# ----------------------------------------------------------------- terms
+def roofline_terms(stats: HloStats, chips: int) -> dict:
+    compute_s = stats.flops / HW["peak_flops"]
+    memory_s = stats.hbm_bytes / HW["hbm_bw"]
+    ici_s = stats.ici_bytes / HW["ici_bw"]
+    dcn_s = stats.dcn_bytes / HW["dcn_bw"]
+    coll_s = ici_s + dcn_s
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s, "ici_s": ici_s, "dcn_s": dcn_s}
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["dominant"] = dom
+    terms["step_lower_bound_s"] = bound
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    terms["chips"] = chips
+    return terms
+
+
+# ----------------------------------------------------------------- model flops
+def count_params(cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    d = cfg.d_model
+    emb = cfg.padded_vocab * d * 2
+    per_attn = (d * cfg.num_heads * cfg.head_dim
+                + 2 * d * cfg.num_kv_heads * cfg.head_dim
+                + cfg.num_heads * cfg.head_dim * d)
+    if cfg.kv_lora_rank:
+        nope, rd, vd, lora = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                              cfg.v_head_dim, cfg.kv_lora_rank)
+        per_attn = (d * cfg.num_heads * (nope + rd) + d * (lora + rd)
+                    + lora * cfg.num_heads * (nope + vd)
+                    + cfg.num_heads * vd * d)
+    per_mamba = (3 * d * cfg.ssm_inner + d * 2 * cfg.ssm_groups * cfg.ssm_state
+                 + d * cfg.ssm_heads) if cfg.ssm_state else 0.0
+    mlp_mult = 3 if cfg.mlp_act == "swiglu" else 2
+    n_attn = n_mamba = n_moe = n_dense = 0
+    for _ in range(cfg.num_repeats):
+        for s in cfg.pattern:
+            n_attn += s.mixer in ("attn", "mla")
+            n_mamba += s.mixer == "mamba"
+            n_moe += s.mlp == "moe"
+            n_dense += s.mlp == "dense"
+    n_dense += 1 if cfg.first_layer_dense else 0
+    n_attn += 1 if cfg.first_layer_dense else 0
+    moe_ff = cfg.moe_d_ff or cfg.d_ff
+    dense_mlp = n_dense * mlp_mult * d * cfg.d_ff
+    moe_total = n_moe * (cfg.num_experts + cfg.num_shared_experts) * 3 * d * moe_ff
+    moe_active = n_moe * (cfg.top_k + cfg.num_shared_experts) * 3 * d * moe_ff
+    total = emb + n_attn * per_attn + n_mamba * per_mamba + dense_mlp + moe_total
+    active = emb + n_attn * per_attn + n_mamba * per_mamba + dense_mlp + moe_active
+    if cfg.is_encoder_decoder:
+        enc = cfg.num_encoder_layers * (per_attn + mlp_mult * d * cfg.d_ff)
+        cross = cfg.num_layers * per_attn
+        total += enc + cross
+        active += enc + cross
+    return float(total), float(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs per step.
+
+    Parameter term: 6*N_active*D (train) / 2*N_active*D (prefill) /
+    2*N_active*B (decode). Mixer state term (not captured by N): attention
+    score+value FLOPs (window/causal-aware), SSD chunk+state FLOPs — these
+    are real useful work that grows with context, so they belong in the
+    "useful" numerator when judging the compiled HLO.
+    """
+    _, active = count_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    D = B * S
+    n_attn = n_mamba = 0
+    for _ in range(cfg.num_repeats):
+        for sp in cfg.pattern:
+            n_attn += sp.mixer in ("attn", "mla")
+            n_mamba += sp.mixer == "mamba"
+    n_attn += 1 if cfg.first_layer_dense else 0
+    hqhd = cfg.num_heads * (cfg.head_dim if not cfg.kv_lora_rank
+                            else cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    kv_span_full = min(S, cfg.window) if cfg.window else S
+
+    if shape.kind == "decode":
+        span = kv_span_full
+        attn = n_attn * 4.0 * B * span * hqhd
+        ssd = n_mamba * B * (4.0 * cfg.ssm_inner * cfg.ssm_state
+                             + 2.0 * cfg.ssm_inner * cfg.ssm_state)
+        param_term = 2.0 * active * B
+        return param_term + attn + ssd
+
+    # causal full attention averages S/2 keys per query; SWA averages window
+    avg_span = kv_span_full / (1.0 if cfg.window else 2.0)
+    attn_fwd = n_attn * 4.0 * D * avg_span * hqhd
+    # SSD per token (per layer): chunk matmuls 2L(N+P) + state in/out 4PN,
+    # times H heads => d_inner * (2L(N/P + 1) + 4N)
+    L, N, Pd = cfg.ssd_chunk, cfg.ssm_state, cfg.ssm_head_dim
+    ssd_fwd = (n_mamba * D * cfg.ssm_inner * (2.0 * L * (N / Pd + 1) + 4.0 * N)
+               if cfg.ssm_state else 0.0)
+    if cfg.is_encoder_decoder:
+        F = cfg.encoder_seq
+        attn_fwd += cfg.num_encoder_layers * 4.0 * B * F * F * hqhd  # enc self
+        attn_fwd += cfg.num_layers * 4.0 * D * F * hqhd             # cross
+    if shape.kind == "train":
+        return 6.0 * active * D + 3.0 * (attn_fwd + ssd_fwd)
+    return 2.0 * active * D + attn_fwd + ssd_fwd

@@ -1,0 +1,174 @@
+"""PartitionSpec rules: parameter trees, optimizer state, KV caches, batches.
+
+Strategy (TPU v5e, DESIGN.md §4):
+  * TP over "model": attention heads, FFN hidden, vocab, MoE experts (EP),
+    SSD heads. Output projections are row-sharded (psum joins).
+  * FSDP over "data": every weight matrix additionally sharded on a non-TP
+    dim; optimizer moments follow params.
+  * "pod" axis: pure DP (weights replicated) — it is the paper's channel
+    axis, joined once per step by the gradient reduction.
+  * Any proposed axis that does not divide the dim falls back to replication
+    (e.g. 15 or 20 attention heads vs tp=16 -> attention replicated, noted
+    per-arch in the roofline).
+
+Rules are name-based over the param tree (leaf names are part of the module
+contract); stacked scan layers are detected by rank and get a leading None.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .mesh import batch_axes
+
+__all__ = ["param_specs", "state_specs", "cache_specs", "batch_specs",
+           "named", "spec_tree_to_shardings"]
+
+
+def _div(n: int, mesh, axis: Optional[str]):
+    """axis if it exists in mesh and divides n, else None (replicate)."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if n % mesh.shape[axis] == 0 else None
+
+
+def _leaf_spec(path: str, shape, mesh, cfg: ModelConfig, tp: str, fsdp: str):
+    """Base PartitionSpec for one named leaf (no stacking dim)."""
+    nd = len(shape)
+    name = path.split("/")[-1]
+
+    def col2(rows, cols):  # (rows sharded fsdp, cols sharded tp)
+        return P(_div(rows, mesh, fsdp), _div(cols, mesh, tp))
+
+    def row2(rows, cols):  # (rows sharded tp, cols sharded fsdp)
+        return P(_div(rows, mesh, tp), _div(cols, mesh, fsdp))
+
+    if name == "embedding":      # (V, d): one-hot contraction -> shard vocab
+        return P(_div(shape[0], mesh, tp), _div(shape[1], mesh, fsdp))
+    if name == "head":           # (d, V)
+        return col2(*shape[-2:])
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "shared_up", "shared_gate",
+                "w_in_x", "w_in_z", "w_dt", "w_uk", "w_uv"):
+        return col2(*shape[-2:])
+    if name in ("wo", "w_down", "shared_down", "w_out"):
+        return row2(*shape[-2:])
+    if name in ("w_dkv", "w_bc"):   # small, column dims must stay whole
+        return P(_div(shape[-2], mesh, fsdp), None)
+    if name in ("moe_up", "moe_gate"):   # (E, d, ff): EP on E, FSDP on d
+        return P(_div(shape[0], mesh, tp), _div(shape[1], mesh, fsdp), None)
+    if name == "moe_down":               # (E, ff, d): FSDP on d
+        return P(_div(shape[0], mesh, tp), None, _div(shape[2], mesh, fsdp))
+    if name == "router":
+        return P(None, None)
+    if name == "conv":                   # (width, d_inner)
+        return P(None, _div(shape[1], mesh, tp))
+    if name in ("A_log", "D", "dt_bias"):
+        return P(_div(shape[0], mesh, tp))
+    if name == "ssm_norm":
+        return P(_div(shape[0], mesh, tp))
+    if nd == 1:                          # other norm scales
+        return P(None)
+    return P(*([None] * nd))             # conservative default
+
+
+def param_specs(params, mesh, cfg: ModelConfig, *, tp: str = "model",
+                fsdp: str = "data"):
+    """PartitionSpec tree mirroring a param tree."""
+    def one(path_entries, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_entries)
+        name = path.split("/")[-1]
+        base_rank = {"embedding": 2, "head": 2, "router": 2, "conv": 2,
+                     "A_log": 1, "D": 1, "dt_bias": 1, "ssm_norm": 1,
+                     "moe_up": 3, "moe_gate": 3, "moe_down": 3}.get(name)
+        if base_rank is None:
+            base_rank = 1 if (name.startswith("ln") or "norm" in name) else 2
+        stacked = leaf.ndim == base_rank + 1
+        base_shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _leaf_spec(path, base_shape, mesh, cfg, tp, fsdp)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def state_specs(state, mesh, cfg: ModelConfig):
+    """Specs for a TrainState: opt moments follow params; step is replicated."""
+    pspec = param_specs(state.params, mesh, cfg)
+    return type(state)(
+        params=pspec,
+        opt=type(state.opt)(step=P(),
+                            m=param_specs(state.opt.m, mesh, cfg),
+                            v=param_specs(state.opt.v, mesh, cfg)))
+
+
+def cache_specs(cache, mesh, cfg: ModelConfig, *, seq_axes=None,
+                tp: str = "model"):
+    """Specs for a decode cache tree.
+
+    seq_axes: shard cache *sequence* dim over these axes (long-context decode,
+    batch too small to shard) — otherwise the batch dim is sharded.
+    """
+    ba_all = batch_axes(mesh)
+
+    def _ba_for(b: int):
+        prod = 1
+        for a in ba_all:
+            prod *= mesh.shape[a]
+        return (ba_all or None) if (ba_all and b % prod == 0) else None
+
+    def one(path_entries, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_entries)
+        name = path.split("/")[-1]
+        if name in ("slot_pos",):
+            return P(seq_axes) if seq_axes else P(None)
+        if name == "pos":
+            return P()
+        stacked = (path.startswith("blocks")
+                   or (name in ("k", "v", "xk", "xv") and leaf.ndim == 5)
+                   or (name in ("c", "rope") and leaf.ndim == 4))
+        lead = (None,) if stacked else ()
+        if name in ("k", "v", "xk", "xv"):   # (R?, B, Hkv, S, hd)
+            b = leaf.shape[1 if stacked else 0]
+            hkv = leaf.shape[2 if stacked else 1]
+            if seq_axes:
+                return P(*lead, None, _div(hkv, mesh, tp), seq_axes, None)
+            return P(*lead, _ba_for(b), _div(hkv, mesh, tp), None, None)
+        if name in ("c", "rope"):            # (R?, B, S, dim) — MLA latent
+            b = leaf.shape[1 if stacked else 0]
+            if seq_axes:
+                return P(*lead, None, seq_axes, None)
+            return P(*lead, _ba_for(b), None, None)
+        if name == "ssm":                    # (R?, B, H, P, N)
+            b = leaf.shape[2 - 1 if stacked else 0]
+            h = leaf.shape[2 if stacked else 1]
+            return P(*lead, _ba_for(b) if not seq_axes else None,
+                     _div(h, mesh, tp), None, None)
+        if name == "conv":                   # (R?, B, w-1, d_inner)
+            b = leaf.shape[1 if stacked else 0]
+            di = leaf.shape[-1]
+            return P(*lead, _ba_for(b) if not seq_axes else None, None,
+                     _div(di, mesh, tp))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_specs(mesh, *, with_extra: bool = False, extra_rank: int = 3):
+    ba = batch_axes(mesh) or None
+    toks = P(ba, None)
+    if with_extra:
+        return toks, P(ba, *([None] * (extra_rank - 1)))
+    return toks
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,50 @@
+"""Training CLI: local smoke runs on CPU, production meshes on real pods.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --tiny \
+        --steps 50 --batch 8 --seq 128 [--partitioned --pods 2]
+"""
+import argparse
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..models import build_model
+from ..models.transformer import ShardCtx
+from ..train import Trainer, TrainerConfig
+from .mesh import batch_axes, make_local_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="smollm-360m")
+    ap.add_argument("--tiny", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--partitioned", action="store_true",
+                    help="paper-partitioned per-pod microbatching")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--policy", default="frontier",
+                    choices=("frontier", "equal", "inverse_mu"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.tiny()
+    mesh = None
+    ctx = None
+    if args.partitioned:
+        mesh = make_local_mesh(("pod", "data", "model"))
+        ctx = ShardCtx(mesh=mesh, batch_axes=("data",))
+    model = build_model(cfg, ctx)
+    tcfg = TrainerConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                         lr=args.lr, ckpt_dir=args.ckpt_dir,
+                         partitioned=args.partitioned, num_pods=args.pods,
+                         policy=args.policy)
+    Trainer(model, cfg, tcfg, mesh=mesh).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Model zoo: config-driven families sharing one substrate.
+
+``build_model(cfg, ctx)`` returns the right wrapper:
+  * LM      — decoder-only (dense / moe / mla / ssm / hybrid)
+  * EncDec  — whisper-style encoder-decoder (audio)
+  * VLM     — patch-embedding stub + LM backbone (vlm)
+All expose init / apply / prefill / decode_step / cache_init.
+"""
+from ..configs.base import ModelConfig
+from .transformer import LM, ShardCtx
+from .vlm import VLM
+from .whisper import EncDec
+
+__all__ = ["LM", "EncDec", "VLM", "ShardCtx", "build_model"]
+
+
+def build_model(cfg: ModelConfig, ctx: ShardCtx = None):
+    if cfg.is_encoder_decoder:
+        return EncDec(cfg, ctx)
+    if cfg.num_patches:
+        return VLM(cfg, ctx)
+    return LM(cfg, ctx)

@@ -1,0 +1,172 @@
+"""GQA attention: init, full-sequence apply (train/prefill), decode step.
+
+Full-sequence attention dispatches through kernels.ops (XLA ref path on CPU,
+Pallas flash kernel on TPU). The decode step is a matvec per head; when the
+KV cache's sequence axis is sharded (long-context decode) the step runs a
+shard_map flash-decode: each shard computes partial attention over its cache
+chunk and the shards combine with a log-sum-exp psum — no 500k all-gather.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import dense_init, dtype_of, rms_norm, rmsnorm_init, rope
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "sharded_lse_decode"]
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dt),
+        "wk": dense_init(ks[1], (d, hkv * hd), dt),
+        "wv": dense_init(ks[2], (d, hkv * hd), dt),
+        "wo": dense_init(ks[3], (hq * hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, hq, hd)
+    k = (x @ p["wk"]).reshape(B, S, hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, *, causal: bool = True,
+               kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+               return_kv: bool = False):
+    """Full-sequence attention. x: (B, S, d). kv_override supplies cross-attn
+    K/V (already headed, (B, Skv, Hkv, hd)); return_kv exposes K/V for caching."""
+    B, S, _ = x.shape
+    if kv_override is None:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+    else:
+        hq, hd = cfg.num_heads, cfg.head_dim
+        q = (x @ p["wq"]).reshape(B, S, hq, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k, v = kv_override
+    # kernels expect (B, H, S, D)
+    out = ops.attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=cfg.window, impl=cfg.attention_impl,
+    ).swapaxes(1, 2).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    y = out @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(p, x, cfg: ModelConfig, k_cache, v_cache, slot_pos, pos, *,
+                seq_shard_axes: Optional[Tuple[str, ...]] = None,
+                mesh=None, manual_extra: Tuple[str, ...] = ()):
+    """One-token decode. x: (B, 1, d); caches: (B, Hkv, S, hd) with the new
+    token already inserted; slot_pos: (S,) absolute position per slot (< 0 =
+    empty); pos: scalar current position. Returns (B, 1, d)."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, hq, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = rope(q, jnp.full((B, 1), pos), cfg.rope_theta)[:, 0]  # (B, Hq, hd)
+
+    valid = slot_pos >= 0
+    valid &= slot_pos <= pos
+    if cfg.window is not None:
+        valid &= slot_pos > pos - cfg.window
+
+    if seq_shard_axes and mesh is not None:
+        y = sharded_lse_decode(q, k_cache, v_cache, valid, hq // hkv,
+                               axes=seq_shard_axes, mesh=mesh,
+                               extra_manual=manual_extra)
+    elif cfg.attention_impl != "xla":
+        # Pallas flash-decode: streams the cache through VMEM once instead of
+        # materializing the score chain (EXPERIMENTS §Perf D2)
+        y = ops.decode_attention(
+            q.reshape(B, hkv, hq // hkv, hd), k_cache, v_cache, valid,
+            impl=cfg.attention_impl).reshape(B, hq, hd)
+    else:
+        y = _local_decode(q, k_cache, v_cache, valid, hq // hkv)
+    return (y.reshape(B, 1, hq * hd) @ p["wo"])
+
+
+def _local_decode(q, k_cache, v_cache, valid, group):
+    """q: (B,Hq,hd); caches: (B,Hkv,S,hd); valid: (S,). -> (B,Hq,hd).
+
+    The cache is consumed in its stored dtype with f32 accumulation inside
+    the dot (preferred_element_type) — an explicit .astype(f32) materializes
+    a full f32 copy of the cache per layer and doubles decode HBM traffic
+    (EXPERIMENTS §Perf, decode iteration 1)."""
+    B, Hq, hd = q.shape
+    Hkv = k_cache.shape[1]
+    qg = q.reshape(B, Hkv, group, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p_ = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p_.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def sharded_lse_decode(q, k_cache, v_cache, valid, group, *, axes, mesh,
+                       extra_manual=()):
+    """Flash-decode over a sequence-sharded KV cache.
+
+    Each shard attends over its local cache chunk, then shards combine with a
+    max/psum log-sum-exp reduction — collective volume is O(B*Hq*hd) per step
+    instead of O(S) for an all-gathered cache.
+
+    extra_manual: additional mesh axes to mark manual (replicated here) —
+    leaving an axis auto inside this region trips an XLA partitioner CHECK.
+    """
+    seq_spec = P(None, None, axes, None)
+
+    def local(qb, kb, vb, validb):
+        B, Hq, hd = qb.shape
+        Hkv = kb.shape[1]
+        qg = qb.reshape(B, Hkv, group, hd)
+        s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * (hd ** -0.5)
+        s = jnp.where(validb[None, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)                      # local max
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p_ = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
+        l = jnp.sum(p_, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgs,bksd->bkgd", p_, vb.astype(jnp.float32))
+        g = jax.lax.pmax(m_safe, axes)                              # global max
+        scale = jnp.where(l > 0, jnp.exp(m_safe - g), 0.0)          # (B,K,G,1)
+        l_g = jax.lax.psum(l * scale, axes)
+        o_g = jax.lax.psum(o * scale, axes)                         # bcast on d
+        o_g = o_g / jnp.maximum(l_g, 1e-30)
+        return o_g.reshape(B, Hq, hd).astype(qb.dtype)
+
+    manual = (set(axes) if not isinstance(axes, str) else {axes})
+    manual |= set(extra_manual)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None, None), seq_spec, seq_spec, P(axes)),
+        out_specs=P(None, None, None),
+        axis_names=manual,
+        check_vma=False,
+    )(q, k_cache, v_cache, valid)

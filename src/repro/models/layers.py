@@ -1,0 +1,106 @@
+"""Common building blocks: init helpers, norms, RoPE, dense MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays (pytrees). Initializers take a
+PRNG key and a ModelConfig; apply functions are pure. Leaf names are load-
+bearing: launch/shardings.py maps names -> PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+__all__ = [
+    "dense_init", "rmsnorm_init", "rms_norm", "rope", "mlp_init", "mlp_apply",
+    "embed_init", "embed_lookup", "lm_head", "dtype_of",
+]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6, impl: str = "xla"):
+    return ops.rmsnorm(x, w, eps=eps, impl=impl)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == cos.ndim + 1:  # head axis present: (..., S, H, D)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense MLP
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff), dt), "w_down": dense_init(ks[1], (ff, d), dt)}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, ff), dt)
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    """x: (..., d) -> (..., d)."""
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "relu2":
+        r = jax.nn.relu(up)
+        h = r * r
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    p = {"embedding": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt, scale=1.0)}
+    p["head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), dt)
+    return p
+
+
+def embed_lookup(p, tokens, cfg: ModelConfig):
+    """One-hot contraction lookup. With the table sharded on vocab (P("model",
+    fsdp)) GSPMD lowers this to a local masked matmul + psum — the one gather
+    formulation that partitions robustly across every mesh in the matrix
+    (jnp.take trips GSPMD's gather partitioner inside scan bodies). The
+    (B, S, V_shard) one-hot is microbatch-bounded: ~hundreds of MB transient
+    at the assigned shapes."""
+    adt = dtype_of(cfg.activation_dtype)
+    onehot = jax.nn.one_hot(tokens, cfg.padded_vocab, dtype=adt)
+    return onehot @ p["embedding"].astype(adt)
+
+
+def lm_head(p, x, cfg: ModelConfig):
+    return x @ p["head"].astype(x.dtype)

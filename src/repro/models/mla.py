@@ -1,0 +1,100 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed-KV attention.
+
+Prefill/train: the latent c_kv (kv_lora_rank + rope dims per token) is
+up-projected to per-head K/V and attention runs through the normal flash path.
+Decode: only the latent is cached — (kv_lora + rope_dim) floats per token
+instead of 2*Hkv*hd — and scores are computed with the absorbed-matmul trick
+(q_nope absorbed through W_uk so the cache is consumed directly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import dense_init, dtype_of, rms_norm, rmsnorm_init, rope
+
+__all__ = ["mla_init", "mla_apply", "mla_decode"]
+
+
+def mla_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rd, vd, lora = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                          cfg.v_head_dim, cfg.kv_lora_rank)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, h * (nope + rd)), dt),
+        "w_dkv": dense_init(ks[1], (d, lora + rd), dt),   # down-proj + shared rope key
+        "kv_norm": rmsnorm_init(lora, dt),
+        "w_uk": dense_init(ks[2], (lora, h * nope), dt),  # latent -> K(nope)
+        "w_uv": dense_init(ks[3], (lora, h * vd), dt),    # latent -> V
+        "wo": dense_init(ks[4], (h * vd, d), dt),
+    }
+
+
+def _latent(p, x, cfg: ModelConfig, positions):
+    """c_kv: (B,S,lora) normalized latent; k_rope: (B,S,1,rd) shared across heads."""
+    lora, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = x @ p["w_dkv"]
+    c, k_rope = ckv[..., :lora], ckv[..., lora:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)
+    return c, k_rope
+
+
+def _queries(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    h, nope, rd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, positions):
+    """Full-sequence MLA (decompressed path). x: (B,S,d)."""
+    B, S, _ = x.shape
+    h, nope, rd, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                       cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c, k_rope = _latent(p, x, cfg, positions)
+    k_nope = (c @ p["w_uk"]).reshape(B, S, h, nope)
+    v = (c @ p["w_uv"]).reshape(B, S, h, vd)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, rd))], -1)
+    out = ops.attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=True, sm_scale=(nope + rd) ** -0.5, impl=cfg.attention_impl,
+    ).swapaxes(1, 2).reshape(B, S, h * vd)
+    return out @ p["wo"], (c, k_rope[:, :, 0, :])  # latents for cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, c_cache, rope_cache, slot_pos, pos):
+    """One-token decode against the latent cache (absorbed matmuls).
+
+    x: (B,1,d); c_cache: (B,S,lora); rope_cache: (B,S,rd); slot_pos: (S,).
+    score_s = q_nope^T (W_uk c_s) + q_rope^T k_rope_s
+            = (q_nope W_uk^T)·c_s + q_rope·k_rope_s   <- absorbed form
+    """
+    B = x.shape[0]
+    h, nope, rd, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                       cfg.qk_rope_head_dim, cfg.v_head_dim)
+    lora = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, x, cfg, jnp.full((B, 1), pos))
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]               # (B,h,*)
+    # absorb: (B,h,nope) @ (lora, h*nope) -> (B,h,lora)
+    w_uk = p["w_uk"].reshape(lora, h, nope)
+    q_abs = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = (jnp.einsum("bhl,bsl->bhs", q_abs, c_cache.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      rope_cache.astype(jnp.float32))) * ((nope + rd) ** -0.5)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", probs, c_cache.astype(jnp.float32))  # (B,h,lora)
+    w_uv = p["w_uv"].reshape(lora, h, vd)
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv.astype(jnp.float32))
+    return (o.reshape(B, 1, h * vd).astype(x.dtype) @ p["wo"])

@@ -1,0 +1,176 @@
+"""Top-k MoE with expert parallelism folded into the tensor-parallel axis.
+
+Design (TPU adaptation — see DESIGN.md §4): at the MoE block input the
+activations are replicated across the "model" (TP) axis, as in any Megatron-
+style block. Each TP rank owns E/tp experts. Because every rank already holds
+every local token, expert *dispatch is a local gather* (no all-to-all): each
+rank selects the (token, expert) copies routed to its own experts into a
+capacity-bounded (E_local, C, d) buffer, runs its experts' FFNs, scatters the
+weighted results back to token order, and the cross-rank combine rides the
+same single psum a dense TP FFN needs. Collective volume per MoE layer is
+therefore identical to a dense TP layer — the roofline's collective term sees
+no all-to-all by construction.
+
+Expert weight banks are additionally FSDP-sharded over "data"; they are
+all-gathered per layer inside the block (standard FSDP prefetch pattern —
+under scan-over-layers this is one gather per layer step).
+
+Implemented with shard_map over the "model" axis (and "data"/"pod" mapped for
+batch locality); the sort/capacity bookkeeping is plain local jnp, so there
+are no GSPMD-propagation surprises to debug across the 40-cell matrix.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, dtype_of
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # router kept f32
+        "moe_up": dense_init(ks[1], (e, d, ff), dt),
+        "moe_gate": dense_init(ks[2], (e, d, ff), dt),
+        "moe_down": dense_init(ks[3], (e, ff, d), dt),
+    }
+    if cfg.num_shared_experts:
+        sf = ff * cfg.num_shared_experts
+        p["shared_up"] = dense_init(ks[4], (d, sf), dt)
+        p["shared_gate"] = dense_init(ks[5], (d, sf), dt)
+        p["shared_down"] = dense_init(jax.random.fold_in(key, 7), (sf, d), dt)
+    return p
+
+
+def _expert_ffn(x, up, gate, down):
+    """x: (E_loc, C, d); weights: (E_loc, d, ff) / (E_loc, ff, d)."""
+    u = jnp.einsum("ecd,edf->ecf", x, up)
+    g = jnp.einsum("ecd,edf->ecf", x, gate)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, down)
+
+
+def _local_moe(x, router_w, up, gate, down, *, cfg: ModelConfig, tp: int,
+               my_rank, fsdp_axis: Optional[str]):
+    """Per-device body. x: (T, d) local tokens (replicated over model axis);
+    up/gate/down: this rank's expert slab, sharded on d/ff over fsdp_axis.
+
+    Note on the rejected "2D weight sharding" alternative (compute on weight
+    shards + psum activation partials, no slab gathers): with tokens sharded
+    over the FSDP axis it is incorrect (partials would mix different tokens),
+    and with tokens replicated the x-gather + full-width y psum costs more
+    wire than the 3 slab gathers it removes (napkin math in EXPERIMENTS
+    §Perf). The slab gather is structural at accum>1 under the HBM budget.
+    """
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    e_loc = E // tp
+    cap = max(int(T * k * cfg.capacity_factor / E), 1)
+
+    if fsdp_axis is not None:
+        # FSDP all-gather of this layer's expert slab
+        up = jax.lax.all_gather(up, fsdp_axis, axis=1, tiled=True)
+        gate = jax.lax.all_gather(gate, fsdp_axis, axis=1, tiled=True)
+        down = jax.lax.all_gather(down, fsdp_axis, axis=2, tiled=True)
+
+    logits = (x.astype(jnp.float32) @ router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)    # renormalize
+
+    flat_e = top_e.reshape(-1)                                # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+
+    mine = (flat_e // e_loc) == my_rank
+    local_e = jnp.where(mine, flat_e - my_rank * e_loc, e_loc)  # e_loc = trash bin
+    order = jnp.argsort(local_e, stable=True)
+    se, st, sw = local_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=e_loc + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(se.shape[0]) - starts[se]
+    keep = (se < e_loc) & (pos_in_e < cap)
+    slot = jnp.where(keep, se * cap + pos_in_e, e_loc * cap)   # overflow slot
+    nslots = e_loc * cap
+
+    # Dispatch via slot->token indirection: ONE gather of nslots rows (the
+    # capacity buffer), never materializing the (T*k, d) duplicated-token
+    # matrix. The naive gather-then-scatter formulation moved ~25x more HBM
+    # bytes per MoE layer (f32-promoted, T*k rows) — EXPERIMENTS §Perf.
+    slot_token = jnp.zeros((nslots + 1,), jnp.int32).at[slot].set(
+        st.astype(jnp.int32))
+    slot_valid = jnp.zeros((nslots + 1,), jnp.bool_).at[slot].set(keep)
+    xbuf = x[slot_token[:-1]] * slot_valid[:-1, None].astype(x.dtype)
+    h = _expert_ffn(xbuf.reshape(e_loc, cap, d), up, gate, down)
+    h_ext = jnp.concatenate([h.reshape(nslots, d),
+                             jnp.zeros((1, d), h.dtype)], 0)  # sentinel row
+
+    # Combine: per-token (T, k) slot matrix -> gather + weighted sum (no
+    # scatter-add read-modify-write on a (T, d) f32 buffer).
+    slot_of_copy = jnp.full((T * k,), nslots, jnp.int32).at[order].set(
+        jnp.where(keep, slot, nslots).astype(jnp.int32))
+    w_of_copy = jnp.zeros((T * k,), flat_w.dtype).at[order].set(
+        jnp.where(keep, sw, 0.0))
+    hk = h_ext[slot_of_copy.reshape(T, k)]                  # (T, k, d)
+    y = jnp.einsum("tkd,tk->td", hk,
+                   w_of_copy.reshape(T, k).astype(h_ext.dtype))
+    return y.astype(x.dtype)  # partial: summed over ranks by the caller's psum
+
+
+def moe_apply(p, x, cfg: ModelConfig, mesh=None, *, tp_axis: str = "model",
+              fsdp_axis: Optional[str] = None, batch_axes=(), manual_extra=()):
+    """x: (B, S, d) -> (B, S, d). mesh=None (or tp=1 mesh) runs the same code
+    on one shard — identical math, used by CPU smoke tests."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    if mesh is None or tp_axis not in getattr(mesh, "axis_names", ()):
+        y = _local_moe(xt, p["router"], p["moe_up"], p["moe_gate"], p["moe_down"],
+                       cfg=cfg, tp=1, my_rank=0, fsdp_axis=None)
+    else:
+        tp = mesh.shape[tp_axis]
+        fa = fsdp_axis if (fsdp_axis and mesh.shape.get(fsdp_axis, 1) > 1) else None
+
+        def body(xb, rw, up, gate, down):
+            rank = jax.lax.axis_index(tp_axis)
+            y = _local_moe(xb, rw, up, gate, down, cfg=cfg, tp=tp, my_rank=rank,
+                           fsdp_axis=fa)
+            return jax.lax.psum(y, tp_axis)
+
+        # Manual over TP + FSDP + every batch axis the caller exposes: leaving
+        # a mesh axis in auto-land inside this region trips an XLA partitioner
+        # CHECK ("invalid binary instruction opcode copy"). The partitioned
+        # train step passes batch_axes without "pod" (already manual outside).
+        espec = P(tp_axis, fa, None)
+        dspec = P(tp_axis, None, fa)
+        ba = tuple(batch_axes or ())
+        manual = {tp_axis} | ({fa} if fa else set()) | set(ba) | set(manual_extra)
+        token_axes = ba + ((fa,) if fa and fa not in ba else ())
+        prod = 1
+        for a in token_axes:
+            prod *= mesh.shape[a]
+        # tokens sharded over batch/FSDP axes when divisible (training,
+        # prefill); tiny decode batches replicate instead (B=1 long-context).
+        xspec = (P(token_axes, None) if token_axes and xt.shape[0] % prod == 0
+                 else P(None, None))
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(xspec, P(None, None), espec, espec, dspec),
+            out_specs=xspec,
+            axis_names=manual, check_vma=False,
+        )(xt, p["router"], p["moe_up"], p["moe_gate"], p["moe_down"])
+
+    if cfg.num_shared_experts:
+        u = xt @ p["shared_up"]
+        g = xt @ p["shared_gate"]
+        y = y + (jax.nn.silu(g) * u) @ p["shared_down"]
+    return y.reshape(B, S, d)

@@ -1,0 +1,113 @@
+"""Mamba2 (SSD) mixer block: in-proj, depthwise conv, SSD scan, gated norm.
+
+Full-sequence path dispatches to kernels.ops.ssd (chunked block decomposition,
+Pallas on TPU / scan-over-chunks XLA elsewhere — both O(S·chunk), which is
+what makes the 500k-token cells lowerable). Decode is the O(1) recurrence on
+the carried (H, P, N) state plus a ring conv state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import dense_init, dtype_of, rms_norm, rmsnorm_init
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init"]
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.ssm_inner
+    H, N, G, cw = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv_width
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in_x": dense_init(ks[0], (d, di), dt),
+        "w_in_z": dense_init(ks[1], (d, di), dt),
+        "w_bc": dense_init(ks[2], (d, 2 * G * N), dt),     # B and C projections
+        "w_dt": dense_init(ks[3], (d, H), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv": (jax.random.normal(ks[4], (cw, di), jnp.float32) * (cw ** -0.5)).astype(dt),
+        "ssm_norm": rmsnorm_init(di, dt),
+        "w_out": dense_init(ks[5], (di, d), dt),
+    }
+
+
+def _depthwise_conv(x, w):
+    """Causal depthwise conv. x: (B, S, C); w: (width, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return out
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, (ssm_state, conv_state) for prefill]."""
+    B, S, _ = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xi_raw = x @ p["w_in_x"]                               # (B,S,di)
+    z = x @ p["w_in_z"]
+    xi = jax.nn.silu(_depthwise_conv(xi_raw, p["conv"]))
+    bc = x @ p["w_bc"]
+    Bm = bc[..., :G * N].reshape(B, S, G, N)
+    Cm = bc[..., G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"])                   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                               # (H,) negative
+    out = ops.ssd(xi.reshape(B, S, H, P), dt, A, Bm, Cm, p["D"],
+                  chunk=cfg.ssd_chunk, impl=cfg.ssd_impl,
+                  return_final_state=return_state)
+    y, final_state = out if return_state else (out, None)
+    y = y.reshape(B, S, H * P)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    y = y @ p["w_out"]
+    if return_state:
+        w = cfg.ssm_conv_width
+        pad = jnp.zeros((B, max(w - 1 - S, 0), cfg.ssm_inner), xi_raw.dtype)
+        conv_state = jnp.concatenate([pad, xi_raw[:, max(S - (w - 1), 0):, :]], axis=1)
+        return y, (final_state, conv_state)
+    return y
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    """(ssm_state, conv_state): ((B,H,P,N) f32, (B, width-1, di))."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ssm = jnp.zeros((batch, H, P, N), jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.ssm_inner), dtype)
+    return ssm, conv
+
+
+def mamba_decode(p, x, cfg: ModelConfig, ssm_state, conv_state):
+    """One-token recurrence. x: (B,1,d). Returns (y, (ssm_state, conv_state))."""
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xt = x[:, 0]
+    xi = xt @ p["w_in_x"]                                  # (B,di)
+    z = xt @ p["w_in_z"]
+    # ring conv: state holds last width-1 inputs
+    hist = jnp.concatenate([conv_state, xi[:, None, :]], axis=1)  # (B,width,di)
+    xi = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                                p["conv"].astype(jnp.float32))).astype(x.dtype)
+    conv_state = hist[:, 1:]
+    bc = xt @ p["w_bc"]
+    Bm = bc[..., :G * N].reshape(B, G, N)
+    Cm = bc[..., G * N:].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(xt.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"])                   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                   # (B,H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    ssm_state = (ssm_state * dA[..., None, None]
+                 + dt[..., None, None] * xh[..., :, None] * Bh[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(B, H * P).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return (y @ p["w_out"])[:, None, :], (ssm_state, conv_state)

@@ -1,0 +1,350 @@
+"""Config-driven decoder LM covering dense / MoE / MLA / SSM / hybrid stacks.
+
+The layer stack is ``num_repeats`` copies of ``cfg.pattern`` (a tuple of
+LayerSpec). Per-pattern-position parameters are stacked over repeats and the
+stack runs under ``jax.lax.scan`` — one pattern unit in the HLO regardless of
+depth, which keeps the 40-cell x 2-mesh dry-run compile matrix tractable and
+is the production choice anyway (layer-stacked weights = clean FSDP).
+
+Sharding is injected via ShardCtx: activation constraints at block boundaries,
+shard_map MoE over the TP axis, optional sequence-sharded flash-decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import LayerSpec, ModelConfig
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (dtype_of, embed_init, embed_lookup, lm_head, mlp_apply,
+                     mlp_init, rms_norm, rmsnorm_init, rope)
+
+__all__ = ["ShardCtx", "LM"]
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Static sharding context threaded through model code (None = local)."""
+
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = "data"
+    decode_seq_axes: Optional[Tuple[str, ...]] = None  # seq-sharded KV decode
+    seq_axis: Optional[str] = None  # Megatron-style sequence parallelism on
+    # the residual stream: hidden (B, S, d) sharded on S over this axis between
+    # blocks (activation memory / collective-layout optimization, §Perf).
+    manual_extra: Tuple[str, ...] = ()  # mesh axes to absorb (replicated) into
+    # manual shard_map regions — an axis left auto inside one trips an XLA
+    # 0.8.2 partitioner CHECK. The dry-run passes every non-TP/FSDP axis.
+
+    def act(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*spec)))
+
+    def hidden(self, x):
+        """Sharding constraint for the (B, S, d) residual stream."""
+        return self.act(x, self.bspec, self.seq_axis, None)
+
+    @property
+    def bspec(self):
+        return self.batch_axes if self.batch_axes else None
+
+
+def _place_seq(entry, cache_len: int, seq_axis: int):
+    """Place a length-S prefill tensor into a cache_len ring buffer along
+    ``seq_axis`` (keeps the last cache_len positions, ring-rotated so that
+    position p sits at slot p % cache_len)."""
+    S = entry.shape[seq_axis]
+    if S == cache_len:
+        return entry
+    if S < cache_len:
+        pad_shape = list(entry.shape)
+        pad_shape[seq_axis] = cache_len - S
+        return jnp.concatenate([entry, jnp.zeros(pad_shape, entry.dtype)], seq_axis)
+    tail = jax.lax.slice_in_dim(entry, S - cache_len, S, axis=seq_axis)
+    return jnp.roll(tail, shift=(S - cache_len) % cache_len, axis=seq_axis)
+
+
+def _prefill_slot_pos(S: int, cache_len: int):
+    if S >= cache_len:
+        idx = jnp.arange(S - cache_len, S)
+        return jnp.zeros((cache_len,), jnp.int32).at[idx % cache_len].set(idx)
+    return jnp.where(jnp.arange(cache_len) < S, jnp.arange(cache_len), -1).astype(jnp.int32)
+
+
+class LM:
+    """Decoder-only LM (also the backbone for the VLM wrapper)."""
+
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ShardCtx()
+
+    # ------------------------------------------------------------- init
+    def _block_init(self, key, spec: LayerSpec):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        dt = dtype_of(cfg.param_dtype)
+        p = {"ln1": rmsnorm_init(cfg.d_model, dt)}
+        if spec.mixer == "attn":
+            p["mixer"] = attn.attn_init(ks[0], cfg)
+        elif spec.mixer == "mla":
+            p["mixer"] = mla_mod.mla_init(ks[0], cfg)
+        elif spec.mixer == "mamba":
+            p["mixer"] = ssm_mod.mamba_init(ks[0], cfg)
+        else:
+            raise ValueError(spec.mixer)
+        if spec.mlp == "dense":
+            p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+            p["mlp"] = mlp_init(ks[1], cfg)
+        elif spec.mlp == "moe":
+            p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+            p["mlp"] = moe_mod.moe_init(ks[1], cfg)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        kE, kF, kB = jax.random.split(key, 3)
+        params = {"embed": embed_init(kE, cfg),
+                  "final_norm": rmsnorm_init(cfg.d_model, dtype_of(cfg.param_dtype))}
+        if cfg.first_layer_dense:
+            spec0 = LayerSpec(cfg.pattern[0].mixer, "dense")
+            params["first"] = self._block_init(kF, spec0)
+        blocks = {}
+        for i, spec in enumerate(cfg.pattern):
+            keys = jax.random.split(jax.random.fold_in(kB, i), cfg.num_repeats)
+            blocks[f"pos{i}"] = jax.vmap(lambda k, s=spec: self._block_init(k, s))(keys)
+        params["blocks"] = blocks
+        return params
+
+    # ------------------------------------------------------------- forward
+    def _mlp_part(self, p, x, spec: LayerSpec):
+        cfg, ctx = self.cfg, self.ctx
+        if spec.mlp == "none":
+            return x
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            o = mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        else:
+            o = moe_mod.moe_apply(p["mlp"], h2, cfg, ctx.mesh,
+                                  tp_axis=ctx.tp_axis, fsdp_axis=ctx.fsdp_axis,
+                                  batch_axes=ctx.batch_axes,
+                                  manual_extra=ctx.manual_extra)
+        return ctx.hidden(x + o)
+
+    def _block_apply(self, p, x, spec: LayerSpec, positions, collect: bool = False):
+        cfg, ctx = self.cfg, self.ctx
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        entry = None
+        if spec.mixer == "attn":
+            if collect:
+                m, (k, v) = attn.attn_apply(p["mixer"], h, cfg, positions,
+                                            return_kv=True)
+                entry = {"k": k.swapaxes(1, 2), "v": v.swapaxes(1, 2)}
+            else:
+                m = attn.attn_apply(p["mixer"], h, cfg, positions)
+        elif spec.mixer == "mla":
+            m, (c, kr) = mla_mod.mla_apply(p["mixer"], h, cfg, positions)
+            if collect:
+                entry = {"c": c, "rope": kr}
+        else:
+            if collect:
+                m, (ssm_s, conv_s) = ssm_mod.mamba_apply(p["mixer"], h, cfg,
+                                                         return_state=True)
+                entry = {"ssm": ssm_s, "conv": conv_s}
+            else:
+                m = ssm_mod.mamba_apply(p["mixer"], h, cfg)
+        x = ctx.hidden(x + m)
+        x = self._mlp_part(p, x, spec)
+        return x, entry
+
+    def _stack_apply(self, params, x, positions, collect: bool = False):
+        cfg = self.cfg
+        first_entry = None
+        if cfg.first_layer_dense:
+            spec0 = LayerSpec(cfg.pattern[0].mixer, "dense")
+            x, first_entry = self._block_apply(params["first"], x, spec0,
+                                               positions, collect)
+
+        def unit(x, slices):
+            entries = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, e = self._block_apply(slices[f"pos{i}"], x, spec, positions,
+                                         collect)
+                if collect:
+                    entries[f"pos{i}"] = e
+            return x, entries
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(unit, policy=policy)
+        else:
+            body = unit
+
+        def scan_body(x, slices):
+            return body(x, slices)
+
+        x, entries = jax.lax.scan(scan_body, x, params["blocks"])
+        return x, (entries if collect else None), first_entry
+
+    def apply(self, params, tokens, *, extra_embeds=None):
+        """tokens: (B, S_text) -> logits (B, S, padded_vocab).
+
+        extra_embeds: (B, Np, d) prepended patch/frame embeddings (VLM stub).
+        """
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_lookup(params["embed"], tokens, cfg)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        x = ctx.hidden(x)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, _, _ = self._stack_apply(params, x, positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_head(params["embed"], x, cfg)
+        return ctx.act(logits, ctx.bspec, None, ctx.tp_axis)
+
+    # ------------------------------------------------------------- serving
+    def cache_init(self, batch: int, cache_len: int, dtype=None) -> dict:
+        """Empty cache sized for ``cache_len`` slots (SWA archs: pass window)."""
+        cfg = self.cfg
+        dt = dtype or dtype_of(cfg.activation_dtype)
+        R = cfg.num_repeats
+
+        def one(spec: LayerSpec, stacked: bool):
+            lead = (R,) if stacked else ()
+            if spec.mixer == "attn":
+                kv = (*lead, batch, cfg.num_kv_heads, cache_len, cfg.head_dim)
+                return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+            if spec.mixer == "mla":
+                return {"c": jnp.zeros((*lead, batch, cache_len, cfg.kv_lora_rank), dt),
+                        "rope": jnp.zeros((*lead, batch, cache_len, cfg.qk_rope_head_dim), dt)}
+            ssm = (*lead, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+            conv = (*lead, batch, cfg.ssm_conv_width - 1, cfg.ssm_inner)
+            return {"ssm": jnp.zeros(ssm, jnp.float32), "conv": jnp.zeros(conv, dt)}
+
+        cache = {"blocks": {f"pos{i}": one(s, True) for i, s in enumerate(cfg.pattern)},
+                 "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+                 "pos": jnp.zeros((), jnp.int32)}
+        if cfg.first_layer_dense:
+            cache["first"] = one(LayerSpec(cfg.pattern[0].mixer, "dense"), False)
+        return cache
+
+    def _block_decode(self, p, c, x, spec: LayerSpec, slot_pos, pos, slot):
+        cfg, ctx = self.cfg, self.ctx
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            B = x.shape[0]
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            k_new = (h @ p["mixer"]["wk"]).reshape(B, 1, hkv, hd)
+            v_new = (h @ p["mixer"]["wv"]).reshape(B, 1, hkv, hd)
+            if cfg.qk_norm:
+                k_new = rms_norm(k_new, p["mixer"]["k_norm"], cfg.norm_eps)
+            k_new = rope(k_new, jnp.full((B, 1), pos), cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(
+                c["k"], k_new.swapaxes(1, 2).astype(c["k"].dtype), (0, 0, slot, 0))
+            vc = jax.lax.dynamic_update_slice(
+                c["v"], v_new.swapaxes(1, 2).astype(c["v"].dtype), (0, 0, slot, 0))
+            m = attn.attn_decode(p["mixer"], h, cfg, kc, vc, slot_pos, pos,
+                                 seq_shard_axes=ctx.decode_seq_axes, mesh=ctx.mesh,
+                                 manual_extra=ctx.manual_extra)
+            c = {"k": kc, "v": vc}
+        elif spec.mixer == "mla":
+            cl, kr = mla_mod._latent(p["mixer"], h, cfg, jnp.full((x.shape[0], 1), pos))
+            cc = jax.lax.dynamic_update_slice(
+                c["c"], cl.astype(c["c"].dtype), (0, slot, 0))
+            rc = jax.lax.dynamic_update_slice(
+                c["rope"], kr[:, :, 0, :].astype(c["rope"].dtype), (0, slot, 0))
+            m = mla_mod.mla_decode(p["mixer"], h, cfg, cc, rc, slot_pos, pos)
+            c = {"c": cc, "rope": rc}
+        else:
+            m, (s_new, cv_new) = ssm_mod.mamba_decode(p["mixer"], h, cfg,
+                                                      c["ssm"], c["conv"])
+            c = {"ssm": s_new, "conv": cv_new}
+        x = x + m
+        x = self._mlp_part(p, x, spec)
+        return x, c
+
+    def decode_step(self, params, cache, tokens):
+        """One decode step. tokens: (B, 1). Returns (logits (B,1,V), cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        pos = cache["pos"]
+        cache_len = cache["slot_pos"].shape[0]
+        if cfg.window is not None:
+            slot = (pos % cache_len).astype(jnp.int32)   # SWA ring buffer
+        else:
+            # full attention: append (caller sizes the cache; clamp is a guard)
+            slot = jnp.minimum(pos, cache_len - 1).astype(jnp.int32)
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+
+        x = embed_lookup(params["embed"], tokens, cfg)
+        x = ctx.hidden(x)
+
+        c0 = None
+        if cfg.first_layer_dense:
+            spec0 = LayerSpec(cfg.pattern[0].mixer, "dense")
+            x, c0 = self._block_decode(params["first"], cache["first"], x,
+                                       spec0, slot_pos, pos, slot)
+
+        def scan_body(x, pc):
+            p_slice, c_slice = pc
+            new_c = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, nc = self._block_decode(p_slice[f"pos{i}"], c_slice[f"pos{i}"],
+                                           x, spec, slot_pos, pos, slot)
+                new_c[f"pos{i}"] = nc
+            return x, new_c
+
+        x, new_blocks = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_head(params["embed"], x, cfg)
+        new_cache = {"blocks": new_blocks, "slot_pos": slot_pos, "pos": pos + 1}
+        if cfg.first_layer_dense:
+            new_cache["first"] = c0
+        return ctx.act(logits, ctx.bspec, None, ctx.tp_axis), new_cache
+
+    def prefill(self, params, tokens, cache_len: Optional[int] = None, *,
+                extra_embeds=None):
+        """Forward pass that also builds a decode-ready cache in one shot
+        (per-layer K/V collected inside the same scan — no token replay)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        S = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None else 0)
+        cache_len = cache_len or S
+
+        x = embed_lookup(params["embed"], tokens, cfg)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        x = self.ctx.act(x, self.ctx.bspec, None, None)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, entries, first_entry = self._stack_apply(params, x, positions, collect=True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_head(params["embed"], x, cfg)
+        logits = self.ctx.act(logits, self.ctx.bspec, None, self.ctx.tp_axis)
+
+        def to_cache(entry, stacked: bool):
+            if entry is None:
+                return None
+            off = 1 if stacked else 0
+            if "k" in entry:  # attn: (R?, B, Hkv, S, hd) -> ring
+                return {k: _place_seq(vv, cache_len, 2 + off) for k, vv in entry.items()}
+            if "c" in entry:  # mla: (R?, B, S, lora)
+                return {k: _place_seq(vv, cache_len, 1 + off) for k, vv in entry.items()}
+            return entry      # mamba states need no seq placement
+
+        cache = {"blocks": {k: to_cache(v, True) for k, v in (entries or {}).items()},
+                 "slot_pos": _prefill_slot_pos(S, cache_len),
+                 "pos": jnp.asarray(S, jnp.int32)}
+        if cfg.first_layer_dense:
+            cache["first"] = to_cache(first_entry, False)
+        return logits, cache

@@ -1,0 +1,40 @@
+"""InternVL2-style VLM wrapper: LM backbone + stub ViT frontend.
+
+Per the assignment, the modality frontend is a STUB — ``input_specs()``
+provides precomputed patch embeddings (B, num_patches, d_model) which are
+prepended to the token embeddings; the backbone is the standard causal LM.
+Decode is delegated to the LM (patches only participate via the prefilled
+cache).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..configs.base import ModelConfig
+from .transformer import LM, ShardCtx
+
+__all__ = ["VLM"]
+
+
+class VLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+        assert cfg.num_patches > 0
+        self.cfg = cfg
+        self.lm = LM(cfg, ctx)
+
+    def init(self, key):
+        return self.lm.init(key)
+
+    def apply(self, params, tokens, patch_embeds):
+        """tokens: (B, S - num_patches); patch_embeds: (B, num_patches, d)."""
+        return self.lm.apply(params, tokens, extra_embeds=patch_embeds)
+
+    def prefill(self, params, tokens, patch_embeds, cache_len=None):
+        return self.lm.prefill(params, tokens, cache_len=cache_len,
+                               extra_embeds=patch_embeds)
+
+    def decode_step(self, params, cache, tokens):
+        return self.lm.decode_step(params, cache, tokens)
+
+    def cache_init(self, batch, cache_len, dtype=None):
+        return self.lm.cache_init(batch, cache_len, dtype)

@@ -1,0 +1,8 @@
+"""Optimizers and distributed-optimization tricks."""
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule, global_norm)
+from .compress import EFState, dequantize_int8, ef_compress, ef_init, quantize_int8
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule", "global_norm", "EFState", "dequantize_int8",
+           "ef_compress", "ef_init", "quantize_int8"]

@@ -1,0 +1,77 @@
+"""AdamW with decoupled weight decay, global-norm clipping and LR schedules.
+
+Pure-pytree implementation (no optax dependency in this offline container).
+Moments are f32 regardless of param dtype (mixed-precision convention:
+bf16 params / f32 optimizer state, both sharded like the params — FSDP keeps
+the 1000-node memory story honest, see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array   # ()
+    m: dict           # f32 pytree like params
+    v: dict           # f32 pytree like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """One AdamW step. ``lr`` is a schedule fn or a float."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_n = b1 * m + (1 - b1) * gf
+        v_n = b2 * v + (1 - b2) * gf * gf
+        update = (m_n / b1t) / (jnp.sqrt(v_n / b2t) + eps)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p_n = p.astype(jnp.float32) - lr_t * (update + decay)
+        return p_n.astype(p.dtype), m_n, v_n
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    params_n = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m_n = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v_n = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return params_n, AdamWState(step=step, m=m_n, v=v_n), {"grad_norm": gnorm, "lr": lr_t}

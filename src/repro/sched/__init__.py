@@ -1,0 +1,5 @@
+"""Scheduler layer: the paper's partitioner wired into the runtime."""
+from .balancer import UncertaintyAwareBalancer, integerize
+from .straggler import StragglerPolicy
+
+__all__ = ["UncertaintyAwareBalancer", "integerize", "StragglerPolicy"]

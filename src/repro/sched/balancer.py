@@ -1,0 +1,161 @@
+"""UncertaintyAwareBalancer: the paper's partitioner driving real work splits.
+
+Maintains per-channel Normal-Inverse-Gamma posteriors over *per-unit-work*
+completion time (seconds per microbatch / per MB / per request), converts the
+posterior point estimates into frontier weights via repro.core, and emits
+integer work assignments (microbatch counts, request shards).
+
+This is the object the training loop and the serving batcher talk to; it is
+deliberately free of any jax device state so it runs on the host scheduler
+thread and serializes into checkpoints (meta.json).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core import (NIGState, nig_init, nig_point_estimates, nig_update_batch,
+                    equal_split, inverse_mu_split, optimize_2ch,
+                    optimize_weights, predict_moments)
+
+__all__ = ["integerize", "UncertaintyAwareBalancer"]
+
+
+def integerize(weights: np.ndarray, total: int) -> np.ndarray:
+    """Largest-remainder rounding of simplex weights into integer counts
+    summing to ``total``. Guarantees nonnegative counts."""
+    w = np.maximum(np.asarray(weights, np.float64), 0.0)
+    w = w / max(w.sum(), 1e-12)
+    raw = w * total
+    base = np.floor(raw).astype(np.int64)
+    rem = total - int(base.sum())
+    if rem > 0:
+        order = np.argsort(-(raw - base))
+        base[order[:rem]] += 1
+    return base
+
+
+@dataclass
+class UncertaintyAwareBalancer:
+    """Online paper-partitioner over K channels.
+
+    lam     — mean-variance tradeoff on the frontier (0 = pure speed).
+    policy  — "frontier" (the paper), "equal" (map-reduce baseline),
+              "inverse_mu" (deterministic balance baseline).
+    """
+
+    num_channels: int
+    lam: float = 0.05
+    policy: str = "frontier"
+    prior_mean: float = 1.0
+    min_weight: float = 0.0
+    refresh_every: int = 1      # re-solve the frontier every N observations
+    pgd_steps: int = 150        # K-channel solver budget (warm-started)
+    _nig: NIGState = field(default=None, repr=False)
+    _cached_w: np.ndarray = field(default=None, repr=False)
+    _obs_count: int = 0
+
+    def __post_init__(self):
+        if self._nig is None:
+            self._nig = nig_init(self.num_channels, m0=self.prior_mean)
+
+    # ------------------------------------------------------------ feedback
+    def observe(self, durations: Sequence[float], work: Sequence[float]):
+        """Report per-channel durations for assigned work fractions.
+
+        work==0 entries (idle/failed channels) are masked out.
+        """
+        import jax.numpy as jnp
+        d = np.asarray(durations, np.float64)
+        w = np.asarray(work, np.float64)
+        mask = (w > 0).astype(np.float32)
+        rates = np.where(w > 0, d / np.maximum(w, 1e-12), 0.0).astype(np.float32)
+        self._nig = nig_update_batch(self._nig, jnp.asarray(rates),
+                                     jnp.asarray(mask))
+        self._obs_count += 1
+
+    def estimates(self):
+        mu, sigma = nig_point_estimates(self._nig)
+        return np.asarray(mu, np.float64), np.asarray(sigma, np.float64)
+
+    # ------------------------------------------------------------ decisions
+    def weights(self) -> np.ndarray:
+        mus, sigmas = self.estimates()
+        k = self.num_channels
+        if self.policy == "equal":
+            w = np.asarray(equal_split(k))
+        elif self.policy == "inverse_mu":
+            w = np.asarray(inverse_mu_split(mus))
+        else:
+            # frontier: cached between refreshes (the solve is the scheduler
+            # tick cost — it must stay off the per-step critical path)
+            stale = (self._cached_w is None
+                     or len(self._cached_w) != k
+                     or self._obs_count % max(self.refresh_every, 1) == 0)
+            if not stale:
+                return self._cached_w.copy()
+            if k == 2:
+                w = optimize_2ch(mus[0], sigmas[0], mus[1], sigmas[1],
+                                 lam=self.lam).weights
+            else:
+                restarts = 2 if k <= 16 else 0
+                w = optimize_weights(mus, sigmas, lam=self.lam,
+                                     steps=self.pgd_steps,
+                                     restarts=restarts).weights
+            self._cached_w = np.asarray(w, np.float64)
+        if self.min_weight > 0:
+            w = np.maximum(w, self.min_weight)
+            w = w / w.sum()
+        return np.asarray(w, np.float64)
+
+    def assign(self, total_units: int) -> np.ndarray:
+        """Integer work assignment (e.g. microbatch counts per pod)."""
+        return integerize(self.weights(), total_units)
+
+    def predicted_moments(self, weights: Optional[np.ndarray] = None):
+        mus, sigmas = self.estimates()
+        w = self.weights() if weights is None else weights
+        return predict_moments(w, mus, sigmas)
+
+    # ------------------------------------------------------------ elasticity
+    def add_channel(self, prior_mean: Optional[float] = None):
+        """Enlist a new channel (elastic scale-up) with a weak prior."""
+        import jax.numpy as jnp
+        mus, _ = self.estimates()
+        m0 = prior_mean if prior_mean is not None else float(np.mean(mus))
+        old = self._nig
+        new = nig_init(self.num_channels + 1, m0=m0)
+        self._nig = NIGState(
+            m=jnp.concatenate([old.m, new.m[-1:]]),
+            kappa=jnp.concatenate([old.kappa, new.kappa[-1:]]),
+            alpha=jnp.concatenate([old.alpha, new.alpha[-1:]]),
+            beta=jnp.concatenate([old.beta, new.beta[-1:]]))
+        self.num_channels += 1
+        self._cached_w = None
+
+    def remove_channel(self, idx: int):
+        """Drop a failed/retired channel (elastic scale-down)."""
+        import jax.numpy as jnp
+        keep = [i for i in range(self.num_channels) if i != idx]
+        sel = jnp.asarray(keep)
+        o = self._nig
+        self._nig = NIGState(m=o.m[sel], kappa=o.kappa[sel],
+                             alpha=o.alpha[sel], beta=o.beta[sel])
+        self.num_channels -= 1
+        self._cached_w = None
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        return {"num_channels": self.num_channels, "lam": self.lam,
+                "policy": self.policy,
+                "nig": {k: np.asarray(v).tolist() for k, v in self._nig._asdict().items()}}
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "UncertaintyAwareBalancer":
+        import jax.numpy as jnp
+        b = cls(num_channels=d["num_channels"], lam=d["lam"], policy=d["policy"])
+        b._nig = NIGState(**{k: jnp.asarray(v, jnp.float32)
+                             for k, v in d["nig"].items()})
+        return b

@@ -1,0 +1,80 @@
+"""Straggler detection & mitigation policy on top of the balancer.
+
+The paper's mechanism *is* the mitigation: a slowing channel's posterior mean
+rises and the frontier moves work away from it. This module adds the
+operational edges a 1000-node deployment needs:
+
+  * z-score detection of acute stragglers (vs the fleet's posterior mix),
+  * quarantine (weight -> 0) after repeated offenses, with probation retries,
+  * hard-failure handling (missed heartbeat -> elastic removal).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .balancer import UncertaintyAwareBalancer
+
+__all__ = ["StragglerPolicy"]
+
+
+@dataclass
+class StragglerPolicy:
+    balancer: UncertaintyAwareBalancer
+    z_threshold: float = 3.0          # acute-straggler z score
+    quarantine_after: int = 3         # offenses before weight->0
+    probation_period: int = 20        # steps before a quarantined node retries
+    offenses: Dict[int, int] = field(default_factory=dict)
+    quarantined: Dict[int, int] = field(default_factory=dict)  # idx -> step
+    step: int = 0
+
+    def record(self, durations: Sequence[float], work: Sequence[float]) -> List[int]:
+        """Feed observations; returns indices flagged as acute stragglers."""
+        self.step += 1
+        self.balancer.observe(durations, work)
+        mus, sigmas = self.balancer.estimates()
+        d = np.asarray(durations, np.float64)
+        w = np.asarray(work, np.float64)
+        flagged = []
+        for i in range(len(d)):
+            if w[i] <= 0:
+                continue
+            rate = d[i] / w[i]
+            z = (rate - mus[i]) / max(sigmas[i], 1e-9)
+            if z > self.z_threshold:
+                self.offenses[i] = self.offenses.get(i, 0) + 1
+                flagged.append(i)
+                if self.offenses[i] >= self.quarantine_after:
+                    self.quarantined[i] = self.step
+            else:
+                self.offenses[i] = max(0, self.offenses.get(i, 0) - 1)
+        # probation: let quarantined nodes back in for re-evaluation
+        for i, since in list(self.quarantined.items()):
+            if self.step - since >= self.probation_period:
+                del self.quarantined[i]
+                self.offenses[i] = 0
+        return flagged
+
+    def weights(self) -> np.ndarray:
+        w = self.balancer.weights()
+        for i in self.quarantined:
+            w[i] = 0.0
+        s = w.sum()
+        return w / s if s > 0 else np.full_like(w, 1.0 / len(w))
+
+    def assign(self, total_units: int) -> np.ndarray:
+        from .balancer import integerize
+        return integerize(self.weights(), total_units)
+
+    def fail(self, idx: int):
+        """Hard failure (missed heartbeat): remove the channel entirely."""
+        self.balancer.remove_channel(idx)
+        self.offenses = {i - (i > idx): c for i, c in self.offenses.items() if i != idx}
+        self.quarantined = {i - (i > idx): s for i, s in self.quarantined.items()
+                            if i != idx}
+
+    def join(self, prior_mean=None):
+        """Elastic scale-up."""
+        self.balancer.add_channel(prior_mean)

@@ -1,0 +1,4 @@
+"""Serving substrate: engine + the paper-partitioned request batcher."""
+from .engine import PartitionedBatcher, ReplicaGroup, ServeEngine
+
+__all__ = ["PartitionedBatcher", "ReplicaGroup", "ServeEngine"]

@@ -1,0 +1,4 @@
+"""Cluster simulator: stochastic channels for paper-experiment reproduction."""
+from .cluster import Channel, ClusterSim
+
+__all__ = ["Channel", "ClusterSim"]

@@ -1,0 +1,95 @@
+"""Discrete cluster simulator: channels with stochastic service rates.
+
+Reproduces the paper's experimental conditions (contended VMs, jittery WAN
+paths) without hardware: channel i processing work fraction w completes in
+``w * rate`` where rate ~ the channel's distribution (Normal by default,
+log-normal / shifted regimes for robustness studies, plus drift and failure
+injection for the fault-tolerance benchmarks).
+
+Used by: benchmarks/fig34_convex_opt.py, fig56_file_transfer.py,
+cluster_scale.py, and the examples. Everything is seeded and reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Channel", "ClusterSim"]
+
+
+@dataclass
+class Channel:
+    mu: float                      # mean seconds per unit work
+    sigma: float                   # std seconds per unit work
+    dist: str = "normal"           # normal | lognormal
+    drift: float = 0.0             # per-step multiplicative drift (hotspots)
+    failed: bool = False
+
+    def sample(self, rng: np.random.Generator, work: float) -> float:
+        if self.failed or work <= 0:
+            return 0.0
+        if self.dist == "normal":
+            r = rng.normal(self.mu, self.sigma)
+        else:
+            s2 = np.log1p((self.sigma / self.mu) ** 2)
+            r = rng.lognormal(np.log(self.mu) - s2 / 2, np.sqrt(s2))
+        return max(work * r, 1e-9)
+
+
+@dataclass
+class ClusterSim:
+    channels: list
+    seed: int = 0
+    step_count: int = 0
+    rng: np.random.Generator = field(init=False)
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+
+    @classmethod
+    def heterogeneous(cls, n: int, mu_range=(10.0, 40.0), cov_range=(0.02, 0.3),
+                      seed: int = 0, dist: str = "normal") -> "ClusterSim":
+        rng = np.random.default_rng(seed)
+        chans = []
+        for _ in range(n):
+            mu = rng.uniform(*mu_range)
+            sigma = mu * rng.uniform(*cov_range)
+            chans.append(Channel(mu=mu, sigma=sigma, dist=dist))
+        return cls(channels=chans, seed=seed + 1)
+
+    @property
+    def true_params(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.asarray([c.mu for c in self.channels]),
+                np.asarray([c.sigma for c in self.channels]))
+
+    def run_step(self, weights: Sequence[float]) -> Tuple[float, np.ndarray]:
+        """Execute one partitioned step: returns (join_time, per-channel durations).
+
+        join_time = max over active channels (the paper's completion time).
+        """
+        self.step_count += 1
+        w = np.asarray(weights, np.float64)
+        durs = np.array([c.sample(self.rng, w[i])
+                         for i, c in enumerate(self.channels)])
+        for c in self.channels:  # slow drift (multi-tenant hotspots)
+            if c.drift:
+                c.mu *= (1.0 + c.drift)
+        return float(durs.max(initial=0.0)), durs
+
+    def inject_failure(self, idx: int):
+        self.channels[idx].failed = True
+
+    def inject_slowdown(self, idx: int, factor: float):
+        self.channels[idx].mu *= factor
+        self.channels[idx].sigma *= factor
+
+    def recover(self, idx: int, mu: Optional[float] = None,
+                sigma: Optional[float] = None):
+        c = self.channels[idx]
+        c.failed = False
+        if mu is not None:
+            c.mu = mu
+        if sigma is not None:
+            c.sigma = sigma

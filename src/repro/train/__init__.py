@@ -1,0 +1,8 @@
+"""Training substrate: loss, steps (standard + paper-partitioned), loop."""
+from .loss import softmax_xent
+from .loop import Trainer, TrainerConfig
+from .step import (TrainState, forward, init_state, make_partitioned_train_step,
+                   make_train_step)
+
+__all__ = ["softmax_xent", "Trainer", "TrainerConfig", "TrainState", "forward",
+           "init_state", "make_partitioned_train_step", "make_train_step"]

@@ -1,0 +1,38 @@
+"""Cross-entropy loss, SPMD-safe over a vocab-sharded logits axis.
+
+logsumexp and the label-logit gather are expressed as local reductions /
+one-hot contractions so GSPMD lowers them to (local reduce + small psum)
+instead of all-gathering (B, S, V) logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent"]
+
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """logits: (B, S, Vp) (padded vocab); labels: (B, S) int32, -1 = masked.
+
+    Returns (mean_loss, metrics dict). Padded vocab columns are excluded via
+    a -inf additive mask (cheap: one iota compare, no materialized mask).
+    """
+    Vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    pad_mask = jnp.arange(Vp) >= vocab_size
+    lf = jnp.where(pad_mask[None, None, :], -1e30, lf)
+
+    lmax = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - lmax), axis=-1)) + lmax[..., 0]
+
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    onehot = jax.nn.one_hot(safe_labels, Vp, dtype=lf.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", lf, onehot)
+
+    nll = (lse - picked) * valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / denom
+    acc = jnp.sum((jnp.argmax(lf, -1) == safe_labels) & valid) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

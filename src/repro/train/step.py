@@ -1,0 +1,197 @@
+"""Train steps: the standard SPMD step and the paper's partitioned step.
+
+``make_train_step``         — pjit path: fixed grad-accumulation via lax.scan,
+                              AdamW update, loss/metrics. Used by the trainer
+                              and by the dry-run train cells.
+``make_partitioned_train_step`` — THE PAPER AS A TRAINING FEATURE: pods are
+  the paper's channels. Each pod runs its own (variable!) number of
+  grad-accumulation microsteps k_p — the integerized split f from the
+  frontier — inside a manual-over-"pod" shard_map; a single cross-pod psum
+  joins the outputs (optionally int8-compressed with error feedback for the
+  DCN hop). The step's wall-clock is max over pods of pod work — exactly the
+  paper's max-of-channels completion time, which the scheduler minimizes in
+  (mu, sigma^2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compress import dequantize_int8, quantize_int8
+from .loss import softmax_xent
+
+__all__ = ["TrainState", "init_state", "make_train_step",
+           "make_partitioned_train_step", "forward"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_state(model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def forward(model, cfg: ModelConfig, params, tokens, extra_embeds=None):
+    """Uniform forward dispatch across LM / EncDec / VLM."""
+    if cfg.is_encoder_decoder:
+        return model.apply(params, tokens, extra_embeds)
+    if cfg.num_patches:
+        return model.apply(params, tokens, extra_embeds)
+    return model.apply(params, tokens)
+
+
+def make_loss_fn(model, cfg: ModelConfig, *, reduce: str = "mean") -> Callable:
+    def loss_fn(params, tokens, labels, extra_embeds=None):
+        logits = forward(model, cfg, params, tokens, extra_embeds)
+        loss, metrics = softmax_xent(logits, labels, cfg.vocab_size)
+        if reduce == "sum":
+            total = loss * metrics["tokens"]
+            return total, metrics
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, lr, *, accum: int = 1,
+                    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+                    accum_dtype=jnp.float32):
+    """Standard SPMD train step with optional fixed grad accumulation.
+
+    accum_dtype: gradient-accumulator precision. f32 is the safe default;
+    bf16 halves the accumulator read-modify-write traffic that dominates the
+    memory roofline term of large-MoE training (EXPERIMENTS §Perf) at the
+    cost of ~8 bits of gradient mantissa during accumulation.
+    """
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, tokens, labels, extra_embeds=None):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, tokens, labels,
+                                             extra_embeds)
+        else:
+            B = tokens.shape[0]
+            mb = B // accum
+            resh = lambda x: x.reshape(accum, mb, *x.shape[1:]) if x is not None else None
+            tk, lb = resh(tokens), resh(labels)
+            ee = resh(extra_embeds)
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                if ee is None:
+                    t, l = xs
+                    (loss, m), g = grad_fn(state.params, t, l, None)
+                else:
+                    t, l, e = xs
+                    (loss, m), g = grad_fn(state.params, t, l, e)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + loss), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              state.params)
+            xs = (tk, lb) if ee is None else (tk, lb, ee)
+            (grads, loss_sum), ms = jax.lax.scan(micro, (g0, jnp.float32(0)), xs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+            metrics["loss"] = loss
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr,
+                                       weight_decay=weight_decay,
+                                       max_grad_norm=max_grad_norm)
+        return TrainState(params, opt), {**metrics, **om}
+
+    return train_step
+
+
+def make_partitioned_train_step(model, cfg: ModelConfig, mesh, lr, *,
+                                max_micro: int, weight_decay: float = 0.1,
+                                max_grad_norm: float = 1.0,
+                                compress_pod_reduce: bool = False,
+                                pod_axis: str = "pod", grad_specs=None):
+    """Uncertainty-partitioned train step (see module docstring).
+
+    Inputs per call:
+      tokens/labels: (max_micro, B_mb, S) with B_mb sharded over
+        (pod, data) — each pod sees its own (max_micro, B_mb/|pod|, S) slab.
+      k_pods: (|pod|,) int32 microstep counts from the partitioner; pod p
+        processes slabs [0, k_p) and idles the rest — the realized split.
+    """
+    loss_fn = make_loss_fn(model, cfg, reduce="sum")
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    npods = mesh.shape[pod_axis]
+
+    def _pin(tree):
+        """Constrain grad accumulators to the params' FSDP/TP layout.
+
+        Without this the accumulator (born from jnp.zeros inside the
+        manual-pod region) defaults to REPLICATED, and the cross-pod psum
+        moves full-model bytes instead of shard bytes (measured 16x bloat —
+        EXPERIMENTS.md §Perf iteration 2)."""
+        if grad_specs is None:
+            return tree
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), tree, grad_specs)
+
+    def pod_body(params, tokens, labels, k):
+        # manual over "pod"; auto over data/model. tokens: (max_micro, mb, S)
+        g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+        def cond(c):
+            i = c[0]
+            return i < k[0]
+
+        def body(c):
+            i, g_acc, loss_acc, tok_acc = c
+            t = jax.lax.dynamic_index_in_dim(tokens, i, 0, keepdims=False)
+            l = jax.lax.dynamic_index_in_dim(labels, i, 0, keepdims=False)
+            (lsum, m), g = grad_fn(params, t, l, None)
+            g_acc = _pin(jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                      g_acc, g))
+            return i + 1, g_acc, loss_acc + lsum, tok_acc + m["tokens"]
+
+        _, g_sum, loss_sum, tok_sum = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), g0, jnp.float32(0), jnp.float32(0)))
+
+        if compress_pod_reduce:
+            # int8 + error-free one-shot compression of the DCN hop:
+            # all_gather(int8 q, f32 blockscales) then local dequant-sum.
+            def creduce(g):
+                q, s = quantize_int8(g)
+                qg = jax.lax.all_gather(q, pod_axis)
+                sg = jax.lax.all_gather(s, pod_axis)
+                parts = [dequantize_int8(qg[i], sg[i], g.shape, jnp.float32)
+                         for i in range(npods)]
+                return functools.reduce(jnp.add, parts)
+            g_tot = jax.tree.map(creduce, g_sum)
+        else:
+            g_tot = jax.lax.psum(g_sum, pod_axis)
+        loss_tot = jax.lax.psum(loss_sum, pod_axis)
+        tok_tot = jax.lax.psum(tok_sum, pod_axis)
+        g_tot = jax.tree.map(lambda g: g / jnp.maximum(tok_tot, 1.0), g_tot)
+        return g_tot, loss_tot / jnp.maximum(tok_tot, 1.0), tok_tot
+
+    sharded = jax.shard_map(
+        pod_body, mesh=mesh,
+        in_specs=(P(), P(None, pod_axis, None), P(None, pod_axis, None),
+                  P(pod_axis)),
+        out_specs=(P(), P(), P()),
+        axis_names={pod_axis}, check_vma=False)
+
+    def train_step(state: TrainState, tokens, labels, k_pods):
+        grads, loss, tokens_done = sharded(state.params, tokens, labels, k_pods)
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr,
+                                       weight_decay=weight_decay,
+                                       max_grad_norm=max_grad_norm)
+        return TrainState(params, opt), {"loss": loss, "tokens": tokens_done, **om}
+
+    return train_step

@@ -1,0 +1,156 @@
+"""Integration: trainer loop, checkpoint restart, partitioned step, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, restore, save
+from repro.configs import get_config
+from repro.data import SyntheticStream
+from repro.models import build_model
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         dequantize_int8, quantize_int8)
+from repro.train import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestCheckpoint:
+    def test_roundtrip_exact(self):
+        cfg = get_config("smollm-360m").tiny()
+        model = build_model(cfg)
+        params = model.init(KEY)
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 7, params, {"note": "x"})
+            assert latest_step(d) == 7
+            restored, meta = restore(d, params)
+            assert meta["step"] == 7 and meta["note"] == "x"
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_latest_and_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"w": jnp.ones((4,))}
+            for s in (1, 2, 3):
+                save(d, s, tree)
+            assert latest_step(d) == 3
+
+    def test_trainer_resume_continues_at_step(self):
+        cfg = get_config("smollm-360m").tiny().replace(remat=False)
+        model = build_model(cfg)
+        with tempfile.TemporaryDirectory() as d:
+            t1 = TrainerConfig(steps=4, batch=2, seq=16, ckpt_dir=d,
+                               ckpt_interval=2, log_every=100)
+            Trainer(model, cfg, t1).run()
+            t2 = TrainerConfig(steps=6, batch=2, seq=16, ckpt_dir=d,
+                               ckpt_interval=2, log_every=100)
+            _, hist = Trainer(model, cfg, t2).run()
+            assert hist[0]["step"] == 4  # resumed, not restarted
+
+
+class TestOptim:
+    def test_adamw_decreases_quadratic(self):
+        params = {"w": jnp.ones((8,)) * 5.0}
+        opt = adamw_init(params)
+        lr = cosine_schedule(0.5, 0, 100)
+        for _ in range(50):
+            g = {"w": 2 * params["w"]}
+            params, opt, _ = adamw_update(params, g, opt, lr, weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 1.0
+
+    def test_int8_roundtrip_error_bounded(self):
+        x = jax.random.normal(KEY, (1000,)) * 3
+        q, s = quantize_int8(x)
+        x2 = dequantize_int8(q, s, x.shape, x.dtype)
+        assert float(jnp.max(jnp.abs(x - x2))) < float(jnp.max(jnp.abs(x))) / 64
+
+
+class TestData:
+    def test_deterministic_and_step_addressable(self):
+        cfg = get_config("smollm-360m").tiny()
+        s1 = SyntheticStream(cfg, 32, 4, seed=1)
+        s2 = SyntheticStream(cfg, 32, 4, seed=1)
+        b1, b2 = s1.batch_at(10), s2.batch_at(10)
+        np.testing.assert_array_equal(b1.tokens, b2.tokens)
+        assert not np.array_equal(s1.batch_at(11).tokens, b1.tokens)
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = get_config("smollm-360m").tiny()
+        b = SyntheticStream(cfg, 32, 4, seed=1).batch_at(0)
+        np.testing.assert_array_equal(b.tokens[:, 1:], b.labels[:, :-1])
+
+    def test_vlm_labels_masked_on_patches(self):
+        cfg = get_config("internvl2-76b").tiny()
+        b = SyntheticStream(cfg, 32, 2, seed=0).batch_at(0)
+        assert (b.labels[:, :cfg.num_patches] == -1).all()
+        assert b.extra_embeds.shape == (2, cfg.num_patches, cfg.d_model)
+
+
+class TestLoss:
+    def test_xent_matches_manual(self):
+        from repro.train import softmax_xent
+        logits = jax.random.normal(KEY, (2, 4, 16))
+        labels = jax.random.randint(KEY, (2, 4), 0, 10)
+        loss, m = softmax_xent(logits, labels, vocab_size=10)
+        ref = -jax.nn.log_softmax(logits[..., :10], -1)
+        ref = jnp.take_along_axis(ref, labels[..., None], -1).mean()
+        np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5)
+
+    def test_masked_labels_excluded(self):
+        from repro.train import softmax_xent
+        logits = jax.random.normal(KEY, (1, 4, 16))
+        labels = jnp.array([[2, -1, 3, -1]])
+        loss, m = softmax_xent(logits, labels, vocab_size=10)
+        assert float(m["tokens"]) == 2
+
+
+class TestServing:
+    def test_generate_greedy_deterministic(self):
+        from repro.serve import ServeEngine
+        cfg = get_config("smollm-360m").tiny().replace(remat=False)
+        model = build_model(cfg)
+        params = model.init(KEY)
+        eng = ServeEngine(model, cfg)
+        prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+        out1 = eng.generate(params, prompts, max_new=4)
+        out2 = eng.generate(params, prompts, max_new=4)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        assert out1.shape == (2, 4)
+
+    def test_partitioned_batcher_learns(self):
+        from repro.serve import PartitionedBatcher, ReplicaGroup
+        from repro.sim import Channel, ClusterSim
+        sim = ClusterSim([Channel(10.0, 0.5), Channel(30.0, 5.0)], seed=0)
+        b = PartitionedBatcher([ReplicaGroup("a"), ReplicaGroup("b")], sim=sim)
+        for _ in range(40):
+            b.run_batch(np.zeros((32, 4), np.int32))
+        counts = b.split(32)
+        assert counts[0] > counts[1]  # fast replica gets more requests
+        assert counts.sum() == 32
+
+
+@pytest.mark.slow
+class TestPartitionedTrainStep:
+    def test_variable_pod_microsteps(self):
+        """Run in a subprocess-free way: 1-device mesh with pod axis size 1
+        exercises the shard_map code path; multi-device variant is covered by
+        the dry-run."""
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.transformer import ShardCtx
+        from repro.train.step import init_state, make_partitioned_train_step
+
+        cfg = get_config("smollm-360m").tiny().replace(remat=False)
+        mesh = make_local_mesh(("pod", "data", "model"))
+        model = build_model(cfg, ShardCtx(mesh=mesh, batch_axes=("data",)))
+        state = init_state(model, KEY)
+        step = jax.jit(make_partitioned_train_step(
+            model, cfg, mesh, cosine_schedule(1e-3, 2, 10), max_micro=3))
+        tokens = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (3, 2, 16)).astype(np.int32)
+        k = jnp.array([2], jnp.int32)
+        state2, metrics = step(state, jnp.asarray(tokens), jnp.asarray(tokens), k)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["tokens"]) == 2 * 2 * 16  # 2 microsteps x 2 x 16
