@@ -2,6 +2,7 @@
 
 Public API:
     frontier_2ch / curve_2ch     — paper Figs 1 & 2 (curves + efficient frontier)
+    frontier_kch                 — K-channel frontier (batched kernel sweep)
     optimize_2ch                 — the paper's split procedure for two channels
     optimize_weights             — K-channel simplex generalization
     max_moments_quad             — survival-integral oracle (paper's integrals)
@@ -23,9 +24,11 @@ from .frontier import (
     curve_2ch,
     curve_weights,
     frontier_2ch,
+    frontier_kch,
     moments_for_split,
     pareto_mask,
     select_on_frontier,
+    simplex_candidates,
 )
 from .partitioner import (
     PartitionDecision,

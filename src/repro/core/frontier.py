@@ -4,27 +4,36 @@ For two channels the split is a scalar ``f`` (channel i gets f, channel j gets
 1-f); for K channels it is a simplex weight vector ``w``. For every candidate
 split we evaluate the joint-completion moments (mu, sigma^2) and extract the
 Pareto-efficient subset — the paper's bolded red frontier.
+
+All candidate evaluation is batched: the tracer builds an (F, K) candidate
+matrix and hands it to ``repro.kernels.ops.frontier_moments`` in ONE launch
+(``impl`` selects the pure-XLA path or the Pallas TPU kernel), instead of
+re-running the survival integral per split via vmap and bouncing (F, T, K)
+intermediates through HBM.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from .maxstat import max_moments_quad
 from .normal import scaled_channel_params
 
 __all__ = [
     "FrontierResult",
     "moments_for_split",
+    "simplex_candidates",
     "curve_2ch",
     "curve_weights",
     "pareto_mask",
     "frontier_2ch",
+    "frontier_kch",
     "select_on_frontier",
 ]
 
@@ -50,36 +59,45 @@ class FrontierResult:
 
 
 def moments_for_split(w, mus, sigmas, num: int = 2048) -> Tuple[jax.Array, jax.Array]:
-    """(mu, var) of the joint completion time for one split vector ``w``."""
+    """(mu, var) of the joint completion time for one split vector ``w``.
+
+    Single-split oracle (survival-integral quadrature); batched candidate
+    sweeps go through :func:`curve_weights` / ``ops.frontier_moments``.
+    """
     means, stds = scaled_channel_params(w, mus, sigmas)
     return max_moments_quad(means, stds, num=num)
 
 
-@partial(jax.jit, static_argnames=("num_f", "num_t"))
-def curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048):
+@partial(jax.jit, static_argnames=("num_t", "impl", "block_f"))
+def _batched_moments(W, mus, sigmas, num_t: int, impl: str, block_f: int = 128):
+    return ops.frontier_moments(W, mus, sigmas, num_t=num_t, impl=impl,
+                                block_f=block_f)
+
+
+@partial(jax.jit, static_argnames=("num_f", "num_t", "impl"))
+def curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048,
+              impl: str = "xla"):
     """μ(f), σ²(f) for f in [0,1]: channel i gets f, channel j gets 1-f.
 
     Matches the paper's Figure 1 setup exactly. Returns (f, mu, var) arrays.
+    The whole f-grid is evaluated as one (num_f, 2) batch in a single
+    ``frontier_moments`` launch.
     """
     fs = jnp.linspace(0.0, 1.0, num_f)
-
+    W = jnp.stack([fs, 1.0 - fs], axis=1)
     mus = jnp.stack([jnp.asarray(mu_i, jnp.float32), jnp.asarray(mu_j, jnp.float32)])
     sgs = jnp.stack([jnp.asarray(sigma_i, jnp.float32), jnp.asarray(sigma_j, jnp.float32)])
-
-    def one(f):
-        w = jnp.stack([f, 1.0 - f])
-        return moments_for_split(w, mus, sgs, num=num_t)
-
-    mu, var = jax.vmap(one)(fs)
+    mu, var = _batched_moments(W, mus, sgs, num_t, impl)
     return fs, mu, var
 
 
-@partial(jax.jit, static_argnames=("num_t",))
-def curve_weights(W, mus, sigmas, num_t: int = 2048):
-    """Vectorized (mu, var) over a batch of K-channel weight vectors W: (F, K)."""
-    def one(w):
-        return moments_for_split(w, mus, sigmas, num=num_t)
-    return jax.vmap(one)(W)
+def curve_weights(W, mus, sigmas, num_t: int = 2048, impl: str = "xla",
+                  block_f: int = 128):
+    """Batched (mu, var) over K-channel weight vectors W: (F, K)."""
+    return _batched_moments(jnp.asarray(W, jnp.float32),
+                            jnp.asarray(mus, jnp.float32),
+                            jnp.asarray(sigmas, jnp.float32),
+                            num_t, impl, block_f)
 
 
 def pareto_mask(mu: np.ndarray, var: np.ndarray) -> np.ndarray:
@@ -100,11 +118,91 @@ def pareto_mask(mu: np.ndarray, var: np.ndarray) -> np.ndarray:
     return eff
 
 
-def frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048) -> FrontierResult:
+def frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201,
+                 num_t: int = 2048, impl: str = "xla") -> FrontierResult:
     """Full paper pipeline for two channels: curves + efficient frontier."""
-    fs, mu, var = curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t)
+    fs, mu, var = curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f,
+                            num_t=num_t, impl=impl)
     fs, mu, var = np.asarray(fs), np.asarray(mu), np.asarray(var)
     return FrontierResult(f=fs, mu=mu, var=var, efficient=pareto_mask(mu, var))
+
+
+def _with_fixed(W: np.ndarray, fixed: np.ndarray) -> np.ndarray:
+    """Append any ``fixed`` rows (vertices, centroid) missing from ``W``."""
+    missing = [v for v in fixed if not (np.abs(W - v).sum(axis=1) < 1e-12).any()]
+    return np.concatenate([W, np.stack(missing)], axis=0) if missing else W
+
+
+def _triangular_grid(num_f: int) -> np.ndarray:
+    """Structured 3-simplex grid with at least ``num_f`` points."""
+    m = 1
+    while (m + 1) * (m + 2) // 2 < num_f:
+        m += 1
+    pts = [(i / m, j / m, (m - i - j) / m)
+           for i in range(m + 1) for j in range(m + 1 - i)]
+    return np.asarray(pts, np.float64)
+
+
+def simplex_candidates(k: int, num_f: int,
+                       key: Optional[jax.Array] = None) -> np.ndarray:
+    """(F, k) candidate splits covering the probability simplex.
+
+    K<=3 uses a structured grid (F rounds up to a full grid); larger K uses a
+    Sobol low-discrepancy sequence mapped to the simplex via exponential
+    spacings (falls back to Dirichlet sampling without scipy). Vertices and
+    the centroid are always included so single-channel assignments and the
+    equal split are exact candidates.
+    """
+    if k == 1:
+        return np.ones((1, 1))
+    fixed = np.concatenate([np.eye(k), np.full((1, k), 1.0 / k)], axis=0)
+    if k == 2:
+        fs = np.linspace(0.0, 1.0, max(num_f, 2))
+        return _with_fixed(np.stack([fs, 1.0 - fs], axis=1), fixed)
+    if k == 3:
+        return _with_fixed(_triangular_grid(num_f), fixed)
+    n_rand = max(num_f - fixed.shape[0], 0)
+    if n_rand == 0:
+        return fixed
+    try:
+        from scipy.stats import qmc
+
+        # power-of-2 draw keeps the Sobol balance guarantees; truncate after
+        n_pow2 = 1 << (n_rand - 1).bit_length()
+        u = qmc.Sobol(d=k, scramble=True, seed=0).random(n_pow2)[:n_rand]
+        e = -np.log1p(-np.clip(u, 0.0, 1.0 - 1e-12))  # Exp(1) spacings
+        rand = e / e.sum(axis=1, keepdims=True)
+    except ImportError:  # pragma: no cover - depends on environment
+        rng_key = key if key is not None else jax.random.PRNGKey(0)
+        rand = np.asarray(jax.random.dirichlet(rng_key, jnp.ones((k,)), (n_rand,)))
+    return np.concatenate([fixed, rand], axis=0)
+
+
+def frontier_kch(mus, sigmas, num_f: int = 512, num_t: int = 1024,
+                 lam: float = 0.0, impl: str = "xla", block_f: int = 128,
+                 key: Optional[jax.Array] = None, include_pgd: bool = True,
+                 pgd_steps: int = 120) -> FrontierResult:
+    """K-channel efficient frontier (beyond the paper's 2-channel exposition).
+
+    Generates simplex candidates (structured grid for K<=3, Sobol/Dirichlet
+    for larger K, plus the PGD solution of the scalarized objective so the
+    frontier always contains an optimized point), evaluates all of them in one
+    batched ``frontier_moments`` launch, and extracts the Pareto subset.
+    """
+    mus = np.asarray(mus, np.float64)
+    sigmas = np.asarray(sigmas, np.float64)
+    k = mus.shape[0]
+    W = simplex_candidates(k, num_f, key=key)
+    if include_pgd and k > 1:
+        from .partitioner import optimize_weights  # lazy: avoids import cycle
+
+        dec = optimize_weights(mus, sigmas, lam=lam, steps=pgd_steps,
+                               num_t=num_t, restarts=0, impl=impl)
+        W = np.concatenate([W, dec.weights[None, :]], axis=0)
+    mu, var = curve_weights(W, mus, sigmas, num_t=num_t, impl=impl,
+                            block_f=block_f)
+    mu, var = np.asarray(mu), np.asarray(var)
+    return FrontierResult(f=W, mu=mu, var=var, efficient=pareto_mask(mu, var))
 
 
 def select_on_frontier(result: FrontierResult, lam: float = 0.0):

@@ -10,6 +10,11 @@ Three tiers, all pure JAX:
 * Baselines: :func:`equal_split` (map-reduce style, the paper's foil) and
   :func:`inverse_mu_split` (deterministic load balancing that ignores variance).
 
+Every candidate-moment evaluation routes through
+``repro.kernels.ops.frontier_moments``: the PGD objective differentiates the
+(one-row) batched survival integral, multi-start solutions are scored in a
+single batched launch, and ``impl`` selects XLA vs the Pallas TPU kernel.
+
 The scheduler layer (repro.sched) consumes these to assign integer workloads.
 """
 from __future__ import annotations
@@ -22,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from .frontier import frontier_2ch, select_on_frontier
 from .maxstat import clark_max_moments_seq, max_moments_quad
 from .normal import scaled_channel_params
@@ -65,16 +71,23 @@ def inverse_mu_split(mus) -> jnp.ndarray:
 
 
 def objective(w, mus, sigmas, lam: float, num_t: int = 1024):
-    """Scalarized mean-variance objective on the joint completion time."""
-    means, stds = scaled_channel_params(w, mus, sigmas)
-    mu, var = max_moments_quad(means, stds, num=num_t)
-    return mu + lam * var
+    """Scalarized mean-variance objective on the joint completion time.
+
+    Evaluated as a one-row batch through ``frontier_moments`` (xla impl — the
+    differentiable path), so the PGD gradient descends exactly the function
+    the batched candidate sweeps compute.
+    """
+    mu, var = ops.frontier_moments(jnp.asarray(w)[None, :], mus, sigmas,
+                                   num_t=num_t, impl="xla")
+    return (mu + lam * var)[0]
 
 
 def optimize_2ch(mu_i, sigma_i, mu_j, sigma_j, lam: float = 0.0,
-                 num_f: int = 401, num_t: int = 2048) -> PartitionDecision:
+                 num_f: int = 401, num_t: int = 2048,
+                 impl: str = "xla") -> PartitionDecision:
     """Paper's two-channel procedure: dense f-grid, frontier, scalarized pick."""
-    res = frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t)
+    res = frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t,
+                       impl=impl)
     _, (f, mu, var) = select_on_frontier(res, lam=lam)
     w = np.asarray([f, 1.0 - f], dtype=np.float64)
     return PartitionDecision(weights=w, mu=float(mu), var=float(var), method="grid-2ch")
@@ -107,34 +120,52 @@ def _pgd(w0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024, lr: float = 
     return jax.lax.fori_loop(0, steps, body, w0)
 
 
+@partial(jax.jit, static_argnames=("steps", "num_t"))
+def _pgd_multi(W0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024):
+    """All starts solved in one vmapped PGD (no per-start Python loop)."""
+    return jax.vmap(lambda w0: _pgd(w0, mus, sigmas, lam, steps=steps,
+                                    num_t=num_t))(W0)
+
+
 def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      num_t: int = 1024, restarts: int = 3,
-                     key: Optional[jax.Array] = None) -> PartitionDecision:
+                     key: Optional[jax.Array] = None, impl: str = "xla",
+                     warm_start: Optional[np.ndarray] = None,
+                     block_f: int = 128) -> PartitionDecision:
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
-    Multi-start PGD: deterministic starts at equal-split and inverse-mu plus
-    random Dirichlet restarts; returns the best by scalarized objective.
+    Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
+    optional ``warm_start`` (e.g. the balancer's previous solve — posteriors
+    move a little per refresh tick, so the old optimum is a near-solution),
+    plus random Dirichlet restarts. All starts run as one vmapped solve and
+    all final candidates are scored in a single batched ``frontier_moments``
+    launch under the requested ``impl``.
     """
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
     k = mus.shape[0]
     starts = [equal_split(k), inverse_mu_split(mus)]
+    if warm_start is not None:
+        ws = jnp.asarray(warm_start, jnp.float32)
+        starts.insert(0, jnp.maximum(ws, 0.0) / jnp.maximum(jnp.sum(ws), 1e-12))
     if restarts > 0:
         key = key if key is not None else jax.random.PRNGKey(0)
         dirichlet = jax.random.dirichlet(key, jnp.ones((k,)), (restarts,))
         starts += [dirichlet[i] for i in range(restarts)]
 
-    best_w, best_obj = None, np.inf
-    for w0 in starts:
-        w = _pgd(w0, mus, sigmas, jnp.float32(lam), steps=steps, num_t=num_t)
-        val = float(objective(w, mus, sigmas, lam, num_t))
-        if val < best_obj:
-            best_obj, best_w = val, w
-
-    means, stds = scaled_channel_params(best_w, mus, sigmas)
-    mu, var = max_moments_quad(means, stds, num=2048)
+    W0 = jnp.stack(starts)
+    Wf = _pgd_multi(W0, mus, sigmas, jnp.float32(lam), steps=steps, num_t=num_t)
+    mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=num_t,
+                                       impl=impl, block_f=block_f)
+    score = np.asarray(mu_c) + lam * np.asarray(var_c)
+    best_w = Wf[int(np.argmin(score))]
+    # report moments at oracle resolution (one extra single-row launch)
+    mu_f, var_f = ops.frontier_moments(best_w[None, :], mus, sigmas,
+                                       num_t=max(num_t, 2048), impl=impl,
+                                       block_f=block_f)
     return PartitionDecision(weights=np.asarray(best_w, np.float64),
-                             mu=float(mu), var=float(var), method="pgd-simplex")
+                             mu=float(mu_f[0]), var=float(var_f[0]),
+                             method="pgd-simplex")
 
 
 def predict_moments(w, mus, sigmas, exact: bool = True, num_t: int = 2048) -> Tuple[float, float]:

@@ -26,6 +26,8 @@ from jax.experimental import pallas as pl
 
 __all__ = ["frontier_grid"]
 
+from .ref import _CDF_FLOOR  # single source: kernel must match its oracle
+
 _SQRT2 = 1.4142135623730951
 
 
@@ -50,7 +52,7 @@ def _frontier_kernel(w_ref, mu_ref, sg_ref, mu_out_ref, var_out_ref, *,
         cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
         point = (ts >= mean_k).astype(jnp.float32)
         cdf = jnp.where(ok, cdf, point)
-        return logF + jnp.log(jnp.clip(cdf, 1e-38, 1.0))
+        return logF + jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0))
 
     logF = jax.lax.fori_loop(0, num_k, add_channel,
                              jnp.zeros_like(ts))

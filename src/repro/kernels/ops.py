@@ -187,17 +187,38 @@ def rmsnorm(x, w, *, eps: float = 1e-6, impl: str = "xla"):
 
 
 def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
-                     block_f: int = 128):
-    """Batched (mu, var) over candidate splits W: (F, K)."""
+                     block_f: int = 128, z: float = 10.0):
+    """Batched (mu, var) over candidate splits W: (F, K).
+
+    The single entry point for candidate-split moment evaluation: the frontier
+    tracers, the PGD objective, the balancer tick and the fleet benchmarks all
+    route here. F is padded to a ``block_f`` multiple internally (padding rows
+    repeat row 0 and are sliced off), so callers never see the kernel's
+    divisibility requirement. The "xla" path streams candidates through
+    lax.map over ``block_f``-row blocks, bounding peak memory at
+    O(block_f * num_t * K) instead of materializing the full (F, T, K)
+    intermediate — that is what lets a K=1024 x F=4096 tick run at all.
+    """
     _check(impl)
-    if impl == "xla":
-        return ref.frontier_grid_ref(W, mus, sigmas, num_t=num_t)
+    import jax
+
+    W = jnp.asarray(W, jnp.float32)
     F = W.shape[0]
-    bf = min(block_f, F)
+    bf = max(min(block_f, F), 1)
     pad = (-F) % bf
+    if impl == "xla":
+        if F <= bf:
+            return ref.frontier_grid_ref(W, mus, sigmas, num_t=num_t, z=z)
+        if pad:
+            W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
+        blocks = W.reshape(-1, bf, W.shape[1])
+        mu, var = jax.lax.map(
+            lambda wb: ref.frontier_grid_ref(wb, mus, sigmas, num_t=num_t, z=z),
+            blocks)
+        return mu.reshape(-1)[:F], var.reshape(-1)[:F]
     if pad:
         W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
-    mu, var = _fg.frontier_grid(W, mus, sigmas, num_t=num_t, block_f=bf,
+    mu, var = _fg.frontier_grid(W, mus, sigmas, num_t=num_t, z=z, block_f=bf,
                                 interpret=(impl == "pallas_interpret"))
     return mu[:F], var[:F]
 

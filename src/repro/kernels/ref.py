@@ -13,6 +13,11 @@ import jax.numpy as jnp
 
 __all__ = ["frontier_grid_ref", "flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref", "decode_attention_ref"]
 
+# log-CDF clamp floor. Must be a NORMAL f32 (>= 1.18e-38): XLA CPU flushes
+# subnormals to zero, and a flushed floor turns the log/clip VJP into
+# inf * 0 = NaN — the PGD solver differentiates through this function.
+_CDF_FLOOR = 1e-37
+
 
 def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
     """(mu, var) of the joint max-completion time for each candidate split.
@@ -35,7 +40,7 @@ def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
     cdf = 0.5 * (1.0 + jax.lax.erf(zscore / jnp.sqrt(2.0).astype(jnp.float32)))
     point = (ts[:, :, None] >= means[:, None, :]).astype(jnp.float32)
     cdf = jnp.where(stds[:, None, :] > 0, cdf, point)
-    logF = jnp.sum(jnp.log(jnp.clip(cdf, 1e-38, 1.0)), axis=-1)  # (F, T)
+    logF = jnp.sum(jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0)), axis=-1)  # (F, T)
     surv = 1.0 - jnp.exp(logF)
 
     dt = tmax / (num_t - 1)

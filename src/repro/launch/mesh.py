@@ -13,21 +13,31 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; 0.4.x predates them
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_local_mesh", "batch_axes"]
+
+
+def _make_mesh(shape, axes):
+    """make_mesh with Auto axis types when the installed jax supports them."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(axes: Tuple[str, ...] = ("data", "model")):
     """1-device mesh with production axis names (CPU smoke tests)."""
-    return jax.make_mesh((1,) * len(axes), axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh((1,) * len(axes), axes)
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

@@ -160,6 +160,24 @@ def _group_size(defn: str) -> Tuple[int, bool]:
     return 1, False
 
 
+def _operand_names(operand_text: str) -> List[str]:
+    """Operand instruction names from an operand list.
+
+    Handles typed ("f32[8,32]{1,0} %name, ..."), bare ("name.1, other.1"),
+    and mixed styles. Shape/layout literals are stripped first because their
+    commas would break a naive split; the last token of each remaining
+    segment is the instruction name (with or without a "%" prefix).
+    """
+    text = _SHAPE_RE.sub("", operand_text)
+    text = re.sub(r"\{[\d,]*\}", "", text)
+    names = []
+    for seg in text.split(","):
+        seg = seg.strip()
+        if seg:
+            names.append(seg.split()[-1].lstrip("%"))
+    return names
+
+
 def _dot_flops(op: _Op, comp: _Computation) -> float:
     out_dims = _first_shape_dims(op.defn) or []
     out_elems = 1
@@ -169,9 +187,13 @@ def _dot_flops(op: _Op, comp: _Computation) -> float:
     operands = _OPERANDS_RE.search(op.defn)
     contract = 1
     if mlhs and operands:
-        first = operands.group(1).split(",")[0].strip().lstrip("%")
-        lhs = comp.ops.get(first)
-        lhs_dims = _first_shape_dims(lhs.defn) if lhs else None
+        otext = operands.group(1)
+        # typed dumps carry the lhs shape inline; bare dumps need the producer
+        lhs_dims = _first_shape_dims(otext)
+        if lhs_dims is None:
+            names = _operand_names(otext)
+            lhs = comp.ops.get(names[0]) if names else None
+            lhs_dims = _first_shape_dims(lhs.defn) if lhs else None
         if lhs_dims:
             for idx in mlhs.group(1).split(","):
                 if idx:
@@ -298,21 +320,30 @@ def analyze_hlo(hlo: str) -> HloStats:
                 operands = _OPERANDS_RE.search(op.defn)
                 touched = op.out_bytes
                 if op.opcode == "dynamic-update-slice" and operands:
-                    parts = [o.strip().lstrip("%")
-                             for o in operands.group(1).split(",")]
-                    if len(parts) >= 2 and parts[1] in comp.ops:
-                        touched = comp.ops[parts[1]].out_bytes
+                    otext = operands.group(1)
+                    shapes = _SHAPE_RE.findall(otext)
+                    if len(shapes) >= 2:  # typed dump: update shape is inline
+                        touched = _shape_bytes(
+                            "{}[{}]".format(shapes[1][0], shapes[1][1]))
+                    else:
+                        parts = _operand_names(otext)
+                        if len(parts) >= 2 and parts[1] in comp.ops:
+                            touched = comp.ops[parts[1]].out_bytes
                 stats.hbm_bytes += mult * 2 * touched
             else:
-                # operand bytes: sum of producer output bytes.
+                # operand bytes: inline shapes when the dump carries them,
+                # else sum of producer output bytes.
                 operands = _OPERANDS_RE.search(op.defn)
                 in_bytes = 0
                 if operands:
-                    for o in operands.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        prod = comp.ops.get(o)
-                        if prod is not None:
-                            in_bytes += prod.out_bytes
+                    otext = operands.group(1)
+                    if _SHAPE_RE.search(otext):
+                        in_bytes = _shape_bytes(otext)
+                    else:
+                        for o in _operand_names(otext):
+                            prod = comp.ops.get(o)
+                            if prod is not None:
+                                in_bytes += prod.out_bytes
                 if op.opcode == "fusion":
                     # TPU-fusion traffic model: a fusion streams ~O(out) data;
                     # operands that are whole loop-carried stacks (sliced

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 from ..kernels import ops
 from .layers import dense_init, dtype_of, rms_norm, rmsnorm_init, rope
@@ -163,7 +164,7 @@ def sharded_lse_decode(q, k_cache, v_cache, valid, group, *, axes, mesh,
 
     manual = (set(axes) if not isinstance(axes, str) else {axes})
     manual |= set(extra_manual)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(None, None, None), seq_spec, seq_spec, P(axes)),
         out_specs=P(None, None, None),

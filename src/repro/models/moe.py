@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 from .layers import dense_init, dtype_of
 
@@ -162,7 +163,7 @@ def moe_apply(p, x, cfg: ModelConfig, mesh=None, *, tp_axis: str = "model",
         # prefill); tiny decode batches replicate instead (B=1 long-context).
         xspec = (P(token_axes, None) if token_axes and xt.shape[0] % prod == 0
                  else P(None, None))
-        y = jax.shard_map(
+        y = shard_map(
             body, mesh=mesh,
             in_specs=(xspec, P(None, None), espec, espec, dspec),
             out_specs=xspec,

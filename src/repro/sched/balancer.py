@@ -53,6 +53,8 @@ class UncertaintyAwareBalancer:
     min_weight: float = 0.0
     refresh_every: int = 1      # re-solve the frontier every N observations
     pgd_steps: int = 150        # K-channel solver budget (warm-started)
+    impl: str = "xla"           # frontier_moments backend: xla | pallas[_interpret]
+    num_t: int = 1024           # survival-integral resolution per candidate
     _nig: NIGState = field(default=None, repr=False)
     _cached_w: np.ndarray = field(default=None, repr=False)
     _obs_count: int = 0
@@ -98,12 +100,19 @@ class UncertaintyAwareBalancer:
                 return self._cached_w.copy()
             if k == 2:
                 w = optimize_2ch(mus[0], sigmas[0], mus[1], sigmas[1],
-                                 lam=self.lam).weights
+                                 lam=self.lam, impl=self.impl).weights
             else:
                 restarts = 2 if k <= 16 else 0
+                # warm-start from the previous solve: posteriors move a
+                # little per tick, so the old optimum is a near-solution
+                warm = (self._cached_w
+                        if self._cached_w is not None
+                        and len(self._cached_w) == k else None)
                 w = optimize_weights(mus, sigmas, lam=self.lam,
                                      steps=self.pgd_steps,
-                                     restarts=restarts).weights
+                                     restarts=restarts,
+                                     num_t=self.num_t, impl=self.impl,
+                                     warm_start=warm).weights
             self._cached_w = np.asarray(w, np.float64)
         if self.min_weight > 0:
             w = np.maximum(w, self.min_weight)
@@ -149,13 +158,14 @@ class UncertaintyAwareBalancer:
     # ------------------------------------------------------------ persistence
     def state_dict(self) -> dict:
         return {"num_channels": self.num_channels, "lam": self.lam,
-                "policy": self.policy,
+                "policy": self.policy, "impl": self.impl, "num_t": self.num_t,
                 "nig": {k: np.asarray(v).tolist() for k, v in self._nig._asdict().items()}}
 
     @classmethod
     def from_state_dict(cls, d: dict) -> "UncertaintyAwareBalancer":
         import jax.numpy as jnp
-        b = cls(num_channels=d["num_channels"], lam=d["lam"], policy=d["policy"])
+        b = cls(num_channels=d["num_channels"], lam=d["lam"], policy=d["policy"],
+                impl=d.get("impl", "xla"), num_t=d.get("num_t", 1024))
         b._nig = NIGState(**{k: jnp.asarray(v, jnp.float32)
                              for k, v in d["nig"].items()})
         return b

@@ -68,11 +68,20 @@ class ClusterSim:
         """Execute one partitioned step: returns (join_time, per-channel durations).
 
         join_time = max over active channels (the paper's completion time).
+        All-Normal fleets take a single vectorized draw — at 1024 channels the
+        per-channel Python loop dominated the fleet benchmarks, not the solver.
         """
         self.step_count += 1
         w = np.asarray(weights, np.float64)
-        durs = np.array([c.sample(self.rng, w[i])
-                         for i, c in enumerate(self.channels)])
+        if all(c.dist == "normal" for c in self.channels):
+            mu = np.asarray([c.mu for c in self.channels])
+            sigma = np.asarray([c.sigma for c in self.channels])
+            active = np.asarray([not c.failed for c in self.channels]) & (w > 0)
+            rates = self.rng.normal(mu, sigma)
+            durs = np.where(active, np.maximum(w * rates, 1e-9), 0.0)
+        else:
+            durs = np.array([c.sample(self.rng, w[i])
+                             for i, c in enumerate(self.channels)])
         for c in self.channels:  # slow drift (multi-tenant hotspots)
             if c.drift:
                 c.mu *= (1.0 + c.drift)

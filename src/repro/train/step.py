@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 from ..optim.adamw import AdamWState, adamw_init, adamw_update
 from ..optim.compress import dequantize_int8, quantize_int8
@@ -180,7 +181,7 @@ def make_partitioned_train_step(model, cfg: ModelConfig, mesh, lr, *,
         g_tot = jax.tree.map(lambda g: g / jnp.maximum(tok_tot, 1.0), g_tot)
         return g_tot, loss_tot / jnp.maximum(tok_tot, 1.0), tok_tot
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         pod_body, mesh=mesh,
         in_specs=(P(), P(None, pod_axis, None), P(None, pod_axis, None),
                   P(pod_axis)),

@@ -1,0 +1,70 @@
+"""Degraded stand-in for ``hypothesis`` when it is not installed.
+
+The real dependency is recorded in requirements-dev.txt; CI images that lack
+it must still *collect and run* the property tests. This shim replays each
+``@given`` property as a fixed-seed parametrized sweep: every strategy grows a
+``sample(rng)`` method and the decorator draws ``max_examples`` (capped) seeded
+examples per test. No shrinking, no edge-case database — strictly weaker than
+hypothesis, but deterministic and better than losing the tests entirely.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_FALLBACK_CAP = 10  # examples per property without real hypothesis
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = _FALLBACK_CAP, deadline=None, **_ignored):
+    """Records the example budget on the (already-``given``-wrapped) test."""
+
+    def apply(fn):
+        fn._max_examples = min(max_examples, _FALLBACK_CAP)
+        return fn
+
+    return apply
+
+
+def given(*strategies):
+    """Fixed-seed replacement: run the property on seeded random draws."""
+
+    def decorate(fn):
+        # no functools.wraps: pytest must NOT see the original signature,
+        # or it would treat the strategy-filled parameters as fixtures
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _FALLBACK_CAP)
+            for example in range(n):
+                rng = np.random.default_rng(example)
+                drawn = tuple(s.sample(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = _FALLBACK_CAP
+        return wrapper
+
+    return decorate

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed sweeps (see requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     NIGState, clark_max_moments_2, clark_max_moments_seq, equal_split,

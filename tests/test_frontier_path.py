@@ -1,0 +1,164 @@
+"""The kernel-backed solve path: batched ``ops.frontier_moments`` as the one
+moment evaluator — padding glue, impl agreement, K-channel frontier vs the
+survival-integral oracle, and warm-started balancer refreshes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (clark_max_moments_seq, frontier_2ch, frontier_kch,
+                        max_moments_quad, optimize_weights, simplex_candidates)
+from repro.kernels import ops, ref
+from repro.sched import UncertaintyAwareBalancer
+
+
+def _problem(k, seed=0, cov=(0.05, 0.3)):
+    rng = np.random.default_rng(seed)
+    mus = rng.uniform(10, 40, k)
+    sigmas = mus * rng.uniform(*cov, k)
+    return mus, sigmas
+
+
+def _candidates(F, k, seed=0):
+    rng = np.random.default_rng(seed)
+    e = rng.exponential(size=(F, k))
+    return e / e.sum(axis=1, keepdims=True)
+
+
+class TestFrontierMomentsPadding:
+    @pytest.mark.parametrize("F,block_f", [(7, 64), (100, 64), (129, 128),
+                                           (128, 128), (1, 128)])
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    def test_any_F_matches_unblocked_ref(self, F, block_f, impl):
+        """ops.frontier_moments owns the padding: F need not divide block_f."""
+        k = 5
+        W = _candidates(F, k)
+        mus, sigmas = _problem(k)
+        mu, var = ops.frontier_moments(jnp.asarray(W, jnp.float32),
+                                       jnp.asarray(mus, jnp.float32),
+                                       jnp.asarray(sigmas, jnp.float32),
+                                       num_t=512, impl=impl, block_f=block_f)
+        assert mu.shape == (F,) and var.shape == (F,)
+        m_ref, v_ref = ref.frontier_grid_ref(W, mus, sigmas, num_t=512)
+        np.testing.assert_allclose(mu, m_ref, rtol=1e-4)
+        np.testing.assert_allclose(var, v_ref, rtol=1e-2, atol=1e-4)
+
+    def test_impls_agree(self):
+        """Acceptance: pallas_interpret vs xla to <= 1e-3 relative."""
+        k, F = 8, 333
+        W = _candidates(F, k, seed=3)
+        mus, sigmas = _problem(k, seed=3)
+        args = (jnp.asarray(W, jnp.float32), jnp.asarray(mus, jnp.float32),
+                jnp.asarray(sigmas, jnp.float32))
+        m_x, v_x = ops.frontier_moments(*args, num_t=1024, impl="xla")
+        m_p, v_p = ops.frontier_moments(*args, num_t=1024,
+                                        impl="pallas_interpret", block_f=128)
+        np.testing.assert_allclose(m_p, m_x, rtol=1e-3)
+        np.testing.assert_allclose(v_p, v_x, rtol=1e-3, atol=1e-5)
+
+    def test_frontier_2ch_impls_agree(self):
+        r_x = frontier_2ch(30.0, 2.0, 20.0, 6.0, num_f=101, impl="xla")
+        r_p = frontier_2ch(30.0, 2.0, 20.0, 6.0, num_f=101,
+                           impl="pallas_interpret")
+        np.testing.assert_allclose(r_p.mu, r_x.mu, rtol=1e-3)
+        np.testing.assert_allclose(r_p.var, r_x.var, rtol=1e-3, atol=1e-6)
+        assert (r_p.efficient == r_x.efficient).all()
+
+
+class TestFrontierKch:
+    @pytest.mark.parametrize("k", [2, 3, 6, 16])
+    def test_matches_quad_oracle(self, k):
+        """Batched kernel moments == the paper's survival integral, for every
+        K — including K > 2 where sequential Clark is only approximate."""
+        mus, sigmas = _problem(k, seed=k)
+        res = frontier_kch(mus, sigmas, num_f=48, num_t=2048,
+                           include_pgd=False)
+        assert res.f.shape[1] == k
+        np.testing.assert_allclose(res.f.sum(axis=1), 1.0, atol=1e-6)
+        assert res.efficient.any()
+        idx = np.unique(np.linspace(0, len(res.mu) - 1, 7).astype(int))
+        for i in idx:
+            m, v = max_moments_quad(jnp.asarray(res.f[i] * mus, jnp.float32),
+                                    jnp.asarray(res.f[i] * sigmas, jnp.float32),
+                                    num=2048)
+            np.testing.assert_allclose(res.mu[i], float(m), rtol=1e-3)
+            np.testing.assert_allclose(res.var[i], float(v), rtol=1e-2,
+                                       atol=1e-4)
+
+    def test_oracle_tighter_than_sequential_clark(self):
+        """For K>2 the batched integral stays with the oracle where the Clark
+        fold drifts (the reason the solve path uses the kernel, not Clark)."""
+        k = 5
+        mus = np.full(k, 20.0)           # identical channels: Clark's worst case
+        sigmas = np.full(k, 5.0)
+        w = np.full(k, 1.0 / k)
+        m_q, _ = max_moments_quad(jnp.asarray(w * mus, jnp.float32),
+                                  jnp.asarray(w * sigmas, jnp.float32), num=4096)
+        m_c, _ = clark_max_moments_seq(jnp.asarray(w * mus, jnp.float32),
+                                       jnp.asarray(w * sigmas, jnp.float32))
+        m_k, _ = ops.frontier_moments(jnp.asarray(w, jnp.float32)[None, :],
+                                      jnp.asarray(mus, jnp.float32),
+                                      jnp.asarray(sigmas, jnp.float32),
+                                      num_t=4096)
+        kernel_err = abs(float(m_k[0]) - float(m_q)) / float(m_q)
+        clark_err = abs(float(m_c) - float(m_q)) / float(m_q)
+        assert kernel_err < 1e-3
+        assert kernel_err < clark_err
+
+    def test_include_pgd_appends_optimized_candidate(self):
+        mus, sigmas = _problem(6, seed=1)
+        grid_only = frontier_kch(mus, sigmas, num_f=48, num_t=512,
+                                 include_pgd=False)
+        with_pgd = frontier_kch(mus, sigmas, num_f=48, num_t=512,
+                                include_pgd=True, pgd_steps=100)
+        assert with_pgd.f.shape[0] == grid_only.f.shape[0] + 1
+        # the PGD point can only improve the best scalarized value
+        assert with_pgd.mu.min() <= grid_only.mu.min() + 1e-6
+
+    def test_simplex_candidates_cover_vertices(self):
+        W = simplex_candidates(8, 64)
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9)
+        assert (W >= 0).all()
+        for v in np.eye(8):   # single-channel assignments are exact candidates
+            assert (np.abs(W - v).sum(axis=1) < 1e-12).any()
+
+
+class TestWarmStart:
+    def test_warm_start_converges_to_cold_solution(self):
+        mus, sigmas = _problem(8, seed=5)
+        cold = optimize_weights(mus, sigmas, lam=0.05, steps=150, restarts=2)
+        rng = np.random.default_rng(0)
+        near = cold.weights + rng.normal(0, 0.02, 8)
+        warm = optimize_weights(mus, sigmas, lam=0.05, steps=150, restarts=2,
+                                warm_start=near)
+        np.testing.assert_allclose(warm.weights, cold.weights, atol=2e-2)
+        assert warm.mu <= cold.mu * 1.01
+
+    def test_balancer_warm_refresh_matches_cold_solve(self):
+        """A refresh tick warm-started from _cached_w must land on the same
+        weights as a cold solve from the identical posterior state."""
+        b = UncertaintyAwareBalancer(6, lam=0.05, refresh_every=1,
+                                     pgd_steps=120)
+        rng = np.random.default_rng(2)
+        true_mu = rng.uniform(10, 30, 6)
+        for _ in range(15):
+            w = b.weights()
+            durs = np.maximum(w * rng.normal(true_mu, 0.05 * true_mu), 1e-9)
+            b.observe(durs, w)
+        w_warm = b.weights()          # warm-started from the previous solve
+        cold = UncertaintyAwareBalancer.from_state_dict(b.state_dict())
+        w_cold = cold.weights()       # same posteriors, no cached solve
+        np.testing.assert_allclose(w_warm, w_cold, atol=2e-2)
+
+    def test_balancer_impl_knob(self):
+        """impl="pallas_interpret" drives the same decisions as "xla"."""
+        obs = [np.array([12.0, 20.0, 28.0]), np.array([11.5, 21.0, 27.0]),
+               np.array([12.5, 19.5, 29.0])]
+        ws = {}
+        for impl in ("xla", "pallas_interpret"):
+            b = UncertaintyAwareBalancer(3, lam=0.05, impl=impl, pgd_steps=80)
+            for d in obs:
+                b.observe(d, np.full(3, 1.0 / 3))
+            ws[impl] = b.weights()
+        np.testing.assert_allclose(ws["pallas_interpret"], ws["xla"],
+                                   atol=1e-3)
