@@ -2,7 +2,7 @@
 channels) with online Bayesian estimation, straggler injection and elastic
 recovery — the 1000-node operating regime the framework targets.
 
-Two sections:
+Three sections:
 
 1. Policy comparison on realized join-time mean / variance / p99:
      equal        — map-reduce style uniform split (paper's foil),
@@ -12,23 +12,69 @@ Two sections:
    Also benchmarks the scheduler tick cost (posterior update + re-partition)
    at each fleet size — the number that must stay off the step critical path.
 
-2. Rebalance-tick kernel comparison at K=1024 channels x F=4096 candidate
-   splits: the legacy vmap-over-``max_moments_quad`` path (which materializes
-   the (F, T, K) survival grid in HBM — it cannot even run unchunked at this
-   size) against the batched ``ops.frontier_moments`` path under both the
-   "xla" and "pallas_interpret" impls. On real TPU hardware ``impl="pallas"``
-   runs the same kernel compiled (follow-up: ROADMAP).
+2. Rebalance-tick FORWARD kernel comparison at K=1024 channels x F=4096
+   candidate splits: the legacy vmap-over-``max_moments_quad`` path (which
+   materializes the (F, T, K) survival grid in HBM — it cannot even run
+   unchunked at this size) against the batched ``ops.frontier_moments`` path.
+
+3. Rebalance-tick PGD comparison (forward + gradient) at the same scale: the
+   PR 1 objective — jax.grad autodiff-replayed through the chunked quadrature
+   — against the fused analytic-VJP launch (``frontier_moments_with_grads``).
+   This is the number the custom-VJP work buys; the acceptance bar is the
+   fused path >= 1.5x the autodiff path at equal num_t.
+
+``--json`` additionally writes machine-readable ``BENCH_cluster_scale.json``
+(median/p90 per tick, impl, block_f, speedups) at the repo root so the perf
+trajectory is tracked from this PR on; ``scripts/bench_smoke.sh`` runs the
+tick sections at reduced scale.
 """
+import argparse
+import json
+import os
 import time
 
 import numpy as np
 
-from .common import emit, save_table, timeit
+from .common import emit, save_table, timeit, timeit_stats
 
 TICK_K = 1024      # channels per rebalance tick (fleet size)
 TICK_F = 4096      # candidate splits per tick
 TICK_T = 256       # survival-integral points per candidate
 VMAP_CHUNK = 512   # legacy path OOMs beyond this (4 GB+ intermediates)
+PGD_LAM = 0.05     # scalarization weight in the PGD-tick objective
+
+_JSON_ENTRIES = []
+
+
+def _record(name, impl, block_f, num_k, num_f, num_t, med_us, p90_us,
+            repeats):
+    # repeats is recorded because p90 of 1-2 samples is just the max/only
+    # sample — trajectory readers need to know how much tail is in the tail
+    _JSON_ENTRIES.append({
+        "name": name, "impl": impl, "block_f": block_f, "K": num_k,
+        "F": num_f, "num_t": num_t, "median_us": round(med_us, 2),
+        "p90_us": round(p90_us, 2), "repeats": repeats})
+
+
+def _make_bench(rows, prefix, emit_prefix, num_k, num_f, num_t):
+    """Shared timing/record closure for the tick sections: times a blocking
+    thunk, appends the CSV row, records the JSON entry and emits the line."""
+    import jax
+
+    def bench(name, impl, block_f, fn, repeats=2):
+        result = {}
+
+        def once():  # keep the last timed output: no extra eval to fetch it
+            result["v"] = jax.block_until_ready(fn())
+
+        med, p90 = timeit_stats(once, repeats=repeats, warmup=1)
+        rows.append((num_k, num_f, num_t, f"{prefix}{name}", med))
+        _record(f"{prefix}{name}", impl, block_f, num_k, num_f, num_t,
+                med, p90, repeats)
+        emit(f"{emit_prefix}{num_k}ch_{num_f}cand_{name}", med)
+        return result["v"]
+
+    return bench
 
 
 def _run_policy(n, policy, steps=120, seed=0, inject=True):
@@ -56,51 +102,52 @@ def _run_policy(n, policy, steps=120, seed=0, inject=True):
             np.mean(tick_costs) * 1e6)
 
 
-def tick_kernel_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T):
-    """One rebalance tick's candidate sweep, three ways. Returns the rows."""
-    import jax
+def _tick_problem(num_k, num_f, seed=0):
     import jax.numpy as jnp
 
-    from repro.core.maxstat import max_moments_quad
-    from repro.kernels import ops
-
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     e = rng.exponential(size=(num_f, num_k))
     W = jnp.asarray(e / e.sum(1, keepdims=True), jnp.float32)
     mus = jnp.asarray(rng.uniform(10, 40, num_k), jnp.float32)
     sgs = jnp.asarray(mus * rng.uniform(0.02, 0.3, num_k), jnp.float32)
+    return W, mus, sgs
 
+
+def tick_kernel_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
+                        with_interpret=True):
+    """One rebalance tick's FORWARD candidate sweep, three ways."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.maxstat import max_moments_quad
+    from repro.kernels import autotune, ops
+
+    W, mus, sgs = _tick_problem(num_k, num_f)
     rows = []
-
-    def bench(name, fn, repeats=2):
-        result = {}
-
-        def once():  # keep the last timed output: no extra eval to fetch it
-            result["v"] = jax.block_until_ready(fn())
-
-        us = timeit(once, repeats=repeats, warmup=1)
-        rows.append((num_k, num_f, num_t, name, us))
-        emit(f"tick_{num_k}ch_{num_f}cand_{name}", us)
-        return result["v"]
+    bench = _make_bench(rows, "fwd_tick_", "tick_", num_k, num_f, num_t)
 
     # legacy: vmap the survival-integral oracle over candidates. Materializes
     # (F, T, K); at 4096x256x1024 that is >4 GB per intermediate, so it MUST
     # be driven in chunks — the HBM bounce the kernel removes.
     vq = jax.jit(jax.vmap(lambda w: max_moments_quad(w * mus, w * sgs,
                                                      num=num_t)))
+    chunk = min(VMAP_CHUNK, num_f)
 
     def vmap_quad():
-        outs = [vq(W[i:i + VMAP_CHUNK]) for i in range(0, num_f, VMAP_CHUNK)]
+        outs = [vq(W[i:i + chunk]) for i in range(0, num_f, chunk)]
         return (jnp.concatenate([o[0] for o in outs]),
                 jnp.concatenate([o[1] for o in outs]))
 
-    mu_ref, var_ref = bench(f"vmap_quad_chunked{VMAP_CHUNK}", vmap_quad)
+    mu_ref, var_ref = bench(f"vmap_quad_chunked{chunk}", "xla", chunk,
+                            vmap_quad)
 
-    for impl in ("xla", "pallas_interpret"):
-        f = jax.jit(lambda W, impl=impl: ops.frontier_moments(
-            W, mus, sgs, num_t=num_t, impl=impl, block_f=256))
+    impls = ["xla"] + (["pallas_interpret"] if with_interpret else [])
+    for impl in impls:
+        bf = autotune.lookup(num_f, num_k, num_t, backend=impl, fused=False)
+        f = jax.jit(lambda W, impl=impl, bf=bf: ops.frontier_moments(
+            W, mus, sgs, num_t=num_t, impl=impl, block_f=bf))
         repeats = 1 if impl == "pallas_interpret" else 2
-        mu_i, var_i = bench(impl, lambda: f(W), repeats=repeats)
+        mu_i, var_i = bench(impl, impl, bf, lambda: f(W), repeats=repeats)
         # same tick, same numbers: the kernel is a faster route to the same
         # frontier, not a different approximation (grids differ slightly from
         # the shared-grid oracle; 1e-2 relative is the documented agreement)
@@ -111,30 +158,158 @@ def tick_kernel_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T):
     return rows
 
 
-def run() -> dict:
+def tick_pgd_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
+                     with_interpret=False, sweep=True):
+    """One PGD tick (forward + gradient over the candidate block), two ways:
+
+    autodiff_quad — PR 1's objective: jax.grad through the chunked-quadrature
+                    forward (full autodiff replay of the survival integral);
+    fused_<impl>  — the analytic-adjoint launch returning
+                    (mu, var, dmu_dW, dvar_dW) in one pass.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune, ops, ref
+
+    W, mus, sgs = _tick_problem(num_k, num_f)
+    rows = []
+
+    # autotune sweep for the fused xla tick (persists to the JSON cache); the
+    # PGD gradient is the latency budget, so this is the shape worth timing
+    if sweep:
+        entry = autotune.sweep(num_f, num_k, num_t, backend="xla", fused=True,
+                               repeats=1,
+                               candidates=(64, 128, 256))
+        emit(f"autotune_fused_xla_F{num_f}_K{num_k}_T{num_t}",
+             entry["us"], f"block_f={entry['block_f']}")
+
+    bf_auto = autotune.lookup(num_f, num_k, num_t, backend="xla", fused=False)
+
+    # PR 1 baseline: grad of the scalarized objective through the chunked
+    # quadrature graph (rows independent => grad-of-sum is per-row grads).
+    # Uses the pristine ref path: the custom VJP must not help it.
+    def legacy_obj(W):
+        pad = (-num_f) % bf_auto
+        Wp = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0) if pad else W
+        blocks = Wp.reshape(-1, bf_auto, num_k)
+        mu, var = jax.lax.map(
+            lambda wb: ref.frontier_grid_ref(wb, mus, sgs, num_t=num_t),
+            blocks)
+        mu, var = mu.reshape(-1)[:num_f], var.reshape(-1)[:num_f]
+        return jnp.sum(mu + PGD_LAM * var)
+
+    autodiff_tick = jax.jit(jax.grad(legacy_obj))
+
+    bench = _make_bench(rows, "pgd_tick_", "pgd_tick_", num_k, num_f, num_t)
+    g_auto = bench("autodiff_quad", "xla", bf_auto,
+                   lambda: autodiff_tick(W))
+
+    impls = ["xla"] + (["pallas_interpret"] if with_interpret else [])
+    fused_meds = {}
+    for impl in impls:
+        bf = autotune.lookup(num_f, num_k, num_t, backend=impl, fused=True)
+        fused = jax.jit(lambda W, impl=impl, bf=bf:
+                        ops.frontier_moments_with_grads(
+                            W, mus, sgs, num_t=num_t, impl=impl, block_f=bf))
+        repeats = 1 if impl == "pallas_interpret" else 2
+        outs = bench(f"fused_{impl}", impl, bf, lambda: fused(W),
+                     repeats=repeats)
+        fused_meds[impl] = rows[-1][4]
+        g_fused = np.asarray(outs[2]) + PGD_LAM * np.asarray(outs[3])
+        # the speedup must not come from computing a different gradient
+        rel = (np.linalg.norm(g_fused - np.asarray(g_auto))
+               / np.linalg.norm(np.asarray(g_auto)))
+        emit(f"pgd_tick_grad_parity_{impl}", rel * 1e6, "norm_rel_x1e6")
+        assert rel <= 1e-4, f"gradient parity broke on {impl}: {rel}"
+    if not with_interpret:
+        emit("pgd_tick_fused_pallas_interpret", 0.0,
+             "SKIPPED full scale (interpreter-only backend; smoke covers it)")
+
+    auto_med = next(r[4] for r in rows if r[3] == "pgd_tick_autodiff_quad")
+    speedup = auto_med / fused_meds["xla"]
+    emit(f"pgd_tick_{num_k}ch_{num_f}cand_speedup", speedup,
+         "fused_xla_vs_autodiff")
+    return rows, speedup
+
+
+def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
     rows = []
     out = {}
-    for n in (64, 256, 1024):
-        for policy in ("equal", "inverse_mu", "frontier"):
-            steps = 120 if n <= 256 else 60
-            mu, var, p99, tick_us = _run_policy(n, policy, steps=steps)
-            rows.append((n, policy, mu, var, p99, tick_us))
-            out[(n, policy)] = (mu, var, p99)
-            emit(f"cluster_{n}ch_{policy}", tick_us,
-                 f"join_mu={mu:.3f};join_var={var:.4f};p99={p99:.3f}")
-    save_table("cluster_scale.csv", "n,policy,join_mu,join_var,p99,tick_us", rows)
+    if not ticks_only:
+        for n in (64, 256, 1024):
+            for policy in ("equal", "inverse_mu", "frontier"):
+                steps = 120 if n <= 256 else 60
+                mu, var, p99, tick_us = _run_policy(n, policy, steps=steps)
+                rows.append((n, policy, mu, var, p99, tick_us))
+                out[(n, policy)] = (mu, var, p99)
+                emit(f"cluster_{n}ch_{policy}", tick_us,
+                     f"join_mu={mu:.3f};join_var={var:.4f};p99={p99:.3f}")
+        save_table("cluster_scale.csv", "n,policy,join_mu,join_var,p99,tick_us",
+                   rows)
 
-    tick_rows = tick_kernel_compare()
-    save_table("cluster_tick_kernel.csv", "K,F,num_t,path,us_per_tick",
-               tick_rows)
+    if smoke:
+        num_k, num_f, num_t = 64, 256, 128
+    else:
+        num_k, num_f, num_t = TICK_K, TICK_F, TICK_T
+    # the interpreted backend is benchmarked at full scale only on the cheap
+    # forward tick; the fused interpret tick is smoke-scale (it is a
+    # correctness backend — minutes per launch at F=4096 measures nothing)
+    interp_fused = smoke if with_interpret is None else with_interpret
 
-    for n in (64, 256, 1024):
-        eq, fr = out[(n, "equal")], out[(n, "frontier")]
-        assert fr[0] < eq[0], f"frontier should beat equal mean at n={n}"
-        assert fr[2] < eq[2], f"frontier should beat equal p99 at n={n}"
+    tick_rows = tick_kernel_compare(num_k, num_f, num_t, with_interpret=True)
+    pgd_rows, speedup = tick_pgd_compare(num_k, num_f, num_t,
+                                         with_interpret=interp_fused)
+    # smoke rows go to their own table: they must never clobber the tracked
+    # full-scale perf-trajectory CSV
+    csv_name = ("cluster_tick_kernel_smoke.csv" if smoke
+                else "cluster_tick_kernel.csv")
+    save_table(csv_name, "K,F,num_t,path,us_per_tick", tick_rows + pgd_rows)
+
+    if not ticks_only:
+        for n in (64, 256, 1024):
+            eq, fr = out[(n, "equal")], out[(n, "frontier")]
+            assert fr[0] < eq[0], f"frontier should beat equal mean at n={n}"
+            assert fr[2] < eq[2], f"frontier should beat equal p99 at n={n}"
     return {f"{n}:{p}": out[(n, p)] for n in (64, 256, 1024)
-            for p in ("equal", "frontier")}
+            for p in ("equal", "frontier") if (n, p) in out} | {
+                "pgd_speedup_vs_autodiff": speedup}
+
+
+def _write_json(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable BENCH_cluster_scale.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale (K=64, F=256, T=128) for smoke runs")
+    ap.add_argument("--ticks-only", action="store_true",
+                    help="skip the (slow) policy-comparison section")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default: repo-root "
+                         "BENCH_cluster_scale.json, or _smoke variant)")
+    args = ap.parse_args()
+
+    res = run(smoke=args.smoke, ticks_only=args.ticks_only)
+    if args.json:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        default = ("BENCH_cluster_scale_smoke.json" if args.smoke
+                   else "BENCH_cluster_scale.json")
+        path = args.out or os.path.abspath(os.path.join(root, default))
+        _write_json(path, {
+            "bench": "cluster_scale",
+            "smoke": args.smoke,
+            "pgd_speedup_vs_autodiff": round(
+                res["pgd_speedup_vs_autodiff"], 3),
+            "entries": _JSON_ENTRIES,
+        })
+    print(res)
 
 
 if __name__ == "__main__":
-    print(run())
+    main()

@@ -14,6 +14,15 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def timeit(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in microseconds (fn must block)."""
+    return timeit_stats(fn, *args, repeats=repeats, warmup=warmup)[0]
+
+
+def timeit_stats(fn, *args, repeats: int = 5, warmup: int = 2):
+    """(median_us, p90_us) wall-time per call (fn must block).
+
+    p90 is what the perf-trajectory JSON tracks: scheduler ticks sit on the
+    step critical path, so the tail matters as much as the median.
+    """
     for _ in range(warmup):
         fn(*args)
     times = []
@@ -22,7 +31,8 @@ def timeit(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
         fn(*args)
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
-    return times[len(times) // 2]
+    p90 = times[min(len(times) - 1, int(round(0.9 * (len(times) - 1))))]
+    return times[len(times) // 2], p90
 
 
 def save_table(fname: str, header: str, rows) -> str:

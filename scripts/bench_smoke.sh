@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Reduced-scale cluster_scale benchmark smoke: exercises the forward tick, the
+# fused analytic-VJP PGD tick (both impls, gradient-parity asserted), and the
+# autotune sweep/cache end-to-end in well under a minute, then sanity-checks
+# the machine-readable output. The full-scale run
+# (`python -m benchmarks.cluster_scale --json`) maintains the repo-root
+# BENCH_cluster_scale.json perf trajectory; this writes the _smoke variant so
+# it never clobbers tracked full-scale numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.cluster_scale --json --smoke --ticks-only
+
+python - <<'PY'
+import json
+
+d = json.load(open("BENCH_cluster_scale_smoke.json"))
+names = {e["name"] for e in d["entries"]}
+assert any(n.startswith("pgd_tick_autodiff") for n in names), names
+assert any(n.startswith("pgd_tick_fused_xla") for n in names), names
+assert all(e["median_us"] > 0 for e in d["entries"])
+print(f"bench smoke OK: {len(d['entries'])} entries, "
+      f"fused/autodiff speedup {d['pgd_speedup_vs_autodiff']}x (smoke scale)")
+PY

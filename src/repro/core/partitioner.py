@@ -11,9 +11,11 @@ Three tiers, all pure JAX:
   :func:`inverse_mu_split` (deterministic load balancing that ignores variance).
 
 Every candidate-moment evaluation routes through
-``repro.kernels.ops.frontier_moments``: the PGD objective differentiates the
-(one-row) batched survival integral, multi-start solutions are scored in a
-single batched launch, and ``impl`` selects XLA vs the Pallas TPU kernel.
+``repro.kernels.ops.frontier_moments``: each PGD step consumes the fused
+analytic moments+gradient launch (``frontier_moments_with_grads`` — no
+autodiff replay through the quadrature), multi-start solutions are scored in
+a single batched launch, and ``impl`` selects XLA vs the Pallas TPU kernel
+for the solve itself, gradients included.
 
 The scheduler layer (repro.sched) consumes these to assign integer workloads.
 """
@@ -73,9 +75,10 @@ def inverse_mu_split(mus) -> jnp.ndarray:
 def objective(w, mus, sigmas, lam: float, num_t: int = 1024):
     """Scalarized mean-variance objective on the joint completion time.
 
-    Evaluated as a one-row batch through ``frontier_moments`` (xla impl — the
-    differentiable path), so the PGD gradient descends exactly the function
-    the batched candidate sweeps compute.
+    Evaluated as a one-row batch through ``frontier_moments``; differentiable
+    on every impl via the registered analytic custom VJP, so ``jax.grad`` of
+    this function descends exactly the fused-kernel gradients the PGD solver
+    consumes directly.
     """
     mu, var = ops.frontier_moments(jnp.asarray(w)[None, :], mus, sigmas,
                                    num_t=num_t, impl="xla")
@@ -105,41 +108,47 @@ def _project_simplex(v):
     return jnp.maximum(v - theta, 0.0)
 
 
-@partial(jax.jit, static_argnames=("steps", "num_t"))
-def _pgd(w0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024, lr: float = 0.05):
-    """Projected gradient descent on the simplex with cosine-decayed step."""
-    grad_fn = jax.grad(objective)
+@partial(jax.jit, static_argnames=("steps", "num_t", "impl", "block_f"))
+def _pgd_multi(W0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024,
+               lr: float = 0.05, impl: str = "xla",
+               block_f: Optional[int] = None):
+    """All starts solved as ONE batched PGD on the fused kernel.
 
-    def body(i, w):
-        g = grad_fn(w, mus, sigmas, lam, num_t)
+    Each step evaluates the whole (S, K) iterate stack through
+    ``frontier_moments_with_grads`` — one fused launch returns moments and
+    analytic adjoints, so there is no autodiff replay, no per-start vmap, and
+    the compiled Pallas path is usable inside the optimizer (``impl`` selects
+    the backend for the gradient evaluations themselves).
+    """
+    proj = jax.vmap(_project_simplex)
+
+    def body(i, W):
+        _, _, dmu, dvar = ops.frontier_moments_with_grads(
+            W, mus, sigmas, num_t=num_t, impl=impl, block_f=block_f)
+        g = dmu + lam * dvar
         # normalize gradient scale so lr is unitless across problem magnitudes
-        g = g / (jnp.linalg.norm(g) + 1e-12)
+        g = g / (jnp.linalg.norm(g, axis=-1, keepdims=True) + 1e-12)
         step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / steps))
-        return _project_simplex(w - step * g)
+        return proj(W - step * g)
 
-    return jax.lax.fori_loop(0, steps, body, w0)
-
-
-@partial(jax.jit, static_argnames=("steps", "num_t"))
-def _pgd_multi(W0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024):
-    """All starts solved in one vmapped PGD (no per-start Python loop)."""
-    return jax.vmap(lambda w0: _pgd(w0, mus, sigmas, lam, steps=steps,
-                                    num_t=num_t))(W0)
+    return jax.lax.fori_loop(0, steps, body, W0)
 
 
 def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      num_t: int = 1024, restarts: int = 3,
                      key: Optional[jax.Array] = None, impl: str = "xla",
                      warm_start: Optional[np.ndarray] = None,
-                     block_f: int = 128) -> PartitionDecision:
+                     block_f: Optional[int] = None) -> PartitionDecision:
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
     Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
     optional ``warm_start`` (e.g. the balancer's previous solve — posteriors
     move a little per refresh tick, so the old optimum is a near-solution),
-    plus random Dirichlet restarts. All starts run as one vmapped solve and
-    all final candidates are scored in a single batched ``frontier_moments``
-    launch under the requested ``impl``.
+    plus random Dirichlet restarts. All starts advance together as one
+    batched fused moments+gradient evaluation per PGD step (analytic
+    adjoints, no autodiff replay) under the requested ``impl``, and the final
+    candidates are scored in a single batched ``frontier_moments`` launch.
+    ``block_f=None`` defers the launch shape to ``kernels.autotune``.
     """
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
@@ -154,7 +163,8 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
         starts += [dirichlet[i] for i in range(restarts)]
 
     W0 = jnp.stack(starts)
-    Wf = _pgd_multi(W0, mus, sigmas, jnp.float32(lam), steps=steps, num_t=num_t)
+    Wf = _pgd_multi(W0, mus, sigmas, jnp.float32(lam), steps=steps,
+                    num_t=num_t, impl=impl, block_f=block_f)
     mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=num_t,
                                        impl=impl, block_f=block_f)
     score = np.asarray(mu_c) + lam * np.asarray(var_c)

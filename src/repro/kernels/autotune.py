@@ -1,0 +1,189 @@
+"""block_f autotuning for the frontier kernels.
+
+PR 1 hard-coded ``block_f=128`` for every launch. That was safe when a
+program's working set was one (block_f, T) survival tile plus a (block_f, K)
+weight tile; the fused moments+gradient kernel holds ~3x that (two per-channel
+accumulators and two (block_f, K) gradient outputs live in the same VMEM
+tile), so the right block size now depends on (K, num_t, backend, fused) —
+too big overflows VMEM on TPU (or blows the per-block peak-memory budget of
+the chunked XLA path on CPU), too small wastes launches on grid overhead.
+
+Three layers, cheapest first:
+
+1. A VMEM/working-set **budget model** (:func:`pick_block_f`) — pure
+   arithmetic, used whenever ``ops.frontier_moments`` is called without an
+   explicit ``block_f``. Deterministic per shape, safe to consult at trace
+   time inside jit.
+2. An **in-process cache** keyed by ``(F, K, num_t, backend, fused)`` so the
+   model (or a sweep result) is computed once per process.
+3. A **timed sweep** (:func:`sweep`) over ``block_f in {32..512}`` x the
+   requested ``num_t`` that benchmarks the real kernel on synthetic data and
+   persists the winner to ``experiments/bench/autotune_cache.json`` — run by
+   ``benchmarks/cluster_scale.py`` (and ``scripts/bench_smoke.sh``) so tuned
+   configs survive across processes and ride along in the repo.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+__all__ = ["BLOCK_F_CANDIDATES", "vmem_bytes", "pick_block_f", "lookup",
+           "sweep", "clear_cache", "default_cache_path"]
+
+BLOCK_F_CANDIDATES: Tuple[int, ...] = (32, 64, 128, 256, 512)
+
+# v5e-class VMEM is ~16 MB/core; leave headroom for double buffering and the
+# compiler's own temporaries
+_VMEM_BUDGET_BYTES = int(16 * 1024 * 1024 * 0.75)
+# the XLA path is bounded by host/device peak memory per lax.map block, not
+# VMEM — a much looser working-set ceiling (the (bf, T, K) intermediates)
+_XLA_BLOCK_BUDGET_BYTES = 1024 * 1024 * 1024
+
+_CACHE: Dict[str, dict] = {}
+_JSON_LOADED: set = set()
+
+
+def default_cache_path() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))))
+    return os.path.join(root, "experiments", "bench", "autotune_cache.json")
+
+
+def _key(F: int, K: int, num_t: int, backend: str, fused: bool) -> str:
+    return f"{backend}:F{F}:K{K}:T{num_t}:fused{int(bool(fused))}"
+
+
+def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False) -> int:
+    """Working-set model of one kernel program, in bytes (f32).
+
+    Forward: W/means/stds (bf, K) tiles + ts/logF/surv/tsurv (bf, T) tiles.
+    Fused adds the P1/Pv accumulators and both gradient outputs in (bf, K)
+    plus the weighted-CDF / t(t-mu) work tiles in (bf, T) — ~3x the forward
+    accumulator footprint, the reason PR 1's block_f=128 default is retired.
+    """
+    per_fk = 8 if fused else 3
+    per_ft = 6 if fused else 4
+    return 4 * block_f * (per_fk * num_k + per_ft * num_t)
+
+
+def _xla_block_bytes(block_f: int, num_k: int, num_t: int, fused: bool) -> int:
+    # the pure-jnp path materializes (bf, T, K) zscore/cdf/phi intermediates
+    live = 5 if fused else 3
+    return 4 * block_f * num_t * num_k * live
+
+
+def _fits(block_f: int, K: int, num_t: int, backend: str, fused: bool) -> bool:
+    if backend == "xla":
+        return _xla_block_bytes(block_f, K, num_t, fused) <= _XLA_BLOCK_BUDGET_BYTES
+    return vmem_bytes(block_f, K, num_t, fused) <= _VMEM_BUDGET_BYTES
+
+
+def pick_block_f(F: int, K: int, num_t: int, backend: str = "xla",
+                 fused: bool = False,
+                 candidates: Sequence[int] = BLOCK_F_CANDIDATES) -> int:
+    """Largest candidate block_f that fits the backend's budget model."""
+    feasible = [bf for bf in candidates if _fits(bf, K, num_t, backend, fused)]
+    pick = max(feasible) if feasible else min(candidates)
+    return max(min(pick, F), 1)
+
+
+def _load_json(cache_path: str) -> None:
+    if cache_path in _JSON_LOADED:
+        return
+    _JSON_LOADED.add(cache_path)
+    try:
+        with open(cache_path) as f:
+            disk = json.load(f)
+    except (OSError, ValueError):
+        return
+    for k, v in disk.items():
+        # sweep results on disk outrank anything model-derived in-process
+        if k not in _CACHE or _CACHE[k].get("source") != "sweep":
+            _CACHE[k] = v
+
+
+def lookup(F: int, K: int, num_t: int, backend: str = "xla",
+           fused: bool = False, cache_path: Optional[str] = None) -> int:
+    """block_f for a launch shape: in-process cache -> JSON cache -> model.
+
+    This is what ``ops.frontier_moments`` consults when ``block_f`` is not
+    explicitly passed. Never runs a timed sweep itself (deterministic and
+    trace-safe); :func:`sweep` feeds better-than-model entries into the same
+    caches.
+    """
+    _load_json(cache_path or default_cache_path())
+    key = _key(F, K, num_t, backend, fused)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return max(min(int(hit["block_f"]), F), 1)
+    bf = pick_block_f(F, K, num_t, backend, fused)
+    _CACHE[key] = {"block_f": bf, "source": "model"}
+    return bf
+
+
+def sweep(F: int, K: int, num_t: int, backend: str = "xla",
+          fused: bool = False, repeats: int = 2, seed: int = 0,
+          candidates: Sequence[int] = BLOCK_F_CANDIDATES,
+          cache_path: Optional[str] = None) -> dict:
+    """Time the real kernel across feasible block_f values; cache the winner.
+
+    Returns the winning entry ``{"block_f", "source": "sweep", "us", "timings"}``
+    and persists it (in-process + JSON) under ``(F, K, num_t, backend, fused)``.
+    """
+    import jax
+    import numpy as np
+
+    from . import ops
+
+    rng = np.random.default_rng(seed)
+    e = rng.exponential(size=(F, K))
+    W = (e / e.sum(1, keepdims=True)).astype(np.float32)
+    mus = rng.uniform(10, 40, K).astype(np.float32)
+    sgs = (mus * rng.uniform(0.02, 0.3, K)).astype(np.float32)
+
+    feasible = [bf for bf in candidates if _fits(bf, K, num_t, backend, fused)]
+    if not feasible:
+        feasible = [min(candidates)]
+    timings = {}
+    for bf in feasible:
+        def run(bf=bf):
+            if fused:
+                out = ops.frontier_moments_with_grads(
+                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf)
+            else:
+                out = ops.frontier_moments(
+                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf)
+            jax.block_until_ready(out)
+        run()  # compile + warm
+        samples = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run()
+            samples.append((time.perf_counter() - t0) * 1e6)
+        timings[bf] = sorted(samples)[len(samples) // 2]
+    best_bf = min(timings, key=timings.get)
+    entry = {"block_f": int(best_bf), "source": "sweep",
+             "us": float(timings[best_bf]),
+             "timings": {str(k): float(v) for k, v in timings.items()}}
+    key = _key(F, K, num_t, backend, fused)
+    _CACHE[key] = entry
+    path = cache_path or default_cache_path()
+    disk = {}
+    try:
+        with open(path) as f:
+            disk = json.load(f)
+    except (OSError, ValueError):
+        pass
+    disk[key] = entry
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(disk, f, indent=1, sort_keys=True)
+    return entry
+
+
+def clear_cache() -> None:
+    """Drop the in-process cache (tests use this to exercise JSON round-trips)."""
+    _CACHE.clear()
+    _JSON_LOADED.clear()

@@ -1,5 +1,5 @@
 """The paper's hot loop as a Pallas TPU kernel: survival-integral moments for a
-grid of candidate splits.
+grid of candidate splits, with an optional fused analytic-gradient pass.
 
 Why a kernel: at fleet scale the scheduler re-evaluates mu(w), sigma^2(w) for
 thousands of candidate splits x hundreds/thousands of channels every rebalance
@@ -12,9 +12,62 @@ program holds a (block_f, T) survival accumulator in VMEM and streams the K
 channels in registers via a fori_loop, adding each channel's log-CDF. T and K
 are small enough (T<=2048, K<=4096) that one tile's working set
 block_f*(T)*4B stays well under the ~16 MB v5e VMEM budget for block_f<=256.
+The fused gradient kernel additionally carries two (block_f, K) accumulators
+and the (block_f, K) gradient outputs (~3x the forward working set), which is
+why ``kernels.autotune`` picks a smaller block_f for it.
 
 Per-candidate integration grids (t in [0, tmax_f]) keep accuracy uniform
 across candidates whose means differ by orders of magnitude.
+
+Differentiating the survival integral
+-------------------------------------
+
+The kernel computes, per candidate row w (weights over K channels, with
+per-channel rates mu_k, sigma_k, scaled means m_k = w_k mu_k and stds
+s_k = w_k sigma_k):
+
+    F(t)   = prod_k Phi((t - m_k)/s_k)          joint CDF of the max
+    mu     = int_0^tmax (1 - F(t)) dt           survival-integral mean
+    m2     = 2 int_0^tmax t (1 - F(t)) dt       second moment
+    var    = m2 - mu^2
+
+discretized by trapezoid quadrature on t_j = tmax * j/(T-1), with
+tmax = max_k(m_k + z s_k). The adjoints reduce to ONE extra Gaussian-pdf
+accumulator per channel evaluated on the same grid. Writing z_k = (t-m_k)/s_k
+and the inverse-Mills-style ratio r_k(t) = phi(z_k)/Phi(z_k):
+
+    d logF / d w_k |_t  = r_k(t) * dz_k/dw_k,   dz_k/dw_k = -t/(w_k^2 sigma_k)
+
+so with a_jk = omega_j F(t_j) r_k(t_j) (omega_j the trapezoid weights):
+
+    dmu/dw_k  (fixed grid) = (dt / (w_k^2 sigma_k)) * P1_k,
+                             P1_k = sum_j a_jk t_j
+    dvar/dw_k (fixed grid) = (2 dt / (w_k^2 sigma_k)) * Pv_k,
+                             Pv_k = sum_j a_jk t_j (t_j - mu)
+
+Pv folds the m2 and -2 mu dmu cotangents together per grid point — the same
+combination autodiff's backward makes — which avoids the catastrophic
+cancellation of accumulating them separately when var << mu^2.
+
+Because the grid itself moves with w (t_j = tmax(w) * j/(T-1), dt ∝ tmax),
+each output also carries a tmax term on the argmax channel
+a = argmax_k(m_k + z s_k), where dtmax/dw_a = mu_a + z sigma_a:
+
+    dmu/dtmax  = mu/tmax  - (dt/tmax)   sum_k P1_k / s_k
+    dvar/dtmax = 2 var/tmax - (2 dt/tmax) sum_k Pv_k / s_k
+
+(The continuum limit of dmu/dtmax is surv(tmax) ~ 0 at z=10; these discrete
+forms keep exact parity with autodiff through the quadrature.) Zero-std
+channels contribute no direct term (their point-mass CDF is flat a.e.) but
+still receive the tmax term when they set the grid end; CDF values clipped to
+the [1e-37, 1] floor/ceiling follow jnp.clip's gradient conventions (0 below
+the floor, 0.5 exactly at saturation).
+
+The fused kernel computes the forward pass (one K-loop building log F), then a
+second K-loop accumulating P1/Pv per channel from the shared (block_f, T)
+joint-CDF tile — so ``(mu, var, dmu_dW, dvar_dW)`` costs ~2 forward passes in
+one launch, instead of a forward plus a full autodiff replay through the
+quadrature graph.
 """
 from __future__ import annotations
 
@@ -24,11 +77,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["frontier_grid"]
+__all__ = ["frontier_grid", "frontier_grid_with_grads"]
 
-from .ref import _CDF_FLOOR  # single source: kernel must match its oracle
+from .ref import _CDF_FLOOR, _INV_SQRT2PI  # single source: kernel must match its oracle
 
 _SQRT2 = 1.4142135623730951
+
+
+def _check_block(F: int, block_f: int) -> None:
+    # a real error, not an assert: asserts vanish under python -O and callers
+    # outside ops.py would get a silent wrong-shape launch
+    if F % block_f:
+        raise ValueError(
+            f"F={F} must be divisible by block_f={block_f} "
+            f"(ops.frontier_moments pads with copies of row 0 to guarantee this)")
 
 
 def _frontier_kernel(w_ref, mu_ref, sg_ref, mu_out_ref, var_out_ref, *,
@@ -75,7 +137,7 @@ def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
     """
     F, K = W.shape
     block_f = min(block_f, F)
-    assert F % block_f == 0, (F, block_f)
+    _check_block(F, block_f)
     W = W.astype(jnp.float32)
     mus2 = jnp.asarray(mus, jnp.float32)[None, :]
     sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
@@ -95,5 +157,134 @@ def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
         ],
         out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32),
                    jax.ShapeDtypeStruct((F,), jnp.float32)],
+        interpret=interpret,
+    )(W, mus2, sgs2)
+
+
+def _frontier_grad_kernel(w_ref, mu_ref, sg_ref,
+                          mu_out_ref, var_out_ref, dmu_out_ref, dvar_out_ref,
+                          *, num_t: int, z: float, num_k: int):
+    """Fused forward + analytic adjoint (see module docstring for the math).
+
+    Pass 1 is the forward K-loop building the joint log-CDF; pass 2 streams K
+    again, turning the shared (bf, T) joint-CDF tile into the per-channel
+    P1/Pv accumulators. Grad accumulators live in the same VMEM tile as the
+    forward state — no (F, T, K) residuals ever leave the program.
+    """
+    w = w_ref[...]            # (bf, K)
+    mus = mu_ref[...]         # (1, K)
+    sgs = sg_ref[...]         # (1, K)
+    means = w * mus           # (bf, K)
+    stds = w * sgs
+    reach = means + z * stds
+
+    amax = jnp.max(reach, axis=-1, keepdims=True)            # (bf, 1)
+    tmax = jnp.maximum(amax, 1e-12)
+    frac = jax.lax.broadcasted_iota(jnp.float32, (1, num_t), 1) / (num_t - 1)
+    ts = tmax * frac          # (bf, T)
+
+    def add_channel(kk, logF):
+        mean_k = jax.lax.dynamic_slice_in_dim(means, kk, 1, axis=1)  # (bf,1)
+        std_k = jax.lax.dynamic_slice_in_dim(stds, kk, 1, axis=1)
+        ok = std_k > 0.0
+        zsc = (ts - mean_k) / jnp.where(ok, std_k, 1.0)
+        cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
+        point = (ts >= mean_k).astype(jnp.float32)
+        cdf = jnp.where(ok, cdf, point)
+        return logF + jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0))
+
+    logF = jax.lax.fori_loop(0, num_k, add_channel, jnp.zeros_like(ts))
+    F_t = jnp.exp(logF)
+    surv = 1.0 - F_t
+
+    dt = tmax[:, 0] / (num_t - 1)  # (bf,)
+    mu = (jnp.sum(surv, -1) - 0.5 * (surv[:, 0] + surv[:, -1])) * dt
+    tsurv = ts * surv
+    m2 = 2.0 * (jnp.sum(tsurv, -1) - 0.5 * (tsurv[:, 0] + tsurv[:, -1])) * dt
+    var_raw = m2 - mu * mu
+    mu_out_ref[...] = mu
+    var_out_ref[...] = jnp.maximum(var_raw, 0.0)
+
+    # pass 2: per-channel Gaussian-pdf accumulators off the shared F(t) tile.
+    # wF folds the trapezoid weights into the joint CDF once.
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, num_t), 1)
+    wq = jnp.where((idx == 0) | (idx == num_t - 1), 0.5, 1.0)
+    wF = wq * F_t                                            # (bf, T)
+    tv = ts * (ts - mu[:, None])                             # (bf, T)
+
+    def grad_channel(kk, carry):
+        P1, Pv = carry                                       # (bf, K) each
+        mean_k = jax.lax.dynamic_slice_in_dim(means, kk, 1, axis=1)
+        std_k = jax.lax.dynamic_slice_in_dim(stds, kk, 1, axis=1)
+        ok = std_k > 0.0
+        zsc = (ts - mean_k) / jnp.where(ok, std_k, 1.0)
+        cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
+        Cc = jnp.clip(cdf, _CDF_FLOOR, 1.0)
+        phi = jnp.exp(-0.5 * zsc * zsc) * _INV_SQRT2PI
+        gate = jnp.where(cdf >= 1.0, 0.5, 1.0) * (cdf > _CDF_FLOOR) * ok
+        a = wF * (gate * phi / Cc)                           # (bf, T)
+        p1 = jnp.sum(a * ts, -1, keepdims=True)              # (bf, 1)
+        pv = jnp.sum(a * tv, -1, keepdims=True)
+        return (jax.lax.dynamic_update_slice_in_dim(P1, p1, kk, axis=1),
+                jax.lax.dynamic_update_slice_in_dim(Pv, pv, kk, axis=1))
+
+    zeros_fk = jnp.zeros_like(w)
+    P1, Pv = jax.lax.fori_loop(0, num_k, grad_channel, (zeros_fk, zeros_fk))
+
+    # epilogue: combine fixed-grid and moving-grid (tmax) terms — module
+    # docstring "Differentiating the survival integral"
+    ok = stds > 0.0
+    inv_w2s = jnp.where(ok, 1.0 / jnp.where(ok, w * stds, 1.0), 0.0)
+    inv_s = jnp.where(ok, 1.0 / jnp.where(ok, stds, 1.0), 0.0)
+    dtc = dt[:, None]
+    tmx = tmax[:, 0]
+    b_mu = (mu - dt * jnp.sum(P1 * inv_s, -1)) / tmx
+    b_var = 2.0 * (var_raw - dt * jnp.sum(Pv * inv_s, -1)) / tmx
+    ind = (reach == amax).astype(jnp.float32)
+    gvec = ((mus + z * sgs) * ind / jnp.sum(ind, -1, keepdims=True)
+            * (amax > 1e-12).astype(jnp.float32))
+    dmu = dtc * P1 * inv_w2s + b_mu[:, None] * gvec
+    dvar = jnp.where((var_raw > 0.0)[:, None],
+                     2.0 * dtc * Pv * inv_w2s + b_var[:, None] * gvec, 0.0)
+    dmu_out_ref[...] = dmu
+    dvar_out_ref[...] = dvar
+
+
+@functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f", "interpret"))
+def frontier_grid_with_grads(W, mus, sigmas, *, num_t: int = 1024,
+                             z: float = 10.0, block_f: int = 64,
+                             interpret: bool = False):
+    """Fused ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W: (F, K).
+
+    One launch returns the moments AND their analytic adjoints w.r.t. every
+    split weight (matching ``ref.frontier_grid_with_grads_ref``). F must be
+    divisible by block_f (ops.py pads with copies of row 0 otherwise).
+    """
+    F, K = W.shape
+    block_f = min(block_f, F)
+    _check_block(F, block_f)
+    W = W.astype(jnp.float32)
+    mus2 = jnp.asarray(mus, jnp.float32)[None, :]
+    sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
+
+    kernel = functools.partial(_frontier_grad_kernel, num_t=num_t, z=z, num_k=K)
+    return pl.pallas_call(
+        kernel,
+        grid=(F // block_f,),
+        in_specs=[
+            pl.BlockSpec((block_f, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_f, K), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32),
+                   jax.ShapeDtypeStruct((F,), jnp.float32),
+                   jax.ShapeDtypeStruct((F, K), jnp.float32),
+                   jax.ShapeDtypeStruct((F, K), jnp.float32)],
         interpret=interpret,
     )(W, mus2, sgs2)

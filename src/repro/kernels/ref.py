@@ -11,12 +11,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["frontier_grid_ref", "flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref", "decode_attention_ref"]
+__all__ = ["frontier_grid_ref", "frontier_grid_with_grads_ref",
+           "flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref",
+           "decode_attention_ref"]
 
 # log-CDF clamp floor. Must be a NORMAL f32 (>= 1.18e-38): XLA CPU flushes
 # subnormals to zero, and a flushed floor turns the log/clip VJP into
 # inf * 0 = NaN — the PGD solver differentiates through this function.
 _CDF_FLOOR = 1e-37
+
+_INV_SQRT2PI = 0.3989422804014327  # 1/sqrt(2*pi)
 
 
 def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
@@ -49,6 +53,91 @@ def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
     m2 = 2.0 * (jnp.sum(tsurv, -1) - 0.5 * (tsurv[:, 0] + tsurv[:, -1])) * dt
     var = jnp.maximum(m2 - mu * mu, 0.0)
     return mu, var
+
+
+def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
+                                 z: float = 10.0):
+    """Fused oracle: ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W.
+
+    Same forward contract as :func:`frontier_grid_ref`, plus the analytic
+    adjoints of both moments w.r.t. every split weight, computed in the same
+    pass — the semantics the fused Pallas kernel must match and the function
+    the ``frontier_moments`` custom VJP rides.
+
+    The adjoint must agree with ``jax.grad`` through the quadrature graph, so
+    it replicates autodiff's boundary conventions exactly:
+
+    * ``jnp.clip(cdf, floor, 1)`` passes gradient 1 strictly inside the
+      bounds, 0.5 at a saturated bound (f32 CDF hits exactly 1.0 for
+      z >= ~5.3), and 0 outside. The f32 cancellation in ``0.5*(1+erf)``
+      means the lower clip only ever activates at cdf == 0, never at a tie.
+    * ``jnp.max`` over channels splits the tmax cotangent evenly over ties.
+    * zero-std channels take the (non-differentiable) point-mass branch, so
+      their direct gradient is 0 — they still receive the grid-path gradient
+      when they set ``tmax``.
+
+    Gradients are w.r.t. W only; mus/sigmas are treated as constants of the
+    solve (the posterior point estimates), matching every caller in repro.
+    """
+    W = jnp.asarray(W, jnp.float32)
+    mus = jnp.asarray(mus, jnp.float32)
+    sigmas = jnp.asarray(sigmas, jnp.float32)
+    means = W * mus                       # (F, K)
+    stds = W * sigmas
+    reach = means + z * stds
+    amax = jnp.max(reach, axis=-1)        # (F,) unclamped grid end
+    tmax = jnp.maximum(amax, 1e-12)
+    ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
+    ok = stds > 0
+    safe = jnp.where(ok, stds, 1.0)
+    zsc = (ts[:, :, None] - means[:, None, :]) / safe[:, None, :]
+    cdf_raw = 0.5 * (1.0 + jax.lax.erf(zsc / jnp.sqrt(2.0).astype(jnp.float32)))
+    point = (ts[:, :, None] >= means[:, None, :]).astype(jnp.float32)
+    cdf = jnp.where(ok[:, None, :], cdf_raw, point)
+    Cc = jnp.clip(cdf, _CDF_FLOOR, 1.0)
+    F_t = jnp.exp(jnp.sum(jnp.log(Cc), axis=-1))     # joint CDF (F, T)
+    surv = 1.0 - F_t
+
+    dt = tmax / (num_t - 1)
+    wq = jnp.ones((num_t,), jnp.float32).at[0].set(0.5).at[-1].set(0.5)
+    mu = jnp.sum(wq * surv, -1) * dt
+    m2 = 2.0 * jnp.sum(wq * ts * surv, -1) * dt
+    var_raw = m2 - mu * mu
+    var = jnp.maximum(var_raw, 0.0)
+
+    # d logF / d z_k = phi(z_k) / Phi(z_k), gated by the clip conventions
+    phi = jnp.exp(-0.5 * zsc * zsc) * _INV_SQRT2PI
+    gate = (jnp.where(cdf_raw >= 1.0, 0.5, 1.0)
+            * (cdf_raw > _CDF_FLOOR) * ok[:, None, :])
+    r = gate * phi / Cc                              # (F, T, K)
+    a = (wq[None, :, None] * F_t[:, :, None]) * r    # trapezoid-weighted
+    P1 = jnp.einsum("ftk,ft->fk", a, ts)             # sum_j w_j F_j r_jk t_j
+    # var accumulator combines the m2 and -2*mu*mu cotangents PER GRID POINT
+    # (t_j - mu), exactly as autodiff's backward does — accumulating P2 and
+    # P1 separately and subtracting after the reduction loses ~3 digits to
+    # cancellation when var << mu^2
+    Pv = jnp.einsum("ftk,ft->fk", a, ts * (ts - mu[:, None]))
+
+    # fixed-grid terms: dz_k/dw_k = -t / (w_k^2 sigma_k); w*stds = w^2 sigma
+    inv_w2s = jnp.where(ok, 1.0 / jnp.where(ok, W * stds, 1.0), 0.0)
+    dmu_direct = dt[:, None] * P1 * inv_w2s
+    dvar_direct = 2.0 * dt[:, None] * Pv * inv_w2s
+
+    # grid terms: every z_jk moves with tmax (dz/dtmax = frac_j / s_k), and
+    # dt scales with tmax, so dmu/dtmax = mu/tmax - (dt/tmax) sum_k P1_k/s_k
+    # and dvar/dtmax = 2 (var - dt sum_k Pv_k/s_k) / tmax
+    inv_s = jnp.where(ok, 1.0 / safe, 0.0)
+    b_mu = (mu - dt * jnp.sum(P1 * inv_s, -1)) / tmax
+    b_var = 2.0 * (var_raw - dt * jnp.sum(Pv * inv_s, -1)) / tmax
+    # dtmax/dw_k = (mu_k + z sigma_k) on argmax channels (ties split evenly)
+    ind = (reach == amax[:, None]).astype(jnp.float32)
+    gvec = ((mus + z * sigmas)[None, :] * ind / jnp.sum(ind, -1, keepdims=True)
+            * (amax > 1e-12)[:, None])
+
+    dmu = dmu_direct + b_mu[:, None] * gvec
+    dvar = jnp.where((var_raw > 0.0)[:, None],
+                     dvar_direct + b_var[:, None] * gvec, 0.0)
+    return mu, var, dmu, dvar
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

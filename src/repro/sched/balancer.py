@@ -55,6 +55,7 @@ class UncertaintyAwareBalancer:
     pgd_steps: int = 150        # K-channel solver budget (warm-started)
     impl: str = "xla"           # frontier_moments backend: xla | pallas[_interpret]
     num_t: int = 1024           # survival-integral resolution per candidate
+    block_f: Optional[int] = None  # kernel launch shape; None = autotuned
     _nig: NIGState = field(default=None, repr=False)
     _cached_w: np.ndarray = field(default=None, repr=False)
     _obs_count: int = 0
@@ -108,11 +109,14 @@ class UncertaintyAwareBalancer:
                 warm = (self._cached_w
                         if self._cached_w is not None
                         and len(self._cached_w) == k else None)
+                # refresh tick rides the fused moments+gradient path: every
+                # PGD step inside is one analytic forward+grad launch
                 w = optimize_weights(mus, sigmas, lam=self.lam,
                                      steps=self.pgd_steps,
                                      restarts=restarts,
                                      num_t=self.num_t, impl=self.impl,
-                                     warm_start=warm).weights
+                                     warm_start=warm,
+                                     block_f=self.block_f).weights
             self._cached_w = np.asarray(w, np.float64)
         if self.min_weight > 0:
             w = np.maximum(w, self.min_weight)

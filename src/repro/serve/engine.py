@@ -59,10 +59,15 @@ class PartitionedBatcher:
 
     def __init__(self, groups: List[ReplicaGroup], lam: float = 0.05,
                  policy: str = "frontier", sim: Optional[ClusterSim] = None,
-                 seed: int = 0):
+                 seed: int = 0, impl: str = "xla", num_t: int = 1024,
+                 refresh_every: int = 1):
         self.groups = groups
+        # forward the solver knobs so serving ticks run the kernel-backed
+        # (and, with impl="pallas", compiled) fused solve path online
         self.balancer = UncertaintyAwareBalancer(len(groups), lam=lam,
-                                                 policy=policy)
+                                                 policy=policy, impl=impl,
+                                                 num_t=num_t,
+                                                 refresh_every=refresh_every)
         self.sim = sim or ClusterSim.heterogeneous(len(groups), seed=seed)
 
     def split(self, num_requests: int) -> np.ndarray:
