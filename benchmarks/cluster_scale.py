@@ -23,10 +23,15 @@ Three sections:
    This is the number the custom-VJP work buys; the acceptance bar is the
    fused path >= 1.5x the autodiff path at equal num_t.
 
+4. Family ticks: the same K=1024 x F=4096 forward + fused launches under the
+   ``lognormal`` and ``drift`` completion-time families (heavy-tailed WAN
+   regimes and straggler-aware frontiers) — the scenario-diverse numbers the
+   distribution-generic stack buys. Entries carry a ``family`` field.
+
 ``--json`` additionally writes machine-readable ``BENCH_cluster_scale.json``
-(median/p90 per tick, impl, block_f, speedups) at the repo root so the perf
-trajectory is tracked from this PR on; ``scripts/bench_smoke.sh`` runs the
-tick sections at reduced scale.
+(median/p90 per tick, impl, block_f, family, speedups) at the repo root so
+the perf trajectory is tracked from this PR on; ``scripts/bench_smoke.sh``
+runs the tick sections at reduced scale.
 """
 import argparse
 import json
@@ -42,21 +47,24 @@ TICK_F = 4096      # candidate splits per tick
 TICK_T = 256       # survival-integral points per candidate
 VMAP_CHUNK = 512   # legacy path OOMs beyond this (4 GB+ intermediates)
 PGD_LAM = 0.05     # scalarization weight in the PGD-tick objective
+TICK_FAMILIES = ("lognormal", "drift")  # non-normal fleet-tick regimes
 
 _JSON_ENTRIES = []
 
 
 def _record(name, impl, block_f, num_k, num_f, num_t, med_us, p90_us,
-            repeats):
+            repeats, family="normal"):
     # repeats is recorded because p90 of 1-2 samples is just the max/only
     # sample — trajectory readers need to know how much tail is in the tail
     _JSON_ENTRIES.append({
         "name": name, "impl": impl, "block_f": block_f, "K": num_k,
-        "F": num_f, "num_t": num_t, "median_us": round(med_us, 2),
+        "F": num_f, "num_t": num_t, "family": family,
+        "median_us": round(med_us, 2),
         "p90_us": round(p90_us, 2), "repeats": repeats})
 
 
-def _make_bench(rows, prefix, emit_prefix, num_k, num_f, num_t):
+def _make_bench(rows, prefix, emit_prefix, num_k, num_f, num_t,
+                family="normal"):
     """Shared timing/record closure for the tick sections: times a blocking
     thunk, appends the CSV row, records the JSON entry and emits the line."""
     import jax
@@ -70,19 +78,20 @@ def _make_bench(rows, prefix, emit_prefix, num_k, num_f, num_t):
         med, p90 = timeit_stats(once, repeats=repeats, warmup=1)
         rows.append((num_k, num_f, num_t, f"{prefix}{name}", med))
         _record(f"{prefix}{name}", impl, block_f, num_k, num_f, num_t,
-                med, p90, repeats)
+                med, p90, repeats, family=family)
         emit(f"{emit_prefix}{num_k}ch_{num_f}cand_{name}", med)
         return result["v"]
 
     return bench
 
 
-def _run_policy(n, policy, steps=120, seed=0, inject=True):
+def _run_policy(n, policy, steps=120, seed=0, inject=True, dist="normal",
+                family="normal"):
     from repro.sched import UncertaintyAwareBalancer
     from repro.sim import ClusterSim
 
-    sim = ClusterSim.heterogeneous(n, seed=seed)
-    bal = UncertaintyAwareBalancer(n, lam=0.02, policy=policy,
+    sim = ClusterSim.heterogeneous(n, seed=seed, dist=dist)
+    bal = UncertaintyAwareBalancer(n, lam=0.02, policy=policy, family=family,
                                refresh_every=(1 if n <= 64 else 10),
                                pgd_steps=(150 if n <= 256 else 60))
     times = []
@@ -233,6 +242,68 @@ def tick_pgd_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
     return rows, speedup
 
 
+def tick_family_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
+                        families=TICK_FAMILIES):
+    """Fleet ticks under the non-normal completion-time families.
+
+    For each family: the forward candidate sweep and the fused
+    moments+gradient launch at full fleet scale (xla backend) — lognormal is
+    the heavy-tailed WAN/file-transfer regime, drift the straggler-aware
+    frontier (per-channel drift rates on ~3% of the fleet, the mixed-fleet
+    shape the straggler policy produces). Gradient parity vs autodiff through
+    the family quadrature is asserted at every scale, so the family speed
+    numbers are for the SAME gradients a replayed autodiff would produce.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributions import Drift, resolve_family
+    from repro.kernels import autotune, ops, ref
+
+    W, mus, sgs = _tick_problem(num_k, num_f)
+    rng = np.random.default_rng(11)
+    rows = []
+    for fam_name in families:
+        if fam_name == "drift":
+            rho = np.where(rng.random(num_k) < 0.03,
+                           rng.uniform(0.5, 2.0, num_k), 0.0)
+            family = Drift(rho.astype(np.float32))
+        else:
+            family = fam_name
+        dist_id, extra = resolve_family(family, num_k)
+        extra = jnp.asarray(extra, jnp.float32)
+        bench = _make_bench(rows, f"{fam_name}_tick_", "fam_tick_", num_k,
+                            num_f, num_t, family=fam_name)
+
+        bf_fwd = autotune.lookup(num_f, num_k, num_t, backend="xla",
+                                 fused=False, dist_id=dist_id)
+        fwd = jax.jit(lambda W, bf=bf_fwd: ops.frontier_moments(
+            W, mus, sgs, num_t=num_t, impl="xla", block_f=bf,
+            family=(dist_id, extra)))
+        bench("fwd_xla", "xla", bf_fwd, lambda: fwd(W))
+
+        bf_fused = autotune.lookup(num_f, num_k, num_t, backend="xla",
+                                   fused=True, dist_id=dist_id)
+        fused = jax.jit(lambda W, bf=bf_fused: ops.frontier_moments_with_grads(
+            W, mus, sgs, num_t=num_t, impl="xla", block_f=bf,
+            family=(dist_id, extra)))
+        outs = bench("fused_xla", "xla", bf_fused, lambda: fused(W))
+
+        # parity spot-check vs autodiff through the family quadrature on a
+        # candidate slice (full-batch autodiff at F=4096 is the 49 s legacy
+        # tick — the normal-family section already times that axis)
+        ns = min(num_f, 64)
+        Ws = W[:ns]
+        dmu_a = jax.grad(lambda Wx: jnp.sum(ref.frontier_grid_ref(
+            Wx, mus, sgs, num_t=num_t, dist_id=dist_id, extra=extra)[0]))(Ws)
+        g_fused = np.asarray(outs[2])[:ns]
+        rel = (np.linalg.norm(g_fused - np.asarray(dmu_a))
+               / np.linalg.norm(np.asarray(dmu_a)))
+        emit(f"fam_tick_grad_parity_{fam_name}", rel * 1e6, "norm_rel_x1e6")
+        assert rel <= 1e-4, f"family gradient parity broke on {fam_name}: {rel}"
+    return rows
+
+
 def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
     rows = []
     out = {}
@@ -244,6 +315,24 @@ def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
                 rows.append((n, policy, mu, var, p99, tick_us))
                 out[(n, policy)] = (mu, var, p99)
                 emit(f"cluster_{n}ch_{policy}", tick_us,
+                     f"join_mu={mu:.3f};join_var={var:.4f};p99={p99:.3f}")
+        # family-matched fleets: sim generates lognormal / drifting ground
+        # truth, the frontier solves under the SAME family (the
+        # scenario-diverse regimes the distribution-generic stack opens).
+        # The drift fleet's per-channel rates are unknown to the scheduler,
+        # so the solve uses the rho_range midpoint as a drift-aware prior
+        # (deployments estimate per-channel rates via StragglerPolicy).
+        from repro.core import Drift
+        fam_for = {"lognormal": "lognormal", "drift": Drift(0.45)}
+        for dist in ("lognormal", "drift"):
+            for policy in ("equal", "frontier"):
+                mu, var, p99, tick_us = _run_policy(
+                    64, policy, steps=100, dist=dist,
+                    family=(fam_for[dist] if policy == "frontier"
+                            else "normal"))
+                rows.append((64, f"{dist}_{policy}", mu, var, p99, tick_us))
+                out[(64, f"{dist}_{policy}")] = (mu, var, p99)
+                emit(f"cluster_64ch_{dist}_{policy}", tick_us,
                      f"join_mu={mu:.3f};join_var={var:.4f};p99={p99:.3f}")
         save_table("cluster_scale.csv", "n,policy,join_mu,join_var,p99,tick_us",
                    rows)
@@ -260,11 +349,13 @@ def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
     tick_rows = tick_kernel_compare(num_k, num_f, num_t, with_interpret=True)
     pgd_rows, speedup = tick_pgd_compare(num_k, num_f, num_t,
                                          with_interpret=interp_fused)
+    fam_rows = tick_family_compare(num_k, num_f, num_t)
     # smoke rows go to their own table: they must never clobber the tracked
     # full-scale perf-trajectory CSV
     csv_name = ("cluster_tick_kernel_smoke.csv" if smoke
                 else "cluster_tick_kernel.csv")
-    save_table(csv_name, "K,F,num_t,path,us_per_tick", tick_rows + pgd_rows)
+    save_table(csv_name, "K,F,num_t,path,us_per_tick",
+               tick_rows + pgd_rows + fam_rows)
 
     if not ticks_only:
         for n in (64, 256, 1024):

@@ -23,7 +23,10 @@ def _run(policy: str, steps: int = 150, seed: int = 0):
     join_times, done = [], 0
     for i in range(steps):
         k = bal.assign(total_micro)
+        # run_step normalizes counts to batch fractions; channel rates are
+        # sec per *microbatch*, so scale the realized times back to seconds
         t, durs = sim.run_step(k.astype(np.float64))
+        t, durs = t * total_micro, durs * total_micro
         bal.observe(durs, k.astype(np.float64))
         if i >= 20:
             join_times.append(t)

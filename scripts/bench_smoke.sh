@@ -19,7 +19,11 @@ d = json.load(open("BENCH_cluster_scale_smoke.json"))
 names = {e["name"] for e in d["entries"]}
 assert any(n.startswith("pgd_tick_autodiff") for n in names), names
 assert any(n.startswith("pgd_tick_fused_xla") for n in names), names
+fams = {e.get("family") for e in d["entries"]}
+assert {"normal", "lognormal", "drift"} <= fams, fams  # family tick section ran
+assert any(n.startswith("lognormal_tick_fused") for n in names), names
 assert all(e["median_us"] > 0 for e in d["entries"])
-print(f"bench smoke OK: {len(d['entries'])} entries, "
+print(f"bench smoke OK: {len(d['entries'])} entries "
+      f"(families: {sorted(f for f in fams if f)}), "
       f"fused/autodiff speedup {d['pgd_speedup_vs_autodiff']}x (smoke scale)")
 PY

@@ -9,14 +9,29 @@ Public API:
     clark_max_moments_2 / _seq   — closed-form / sequential moment matching
     NIGState, nig_*              — Bayesian on-the-fly channel estimation
     select_channels              — how many channels to enlist (group testing ext.)
+    ChannelFamily / get_family   — pluggable completion-time families
+                                   (normal | lognormal | drift | empirical)
 """
+from .distributions import (
+    FAMILIES,
+    ChannelFamily,
+    Drift,
+    Empirical,
+    LogNormal,
+    Normal,
+    get_family,
+    point_mass_cdf,
+    resolve_family,
+)
 from .normal import Phi, Phi_c, phi, safe_cdf, scaled_channel_params
 from .maxstat import (
     clark_max_moments_2,
     clark_max_moments_seq,
     joint_cdf,
+    joint_cdf_w,
     max_moments_mc,
     max_moments_quad,
+    max_moments_quad_w,
     time_grid,
 )
 from .frontier import (

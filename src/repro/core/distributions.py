@@ -1,0 +1,660 @@
+"""Pluggable channel completion-time distribution families.
+
+The paper's two scenarios — convex optimization on contended VMs and bulk
+file transfer over the Internet — have very different completion-time
+statistics, but the original stack hard-coded the Gaussian scaling model
+``T_i ~ N(w mu_i, (w sigma_i)^2)`` from the core down through the quadrature
+kernels. This module makes the per-channel distribution a *family* selected
+by a static ``dist_id`` so every layer (survival-integral oracles, the Pallas
+kernels and their fused analytic adjoints, the PGD solver, the scheduler, the
+simulator and the serving batcher) can run any of:
+
+``normal``
+    The paper's model: ``T(w) ~ N(w mu, (w sigma)^2)``.
+``lognormal``
+    Heavy-tailed service times (WAN transfers, GC pauses): ``T(w) = w R`` with
+    ``R`` log-normal *moment-matched* to ``(mu, sigma)`` — the frontier is
+    driven by the same two posterior statistics, only the shape changes.
+``drift``
+    Straggler model: the channel's per-unit rate inflates linearly over the
+    course of the work it executes, so the mean is super-linear in the share,
+    ``T(w) ~ N(w mu (1 + rho w / 2), (w sigma)^2)`` — a channel drifting at
+    ``rho`` per unit work. ``rho = 0`` reduces exactly to ``normal``;
+    per-channel ``rho`` lets the scheduler keep a detected straggler enlisted
+    (with the drift priced in) instead of quarantining it.
+``empirical``
+    No parametric assumption: a C-component Gaussian mixture fitted to the
+    observed per-unit rates (EM, deterministic init), evaluated exactly.
+
+Kernel-facing contract
+----------------------
+
+Every family is described to the kernels by ``(dist_id, extra)`` where
+``extra`` is a dense ``(E, K)`` float32 array of per-channel shape parameters
+(``E = extra_rows(dist_id)``; families without parameters carry one zero row
+so launch signatures stay uniform). The math the generalized survival-integral
+adjoint needs factors, for every family above, into
+
+    d log C_k / d w_k (t)  =  gate(t) * D_k(t) / C_k(t) * (alpha_k + beta_k t)
+    d log C_k / d t   (t)  =  gate(t) * D_k(t) / C_k(t) * (gamma0_k + gamma1_k t) / t
+
+with ``D_k`` a pdf-like per-grid-point numerator and
+``alpha/beta/gamma0/gamma1`` per-channel constants (see
+``kernels/frontier_grid.py`` for the derivation). That affine-in-``t``
+structure is what keeps the fused kernel a two-pass streaming computation: at
+most four per-channel accumulators (``P0/P1/Pv0/Pv1``), with the pure scale
+families (normal, empirical) and lognormal needing only two — the
+per-family accumulator count is part of the autotune working-set model.
+
+Point-mass convention (single-sourced here): a degenerate channel — zero
+work, zero spread, or both — is a point mass at its effective mean, and its
+CDF is **right-continuous**: ``P(T <= t) = 1`` iff ``t >= mean`` (so a w=0
+channel has "already finished" for every ``t >= 0``). Both the strict side
+(``t < mean -> 0``) and the non-strict side (``t >= mean -> 1``) follow from
+the one expression in :func:`point_mass_cdf`; the quadrature oracles and both
+Pallas kernels share it rather than re-deriving the comparison locally.
+
+All functions are pure jnp, broadcasting-agnostic (the vectorized (F, T, K)
+reference path and the Pallas kernels' (block_f, T) per-channel slices call
+the same code) and differentiable where the math is.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FAMILIES",
+    "EMP_COMPONENTS",
+    "phi",
+    "Phi",
+    "Phi_c",
+    "log_Phi",
+    "scaled_channel_params",
+    "point_mass_cdf",
+    "safe_cdf",
+    "extra_rows",
+    "family_effective_moments",
+    "family_cdf",
+    "family_pdf_parts",
+    "family_coeffs",
+    "family_accumulators",
+    "family_sample",
+    "ChannelFamily",
+    "Normal",
+    "LogNormal",
+    "Drift",
+    "Empirical",
+    "get_family",
+    "resolve_family",
+]
+
+FAMILIES = ("normal", "lognormal", "drift", "empirical")
+
+# Static mixture size for the empirical family: big enough for bimodal
+# contention profiles, small enough that the kernel's per-channel inner loop
+# stays register-resident.
+EMP_COMPONENTS = 3
+
+_SQRT2 = 1.4142135623730951
+_SQRT_2PI = 2.5066282746310002
+_TINY = 1e-20  # safe-log floor; anything below the t-grid's resolution
+
+
+# --------------------------------------------------------------------------
+# standard-normal primitives (moved verbatim from core/normal.py; that module
+# re-exports these for compatibility)
+# --------------------------------------------------------------------------
+
+def phi(x: jax.Array) -> jax.Array:
+    """Standard normal pdf."""
+    return jnp.exp(-0.5 * x * x) / _SQRT_2PI
+
+
+def Phi(x: jax.Array) -> jax.Array:
+    """Standard normal cdf via erf (TPU/VPU friendly; no erfc tables)."""
+    return 0.5 * (1.0 + jax.lax.erf(x / _SQRT2))
+
+
+def Phi_c(x: jax.Array) -> jax.Array:
+    """Standard normal survival function 1 - Phi(x), numerically stable tail."""
+    return 0.5 * jax.lax.erfc(x / _SQRT2)
+
+
+def log_Phi(x: jax.Array) -> jax.Array:
+    """log CDF, stable for moderately negative x (sufficient for our grids)."""
+    return jnp.log(jnp.clip(Phi(x), 1e-300, 1.0))
+
+
+def scaled_channel_params(w, mu, sigma):
+    """Per-channel Normal completion-time params for work fraction ``w``.
+
+    T_i ~ N(w*mu_i, (w*sigma_i)^2)  (the paper's scaling assumption; other
+    families go through :func:`family_effective_moments`).
+    """
+    w = jnp.asarray(w)
+    return w * mu, w * sigma
+
+
+def point_mass_cdf(t, mean):
+    """CDF of a point mass at ``mean``: right-continuous, 1 iff ``t >= mean``.
+
+    THE degenerate-channel convention. Every call site (safe_cdf, the
+    reference quadratures, both Pallas kernel bodies) uses this expression so
+    the strict side (t < mean -> 0) and the non-strict side (t >= mean -> 1)
+    can never drift apart between layers.
+    """
+    t = jnp.asarray(t)
+    return (t >= mean).astype(t.dtype if jnp.issubdtype(t.dtype, jnp.floating)
+                              else jnp.float32)
+
+
+def safe_cdf(t, mean, std):
+    """CDF of N(mean, std^2) at t, treating std==0 as a point mass at ``mean``.
+
+    For w=0 channels mean is also 0, so the channel contributes CDF 1 for
+    t>=0 ("no work -> already finished"). The degenerate branch follows
+    :func:`point_mass_cdf` (right-continuous at t == mean).
+    """
+    std_ok = std > 0.0
+    z = (t - mean) / jnp.where(std_ok, std, 1.0)
+    return jnp.where(std_ok, Phi(z), point_mass_cdf(t, mean))
+
+
+# --------------------------------------------------------------------------
+# family math, selected by static dist_id
+# --------------------------------------------------------------------------
+
+def _check_dist(dist_id: str) -> None:
+    if dist_id not in FAMILIES:
+        raise ValueError(f"dist_id must be one of {FAMILIES}, got {dist_id!r}")
+
+
+def extra_rows(dist_id: str) -> int:
+    """Rows of the (E, K) ``extra`` parameter array each family carries.
+
+    Families without shape parameters still carry one zero row so the kernel
+    launch signature (and its BlockSpec) is uniform across families.
+    """
+    _check_dist(dist_id)
+    return 3 * EMP_COMPONENTS if dist_id == "empirical" else 1
+
+
+def _mixture_stats(extra):
+    """(m_mix, s_mix) of the per-unit-rate Gaussian mixture in ``extra``.
+
+    extra rows: [pi_0..pi_{C-1}, m_0..m_{C-1}, s_0..s_{C-1}].
+    """
+    C = EMP_COMPONENTS
+    pis = [extra[c] for c in range(C)]
+    ms = [extra[C + c] for c in range(C)]
+    ss = [extra[2 * C + c] for c in range(C)]
+    m_mix = sum(p * m for p, m in zip(pis, ms))
+    e2 = sum(p * (s * s + m * m) for p, m, s in zip(pis, ms, ss))
+    s_mix = jnp.sqrt(jnp.maximum(e2 - m_mix * m_mix, 0.0))
+    return m_mix, s_mix
+
+
+def lognormal_shape_np(mu, sigma):
+    """Numpy twin of :func:`_lognormal_shape` for host-side samplers.
+
+    Returns ``(s_l, base)`` with ``R ~ LN(base, s_l^2)`` moment-matched to
+    ``(mu, sigma)``. The simulator and :func:`family_sample` both draw
+    through this, so ground truth and the solver's quadrature can only share
+    one definition of the moment matching.
+    """
+    mu = np.maximum(np.asarray(mu, np.float64), 1e-300)
+    s2 = np.log1p((np.asarray(sigma, np.float64) / mu) ** 2)
+    return np.sqrt(s2), np.log(mu) - 0.5 * s2
+
+
+def _lognormal_shape(mu, sigma):
+    """(s_l, base) of the moment-matched log-normal per-unit rate.
+
+    R ~ LN(log(mu) - s_l^2/2, s_l^2) has mean mu and std sigma when
+    s_l^2 = log(1 + (sigma/mu)^2); the CoV is scale-free, so s_l does not
+    depend on the work share w. ``base = log(mu) - s_l^2/2`` (add log(w) for
+    the scaled completion time).
+    """
+    mu_ok = mu > 0.0
+    safe_mu = jnp.where(mu_ok, mu, 1.0)
+    s2 = jnp.log1p(jnp.square(sigma / safe_mu))
+    s_l = jnp.sqrt(s2)
+    base = jnp.log(safe_mu) - 0.5 * s2
+    return s_l, base
+
+
+def _drift_mean_scale(w, extra):
+    """g(w) = w (1 + rho w / 2): the drift family's mean multiplier."""
+    rho = extra[0]
+    return w * (1.0 + 0.5 * rho * w)
+
+
+def family_effective_moments(dist_id: str, w, mu, sigma, extra):
+    """(mean, std) of the completion time T(w) under the family.
+
+    This is what the integration reach ``tmax = max_k(mean_k + z std_k)``
+    and the scheduler's moment predictions consume. Lognormal is
+    moment-matched by construction, so its effective moments equal the
+    normal family's.
+    """
+    _check_dist(dist_id)
+    if dist_id in ("normal", "lognormal"):
+        return w * mu, w * sigma
+    if dist_id == "drift":
+        return mu * _drift_mean_scale(w, extra), w * sigma
+    m_mix, s_mix = _mixture_stats(extra)
+    return w * m_mix, w * s_mix
+
+
+def _raw_cdf(dist_id: str, t, w, mu, sigma, extra, ok, safe_w):
+    """Family CDF with degenerate denominators substituted (gate with ``ok``)."""
+    if dist_id == "normal":
+        std = w * sigma
+        z = (t - w * mu) / jnp.where(ok, std, 1.0)
+        return Phi(z)
+    if dist_id == "lognormal":
+        s_l, base = _lognormal_shape(mu, sigma)
+        s_safe = jnp.where(ok, s_l, 1.0)
+        z = (jnp.log(jnp.maximum(t, _TINY)) - jnp.log(safe_w) - base) / s_safe
+        return Phi(z)
+    if dist_id == "drift":
+        m_d = mu * _drift_mean_scale(w, extra)
+        std = w * sigma
+        z = (t - m_d) / jnp.where(ok, std, 1.0)
+        return Phi(z)
+    # empirical mixture: sum_c pi_c Phi((t - w m_c)/(w s_c)); a zero-spread
+    # component degenerates to its own (right-continuous) point mass
+    C = EMP_COMPONENTS
+    acc = 0.0
+    for c in range(C):
+        pi_c, m_c, s_c = extra[c], extra[C + c], extra[2 * C + c]
+        c_ok = ok & (s_c > 0.0)
+        z_c = (t - w * m_c) / jnp.where(c_ok, w * s_c, 1.0)
+        cdf_c = jnp.where(c_ok, Phi(z_c), point_mass_cdf(t, w * m_c))
+        acc = acc + pi_c * cdf_c
+    return acc
+
+
+def _family_ok(dist_id: str, w, mu, sigma, extra):
+    """Non-degenerate mask: channels with an absolutely continuous T(w)."""
+    if dist_id == "lognormal":
+        return (w > 0.0) & (sigma > 0.0) & (mu > 0.0)
+    if dist_id == "empirical":
+        _, s_mix = _mixture_stats(extra)
+        return (w > 0.0) & (s_mix > 0.0)
+    return (w * sigma) > 0.0
+
+
+def family_cdf(dist_id: str, t, w, mu, sigma, extra):
+    """P(T(w) <= t) for one channel (broadcasting over any leading shape).
+
+    Degenerate channels (w=0, sigma=0, or a spread-free mixture) are a point
+    mass at the family's effective mean, right-continuous per
+    :func:`point_mass_cdf`.
+    """
+    _check_dist(dist_id)
+    ok = _family_ok(dist_id, w, mu, sigma, extra)
+    safe_w = jnp.where(w > 0.0, w, 1.0)
+    raw = _raw_cdf(dist_id, t, w, mu, sigma, extra, ok, safe_w)
+    m_eff, _ = family_effective_moments(dist_id, w, mu, sigma, extra)
+    return jnp.where(ok, raw, point_mass_cdf(t, m_eff))
+
+
+def family_pdf_parts(dist_id: str, t, w, mu, sigma, extra):
+    """Per-grid-point adjoint pieces: ``(cdf_raw, D, ok)``.
+
+    ``cdf_raw`` is the un-substituted CDF (drives the clip/saturation gates),
+    ``D`` the pdf-like numerator with ``dC/dw = D * (alpha + beta t)`` and
+    ``dC/dt = D * (gamma0 + gamma1 t) / t`` for the per-channel constants
+    from :func:`family_coeffs`, and ``ok`` the non-degenerate mask (False
+    rows contribute no direct gradient — a point mass is flat a.e.).
+    """
+    _check_dist(dist_id)
+    ok = _family_ok(dist_id, w, mu, sigma, extra)
+    safe_w = jnp.where(w > 0.0, w, 1.0)
+    cdf_raw = _raw_cdf(dist_id, t, w, mu, sigma, extra, ok, safe_w)
+    if dist_id == "normal":
+        z = (t - w * mu) / jnp.where(ok, w * sigma, 1.0)
+        D = phi(z)
+    elif dist_id == "lognormal":
+        s_l, base = _lognormal_shape(mu, sigma)
+        z = (jnp.log(jnp.maximum(t, _TINY)) - jnp.log(safe_w)
+             - base) / jnp.where(ok, s_l, 1.0)
+        D = phi(z)
+    elif dist_id == "drift":
+        m_d = mu * _drift_mean_scale(w, extra)
+        z = (t - m_d) / jnp.where(ok, w * sigma, 1.0)
+        D = phi(z)
+    else:  # empirical: D = sum_c pi_c phi(z_c) / s_c
+        C = EMP_COMPONENTS
+        D = 0.0
+        for c in range(C):
+            pi_c, m_c, s_c = extra[c], extra[C + c], extra[2 * C + c]
+            c_ok = ok & (s_c > 0.0)
+            z_c = (t - w * m_c) / jnp.where(c_ok, w * s_c, 1.0)
+            D = D + jnp.where(c_ok, pi_c / jnp.where(c_ok, s_c, 1.0), 0.0) \
+                * phi(z_c)
+    return cdf_raw, D, ok
+
+
+def family_coeffs(dist_id: str, w, mu, sigma, extra):
+    """Per-channel adjoint constants ``(alpha, beta, gamma0, gamma1)``.
+
+    With ``D`` from :func:`family_pdf_parts`:
+
+        dC/dw |_t  = D(t) * (alpha + beta * t)          (fixed-grid term)
+        dC/dt |_t  = D(t) * (gamma0 + gamma1 * t) / t   (moving-grid term)
+
+    The companion :func:`family_dreach` supplies ``d(mean + z*std)/dw`` for
+    the tmax cotangent on the argmax channel. Degenerate channels get
+    all-zero constants (their
+    point-mass CDF is flat a.e.; they still receive the grid-path gradient
+    through ``dreach`` when they set the integration end). Note gamma* are
+    defined so the kernels' accumulators contract them exactly:
+    ``sum_j a_jk t_j * (dC/dt)/D = gamma0 * P0 + gamma1 * P1``.
+    """
+    _check_dist(dist_id)
+    ok = _family_ok(dist_id, w, mu, sigma, extra)
+    zero = jnp.zeros_like(w * mu)
+
+    def guard(x):
+        return jnp.where(ok, x, 0.0)
+
+    if dist_id == "normal":
+        inv_w2s = 1.0 / jnp.where(ok, w * w * sigma, 1.0)
+        inv_s = 1.0 / jnp.where(ok, w * sigma, 1.0)
+        return zero, guard(-inv_w2s), zero, guard(inv_s)
+    if dist_id == "lognormal":
+        s_l, _ = _lognormal_shape(mu, sigma)
+        inv_ws = 1.0 / jnp.where(ok, w * s_l, 1.0)
+        # dz/dw = -1/(w s_l) (t-free); dz/dt = 1/(t s_l): gamma0 contracts P0
+        inv_sl = 1.0 / jnp.where(ok, s_l, 1.0)
+        return guard(-inv_ws), zero, guard(inv_sl), zero
+    if dist_id == "drift":
+        rho = extra[0]
+        inv_w2s = 1.0 / jnp.where(ok, w * w * sigma, 1.0)
+        inv_s = 1.0 / jnp.where(ok, w * sigma, 1.0)
+        # z = (t - mu g(w)) / (w sigma), g = w(1 + rho w/2):
+        # dz/dw = -mu g'/(w s) - z/w collapses to -(rho mu)/(2 sigma) - t/(w^2 s)
+        alpha = guard(-0.5 * rho * mu / jnp.where(ok, sigma, 1.0))
+        return alpha, guard(-inv_w2s), zero, guard(inv_s)
+    # empirical: scale family in w -> dC/dw = -(t/w) pdf, dC/dt = pdf = D/w
+    inv_w2 = 1.0 / jnp.where(ok, w * w, 1.0)
+    inv_w = 1.0 / jnp.where(ok, w, 1.0)
+    return zero, guard(-inv_w2), zero, guard(inv_w)
+
+
+def family_accumulators(dist_id: str) -> Tuple[bool, bool]:
+    """Which per-channel accumulator pairs the fused adjoint needs.
+
+    Returns ``(use_p0, use_p1)``: P0/Pv0 contract the t-free (alpha, gamma0)
+    coefficients, P1/Pv1 the t-weighted (beta, gamma1) ones. Pure scale
+    families (normal, empirical) and drift keep P1; lognormal's log-space
+    z-score is t-free in dw and needs P0 instead; drift's affine dz/dw needs
+    both — 4 live (block_f, K) accumulators instead of 2, which is why the
+    family is part of the autotune working-set model and cache key.
+    """
+    _check_dist(dist_id)
+    return {
+        "normal": (False, True),
+        "lognormal": (True, False),
+        "drift": (True, True),
+        "empirical": (False, True),
+    }[dist_id]
+
+
+def family_dreach(dist_id: str, w, mu, sigma, extra, z: float):
+    """d(reach)/dw per channel, reach = effective mean + z * effective std."""
+    _check_dist(dist_id)
+    if dist_id in ("normal", "lognormal"):
+        return mu + z * sigma
+    if dist_id == "drift":
+        rho = extra[0]
+        return mu * (1.0 + rho * w) + z * sigma
+    m_mix, s_mix = _mixture_stats(extra)
+    return (m_mix + z * s_mix) * jnp.ones_like(w)
+
+
+def family_sample(dist_id: str, rng: np.random.Generator, w, mu, sigma, extra,
+                  size: int) -> np.ndarray:
+    """Draw ``size`` completion-time samples T(w) per channel (numpy, host).
+
+    Shapes: w/mu/sigma (K,), extra (E, K) -> (size, K). The Monte-Carlo
+    ground truth for the family: the oracle tests sample through this, and
+    ``sim.ClusterSim`` mirrors the same formulas (via
+    :func:`lognormal_shape_np` and the drift mean term) with stream-shaped
+    per-fleet draws.
+    """
+    _check_dist(dist_id)
+    w = np.asarray(w, np.float64)
+    mu = np.asarray(mu, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    extra = np.asarray(extra, np.float64)
+    if dist_id == "normal":
+        return w * rng.normal(mu, sigma, size=(size, w.shape[0]))
+    if dist_id == "lognormal":
+        s_l, base = lognormal_shape_np(mu, sigma)
+        r = rng.lognormal(base, s_l, size=(size, w.shape[0]))
+        return w * r
+    if dist_id == "drift":
+        rho = extra[0]
+        base = w * rng.normal(mu, sigma, size=(size, w.shape[0]))
+        return base + 0.5 * rho * mu * w * w  # deterministic mean inflation
+    C = EMP_COMPONENTS
+    pis = extra[:C].T                       # (K, C)
+    ms, ss = extra[C:2 * C].T, extra[2 * C:3 * C].T
+    K = w.shape[0]
+    out = np.empty((size, K))
+    for k in range(K):
+        comp = rng.choice(C, size=size, p=pis[k] / pis[k].sum())
+        out[:, k] = w[k] * rng.normal(ms[k][comp], ss[k][comp])
+    return out
+
+
+# --------------------------------------------------------------------------
+# the ChannelFamily objects (host-side API surface)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChannelFamily:
+    """A completion-time distribution family: static ``dist_id`` + params.
+
+    Instances are what the user-facing layers accept (``family=`` on
+    ``frontier_moments``, ``frontier_kch``, ``optimize_weights``,
+    ``UncertaintyAwareBalancer``, ``PartitionedBatcher``); plain family-name
+    strings are accepted everywhere too and resolved via :func:`get_family`.
+    :func:`resolve_family` lowers either form to the kernel-facing
+    ``(dist_id, extra)`` pair.
+    """
+
+    dist_id: str = "normal"
+
+    def extra(self, k: int) -> np.ndarray:
+        """(E, K) float32 per-channel shape parameters for the kernels."""
+        return np.zeros((extra_rows(self.dist_id), k), np.float32)
+
+    def state_dict(self) -> dict:
+        return {"dist_id": self.dist_id}
+
+
+class Normal(ChannelFamily):
+    def __init__(self):
+        super().__init__(dist_id="normal")
+
+
+class LogNormal(ChannelFamily):
+    def __init__(self):
+        super().__init__(dist_id="lognormal")
+
+
+@dataclass(frozen=True)
+class Drift(ChannelFamily):
+    """Straggler family: per-channel drift rate ``rho`` (scalar broadcasts).
+
+    ``rho[k] = 0`` reduces channel k to the normal family exactly, so one
+    Drift family covers a mixed fleet — which is how the straggler policy
+    prices detected stragglers instead of dropping them.
+    """
+
+    rho: object = 0.0
+
+    def __init__(self, rho=0.0):
+        super().__init__(dist_id="drift")
+        object.__setattr__(self, "rho", np.asarray(rho, np.float32))
+
+    def extra(self, k: int) -> np.ndarray:
+        rho = np.broadcast_to(np.asarray(self.rho, np.float32), (k,))
+        return rho[None, :].copy()
+
+    def state_dict(self) -> dict:
+        return {"dist_id": "drift", "rho": np.asarray(self.rho).tolist()}
+
+
+@dataclass(frozen=True)
+class Empirical(ChannelFamily):
+    """Gaussian-mixture fit of observed per-unit rates (C components/channel).
+
+    ``weights/means/stds`` are (C, K). Build from raw observations with
+    :meth:`from_samples` (deterministic quantile-initialized EM, variance
+    floored so the kernels never see a spread-free component unless the data
+    is literally constant).
+    """
+
+    weights: np.ndarray = None
+    means: np.ndarray = None
+    stds: np.ndarray = None
+
+    def __init__(self, weights, means, stds):
+        super().__init__(dist_id="empirical")
+        w = np.asarray(weights, np.float32)
+        if w.ndim == 1:
+            w, means, stds = (np.asarray(a, np.float32)[:, None]
+                              for a in (weights, means, stds))
+        else:
+            means = np.asarray(means, np.float32)
+            stds = np.asarray(stds, np.float32)
+        if w.shape[0] != EMP_COMPONENTS:
+            raise ValueError(f"expected {EMP_COMPONENTS} mixture components, "
+                             f"got {w.shape[0]}")
+        w = w / np.maximum(w.sum(axis=0, keepdims=True), 1e-12)
+        object.__setattr__(self, "weights", w)
+        object.__setattr__(self, "means", means)
+        object.__setattr__(self, "stds", np.asarray(stds, np.float32))
+
+    @classmethod
+    def from_samples(cls, samples, iters: int = 40,
+                     var_floor_frac: float = 1e-3) -> "Empirical":
+        """Fit per-channel mixtures from observed rates.
+
+        ``samples``: (N, K) array or length-K sequence of 1-D arrays of
+        per-unit-work durations. Deterministic: quantile init, fixed EM
+        iteration count, no RNG.
+        """
+        if isinstance(samples, np.ndarray) and samples.ndim == 2:
+            cols = [samples[:, k] for k in range(samples.shape[1])]
+        else:
+            cols = [np.asarray(s, np.float64).ravel() for s in samples]
+        C = EMP_COMPONENTS
+        W = np.empty((C, len(cols)))
+        M = np.empty((C, len(cols)))
+        S = np.empty((C, len(cols)))
+        for k, x in enumerate(cols):
+            W[:, k], M[:, k], S[:, k] = _em_1d(np.asarray(x, np.float64),
+                                               C, iters, var_floor_frac)
+        return cls(W, M, S)
+
+    def extra(self, k: int) -> np.ndarray:
+        if self.weights.shape[1] == 1 and k > 1:
+            tile = lambda a: np.broadcast_to(a, (EMP_COMPONENTS, k))
+            return np.concatenate([tile(self.weights), tile(self.means),
+                                   tile(self.stds)], axis=0).astype(np.float32)
+        if self.weights.shape[1] != k:
+            raise ValueError(f"family fitted for K={self.weights.shape[1]} "
+                             f"channels, asked for K={k}")
+        return np.concatenate([self.weights, self.means, self.stds],
+                              axis=0).astype(np.float32)
+
+    def state_dict(self) -> dict:
+        return {"dist_id": "empirical", "weights": self.weights.tolist(),
+                "means": self.means.tolist(), "stds": self.stds.tolist()}
+
+
+def _em_1d(x: np.ndarray, C: int, iters: int, var_floor_frac: float):
+    """Deterministic 1-D Gaussian-mixture EM (quantile init, floored vars)."""
+    n = x.shape[0]
+    if n == 0:
+        raise ValueError("cannot fit an empirical family from zero samples")
+    spread = max(float(x.std()), abs(float(x.mean())) * 1e-6, 1e-12)
+    floor = (var_floor_frac * spread) ** 2
+    mus = np.quantile(x, (np.arange(C) + 0.5) / C)
+    vars_ = np.full(C, max(spread ** 2 / C, floor))
+    pis = np.full(C, 1.0 / C)
+    for _ in range(iters):
+        # E-step in log space for stability
+        logp = (-0.5 * ((x[None, :] - mus[:, None]) ** 2) / vars_[:, None]
+                - 0.5 * np.log(2 * np.pi * vars_[:, None])
+                + np.log(np.maximum(pis[:, None], 1e-300)))
+        logp -= logp.max(axis=0, keepdims=True)
+        r = np.exp(logp)
+        r /= np.maximum(r.sum(axis=0, keepdims=True), 1e-300)
+        nk = np.maximum(r.sum(axis=1), 1e-12)
+        mus = (r @ x) / nk
+        vars_ = np.maximum((r @ (x ** 2)) / nk - mus ** 2, floor)
+        pis = nk / n
+    order = np.argsort(mus)
+    return pis[order], mus[order], np.sqrt(vars_[order])
+
+
+_SINGLETONS = {"normal": Normal(), "lognormal": LogNormal(),
+               "drift": Drift(0.0)}
+
+
+def get_family(family) -> ChannelFamily:
+    """Accept a family name or a ChannelFamily instance; return the instance."""
+    if isinstance(family, ChannelFamily):
+        return family
+    if family is None:
+        return _SINGLETONS["normal"]
+    if isinstance(family, str):
+        if family == "empirical":
+            raise ValueError("the empirical family carries fitted parameters; "
+                             "build it with Empirical.from_samples(...) "
+                             "instead of the bare name")
+        if family in _SINGLETONS:
+            return _SINGLETONS[family]
+        raise ValueError(f"unknown family {family!r}; expected one of "
+                         f"{FAMILIES} or a ChannelFamily instance")
+    if isinstance(family, dict):  # state_dict round-trip
+        d = dict(family)
+        dist = d.pop("dist_id")
+        if dist == "drift":
+            return Drift(np.asarray(d["rho"], np.float32))
+        if dist == "empirical":
+            return Empirical(np.asarray(d["weights"]), np.asarray(d["means"]),
+                             np.asarray(d["stds"]))
+        return _SINGLETONS[dist]
+    raise TypeError(f"cannot interpret {type(family).__name__} as a family")
+
+
+def resolve_family(family, k: int) -> Tuple[str, np.ndarray]:
+    """Lower a family spec to the kernel-facing ``(dist_id, extra (E,K))``.
+
+    Accepts a family name, a ChannelFamily instance, a state_dict, or an
+    already-lowered ``(dist_id, extra)`` pair — the latter passes traced
+    ``extra`` arrays straight through, which is what jitted solvers use to
+    avoid retracing when only the family parameters move.
+    """
+    if isinstance(family, tuple) and len(family) == 2:
+        dist_id, extra = family
+        _check_dist(dist_id)
+        if tuple(extra.shape) != (extra_rows(dist_id), k):
+            raise ValueError(f"extra for {dist_id!r} must be "
+                             f"({extra_rows(dist_id)}, {k}), got {extra.shape}")
+        return dist_id, extra
+    fam = get_family(family)
+    return fam.dist_id, fam.extra(k)

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
-from .maxstat import max_moments_quad
-from .normal import scaled_channel_params
+from .distributions import resolve_family
+from .maxstat import max_moments_quad_w
 
 __all__ = [
     "FrontierResult",
@@ -58,47 +58,52 @@ class FrontierResult:
                      else np.argmin(self.var))
 
 
-def moments_for_split(w, mus, sigmas, num: int = 2048) -> Tuple[jax.Array, jax.Array]:
+def moments_for_split(w, mus, sigmas, num: int = 2048,
+                      family="normal") -> Tuple[jax.Array, jax.Array]:
     """(mu, var) of the joint completion time for one split vector ``w``.
 
     Single-split oracle (survival-integral quadrature); batched candidate
     sweeps go through :func:`curve_weights` / ``ops.frontier_moments``.
     """
-    means, stds = scaled_channel_params(w, mus, sigmas)
-    return max_moments_quad(means, stds, num=num)
+    return max_moments_quad_w(w, mus, sigmas, num=num, family=family)
 
 
-@partial(jax.jit, static_argnames=("num_t", "impl", "block_f"))
-def _batched_moments(W, mus, sigmas, num_t: int, impl: str,
-                     block_f: Optional[int] = None):
+@partial(jax.jit, static_argnames=("num_t", "impl", "block_f", "dist_id"))
+def _batched_moments(W, mus, sigmas, extra, num_t: int, impl: str,
+                     block_f: Optional[int] = None, dist_id: str = "normal"):
     return ops.frontier_moments(W, mus, sigmas, num_t=num_t, impl=impl,
-                                block_f=block_f)
+                                block_f=block_f, family=(dist_id, extra))
 
 
-@partial(jax.jit, static_argnames=("num_f", "num_t", "impl"))
 def curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201, num_t: int = 2048,
-              impl: str = "xla"):
+              impl: str = "xla", family="normal"):
     """μ(f), σ²(f) for f in [0,1]: channel i gets f, channel j gets 1-f.
 
-    Matches the paper's Figure 1 setup exactly. Returns (f, mu, var) arrays.
-    The whole f-grid is evaluated as one (num_f, 2) batch in a single
+    Matches the paper's Figure 1 setup exactly (``family`` swaps the
+    completion-time model; "normal" is the paper's). Returns (f, mu, var)
+    arrays. The whole f-grid is evaluated as one (num_f, 2) batch in a single
     ``frontier_moments`` launch.
     """
     fs = jnp.linspace(0.0, 1.0, num_f)
     W = jnp.stack([fs, 1.0 - fs], axis=1)
     mus = jnp.stack([jnp.asarray(mu_i, jnp.float32), jnp.asarray(mu_j, jnp.float32)])
     sgs = jnp.stack([jnp.asarray(sigma_i, jnp.float32), jnp.asarray(sigma_j, jnp.float32)])
-    mu, var = _batched_moments(W, mus, sgs, num_t, impl)
+    dist_id, extra = resolve_family(family, 2)
+    mu, var = _batched_moments(W, mus, sgs, jnp.asarray(extra, jnp.float32),
+                               num_t, impl, None, dist_id)
     return fs, mu, var
 
 
 def curve_weights(W, mus, sigmas, num_t: int = 2048, impl: str = "xla",
-                  block_f: Optional[int] = None):
+                  block_f: Optional[int] = None, family="normal"):
     """Batched (mu, var) over K-channel weight vectors W: (F, K)."""
-    return _batched_moments(jnp.asarray(W, jnp.float32),
+    W = jnp.asarray(W, jnp.float32)
+    dist_id, extra = resolve_family(family, W.shape[1])
+    return _batched_moments(W,
                             jnp.asarray(mus, jnp.float32),
                             jnp.asarray(sigmas, jnp.float32),
-                            num_t, impl, block_f)
+                            jnp.asarray(extra, jnp.float32),
+                            num_t, impl, block_f, dist_id)
 
 
 def pareto_mask(mu: np.ndarray, var: np.ndarray) -> np.ndarray:
@@ -121,10 +126,11 @@ def pareto_mask(mu: np.ndarray, var: np.ndarray) -> np.ndarray:
 
 
 def frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f: int = 201,
-                 num_t: int = 2048, impl: str = "xla") -> FrontierResult:
+                 num_t: int = 2048, impl: str = "xla",
+                 family="normal") -> FrontierResult:
     """Full paper pipeline for two channels: curves + efficient frontier."""
     fs, mu, var = curve_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f,
-                            num_t=num_t, impl=impl)
+                            num_t=num_t, impl=impl, family=family)
     fs, mu, var = np.asarray(fs), np.asarray(mu), np.asarray(var)
     return FrontierResult(f=fs, mu=mu, var=var, efficient=pareto_mask(mu, var))
 
@@ -184,13 +190,14 @@ def frontier_kch(mus, sigmas, num_f: int = 512, num_t: int = 1024,
                  lam: float = 0.0, impl: str = "xla",
                  block_f: Optional[int] = None,
                  key: Optional[jax.Array] = None, include_pgd: bool = True,
-                 pgd_steps: int = 120) -> FrontierResult:
+                 pgd_steps: int = 120, family="normal") -> FrontierResult:
     """K-channel efficient frontier (beyond the paper's 2-channel exposition).
 
     Generates simplex candidates (structured grid for K<=3, Sobol/Dirichlet
     for larger K, plus the PGD solution of the scalarized objective so the
-    frontier always contains an optimized point), evaluates all of them in one
-    batched ``frontier_moments`` launch, and extracts the Pareto subset.
+    frontier always contains an optimized point), evaluates all of them under
+    the requested completion-time ``family`` in one batched
+    ``frontier_moments`` launch, and extracts the Pareto subset.
     """
     mus = np.asarray(mus, np.float64)
     sigmas = np.asarray(sigmas, np.float64)
@@ -200,10 +207,11 @@ def frontier_kch(mus, sigmas, num_f: int = 512, num_t: int = 1024,
         from .partitioner import optimize_weights  # lazy: avoids import cycle
 
         dec = optimize_weights(mus, sigmas, lam=lam, steps=pgd_steps,
-                               num_t=num_t, restarts=0, impl=impl)
+                               num_t=num_t, restarts=0, impl=impl,
+                               family=family)
         W = np.concatenate([W, dec.weights[None, :]], axis=0)
     mu, var = curve_weights(W, mus, sigmas, num_t=num_t, impl=impl,
-                            block_f=block_f)
+                            block_f=block_f, family=family)
     mu, var = np.asarray(mu), np.asarray(var)
     return FrontierResult(f=W, mu=mu, var=var, efficient=pareto_mask(mu, var))
 

@@ -32,11 +32,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from . import distributions as dists
 from .normal import Phi, phi, safe_cdf
 
 __all__ = [
     "joint_cdf",
+    "joint_cdf_w",
     "max_moments_quad",
+    "max_moments_quad_w",
     "clark_max_moments_2",
     "clark_max_moments_seq",
     "max_moments_mc",
@@ -52,6 +55,20 @@ def joint_cdf(t, means, stds):
     """
     t = jnp.asarray(t)[..., None]
     return jnp.prod(safe_cdf(t, means, stds), axis=-1)
+
+
+def joint_cdf_w(t, w, mus, sigmas, family="normal"):
+    """Family-generic joint CDF: P(max_i T_i(w_i) <= t), w/mus/sigmas (K,).
+
+    Unlike :func:`joint_cdf` this takes the *split* and per-unit statistics
+    (not pre-scaled means/stds) because non-scale families (drift) are not
+    linear in w.
+    """
+    dist_id, extra = dists.resolve_family(family, jnp.asarray(w).shape[-1])
+    t = jnp.asarray(t)[..., None]
+    cdf = dists.family_cdf(dist_id, t, jnp.asarray(w), jnp.asarray(mus),
+                           jnp.asarray(sigmas), jnp.asarray(extra))
+    return jnp.prod(cdf, axis=-1)
 
 
 def time_grid(means, stds, num: int = 2048, z: float = 10.0):
@@ -77,6 +94,32 @@ def max_moments_quad(means, stds, num: int = 2048) -> Tuple[jax.Array, jax.Array
     stds = jnp.asarray(stds, means.dtype)
     ts = time_grid(means, stds, num=num)
     surv = 1.0 - joint_cdf(ts, means, stds)  # (num,)
+    mu = jnp.trapezoid(surv, ts)
+    m2 = 2.0 * jnp.trapezoid(ts * surv, ts)
+    var = jnp.maximum(m2 - mu * mu, 0.0)
+    return mu, var
+
+
+def max_moments_quad_w(w, mus, sigmas, num: int = 2048,
+                       family="normal") -> Tuple[jax.Array, jax.Array]:
+    """Family-generic single-split oracle: (mean, var) of max_i T_i(w_i).
+
+    Same survival integral as :func:`max_moments_quad`, with the per-channel
+    completion-time distribution drawn from ``family`` (the grid reach uses
+    the family's effective moments). This is the candidate-evaluation oracle
+    the batched kernel path is tested against for every family.
+    """
+    dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    w = jnp.asarray(w, dtype)
+    dist_id, extra = dists.resolve_family(family, w.shape[-1])
+    mus = jnp.asarray(mus, dtype)
+    sigmas = jnp.asarray(sigmas, dtype)
+    extra = jnp.asarray(extra, dtype)
+    m_eff, s_eff = dists.family_effective_moments(dist_id, w, mus, sigmas,
+                                                  extra)
+    ts = time_grid(m_eff, s_eff, num=num)
+    cdf = dists.family_cdf(dist_id, ts[:, None], w, mus, sigmas, extra)
+    surv = 1.0 - jnp.prod(cdf, axis=-1)
     mu = jnp.trapezoid(surv, ts)
     m2 = 2.0 * jnp.trapezoid(ts * surv, ts)
     var = jnp.maximum(m2 - mu * mu, 0.0)

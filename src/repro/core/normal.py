@@ -1,64 +1,26 @@
-"""Normal-distribution primitives used throughout the partitioning core.
-
-Everything is pure jnp, float64-safe when x64 is enabled, and vmap/jit friendly.
-The paper models per-channel completion time of a channel ``i`` processing a
-work fraction ``w`` as ``N(w * mu_i, (w * sigma_i)^2)``.
+"""Compat shim: the Normal-distribution primitives moved to
+``repro.core.distributions`` when the channel completion-time model became a
+pluggable family (normal / lognormal / drift / empirical). Import from there;
+this module re-exports the original names so existing call sites keep working.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from .distributions import (  # noqa: F401
+    Phi,
+    Phi_c,
+    log_Phi,
+    phi,
+    point_mass_cdf,
+    safe_cdf,
+    scaled_channel_params,
+)
 
 __all__ = [
     "phi",
     "Phi",
     "Phi_c",
     "log_Phi",
+    "point_mass_cdf",
     "scaled_channel_params",
     "safe_cdf",
 ]
-
-_SQRT2 = 1.4142135623730951
-_SQRT_2PI = 2.5066282746310002
-
-
-def phi(x: jax.Array) -> jax.Array:
-    """Standard normal pdf."""
-    return jnp.exp(-0.5 * x * x) / _SQRT_2PI
-
-
-def Phi(x: jax.Array) -> jax.Array:
-    """Standard normal cdf via erf (TPU/VPU friendly; no erfc tables)."""
-    return 0.5 * (1.0 + jax.lax.erf(x / _SQRT2))
-
-
-def Phi_c(x: jax.Array) -> jax.Array:
-    """Standard normal survival function 1 - Phi(x), numerically stable tail."""
-    return 0.5 * jax.lax.erfc(x / _SQRT2)
-
-
-def log_Phi(x: jax.Array) -> jax.Array:
-    """log CDF, stable for moderately negative x (sufficient for our grids)."""
-    return jnp.log(jnp.clip(Phi(x), 1e-300, 1.0))
-
-
-def scaled_channel_params(w, mu, sigma):
-    """Per-channel completion-time params when channel gets work fraction ``w``.
-
-    T_i ~ N(w*mu_i, (w*sigma_i)^2)  (paper's scaling assumption).
-    Accepts broadcastable arrays.
-    """
-    w = jnp.asarray(w)
-    return w * mu, w * sigma
-
-
-def safe_cdf(t, mean, std):
-    """CDF of N(mean, std^2) evaluated at t, treating std==0 (zero work) as a
-    point mass at ``mean`` — i.e. a channel with no work has finished for t>=mean.
-
-    For w=0 channels mean is also 0, so the channel contributes CDF 1 for t>=0.
-    """
-    std_ok = std > 0.0
-    z = (t - mean) / jnp.where(std_ok, std, 1.0)
-    point = (t >= mean).astype(z.dtype)
-    return jnp.where(std_ok, Phi(z), point)

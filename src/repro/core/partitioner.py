@@ -30,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from .distributions import resolve_family
 from .frontier import frontier_2ch, select_on_frontier
-from .maxstat import clark_max_moments_seq, max_moments_quad
+from .maxstat import clark_max_moments_seq, max_moments_quad_w
 from .normal import scaled_channel_params
 
 __all__ = [
@@ -72,7 +73,8 @@ def inverse_mu_split(mus) -> jnp.ndarray:
     return inv / jnp.sum(inv)
 
 
-def objective(w, mus, sigmas, lam: float, num_t: int = 1024):
+def objective(w, mus, sigmas, lam: float, num_t: int = 1024,
+              family="normal"):
     """Scalarized mean-variance objective on the joint completion time.
 
     Evaluated as a one-row batch through ``frontier_moments``; differentiable
@@ -81,16 +83,16 @@ def objective(w, mus, sigmas, lam: float, num_t: int = 1024):
     consumes directly.
     """
     mu, var = ops.frontier_moments(jnp.asarray(w)[None, :], mus, sigmas,
-                                   num_t=num_t, impl="xla")
+                                   num_t=num_t, impl="xla", family=family)
     return (mu + lam * var)[0]
 
 
 def optimize_2ch(mu_i, sigma_i, mu_j, sigma_j, lam: float = 0.0,
                  num_f: int = 401, num_t: int = 2048,
-                 impl: str = "xla") -> PartitionDecision:
+                 impl: str = "xla", family="normal") -> PartitionDecision:
     """Paper's two-channel procedure: dense f-grid, frontier, scalarized pick."""
     res = frontier_2ch(mu_i, sigma_i, mu_j, sigma_j, num_f=num_f, num_t=num_t,
-                       impl=impl)
+                       impl=impl, family=family)
     _, (f, mu, var) = select_on_frontier(res, lam=lam)
     w = np.asarray([f, 1.0 - f], dtype=np.float64)
     return PartitionDecision(weights=w, mu=float(mu), var=float(var), method="grid-2ch")
@@ -108,23 +110,27 @@ def _project_simplex(v):
     return jnp.maximum(v - theta, 0.0)
 
 
-@partial(jax.jit, static_argnames=("steps", "num_t", "impl", "block_f"))
-def _pgd_multi(W0, mus, sigmas, lam, steps: int = 200, num_t: int = 1024,
+@partial(jax.jit, static_argnames=("steps", "num_t", "impl", "block_f",
+                                   "dist_id"))
+def _pgd_multi(W0, mus, sigmas, extra, lam, steps: int = 200, num_t: int = 1024,
                lr: float = 0.05, impl: str = "xla",
-               block_f: Optional[int] = None):
+               block_f: Optional[int] = None, dist_id: str = "normal"):
     """All starts solved as ONE batched PGD on the fused kernel.
 
     Each step evaluates the whole (S, K) iterate stack through
     ``frontier_moments_with_grads`` — one fused launch returns moments and
     analytic adjoints, so there is no autodiff replay, no per-start vmap, and
     the compiled Pallas path is usable inside the optimizer (``impl`` selects
-    the backend for the gradient evaluations themselves).
+    the backend for the gradient evaluations themselves; the static
+    ``dist_id`` + traced ``extra`` select the completion-time family without
+    retracing when only family parameters move).
     """
     proj = jax.vmap(_project_simplex)
 
     def body(i, W):
         _, _, dmu, dvar = ops.frontier_moments_with_grads(
-            W, mus, sigmas, num_t=num_t, impl=impl, block_f=block_f)
+            W, mus, sigmas, num_t=num_t, impl=impl, block_f=block_f,
+            family=(dist_id, extra))
         g = dmu + lam * dvar
         # normalize gradient scale so lr is unitless across problem magnitudes
         g = g / (jnp.linalg.norm(g, axis=-1, keepdims=True) + 1e-12)
@@ -138,7 +144,8 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      num_t: int = 1024, restarts: int = 3,
                      key: Optional[jax.Array] = None, impl: str = "xla",
                      warm_start: Optional[np.ndarray] = None,
-                     block_f: Optional[int] = None) -> PartitionDecision:
+                     block_f: Optional[int] = None,
+                     family="normal") -> PartitionDecision:
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
     Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
@@ -153,6 +160,8 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
     k = mus.shape[0]
+    dist_id, extra = resolve_family(family, k)
+    extra = jnp.asarray(extra, jnp.float32)
     starts = [equal_split(k), inverse_mu_split(mus)]
     if warm_start is not None:
         ws = jnp.asarray(warm_start, jnp.float32)
@@ -163,26 +172,33 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
         starts += [dirichlet[i] for i in range(restarts)]
 
     W0 = jnp.stack(starts)
-    Wf = _pgd_multi(W0, mus, sigmas, jnp.float32(lam), steps=steps,
-                    num_t=num_t, impl=impl, block_f=block_f)
+    Wf = _pgd_multi(W0, mus, sigmas, extra, jnp.float32(lam), steps=steps,
+                    num_t=num_t, impl=impl, block_f=block_f, dist_id=dist_id)
     mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=num_t,
-                                       impl=impl, block_f=block_f)
+                                       impl=impl, block_f=block_f,
+                                       family=(dist_id, extra))
     score = np.asarray(mu_c) + lam * np.asarray(var_c)
     best_w = Wf[int(np.argmin(score))]
     # report moments at oracle resolution (one extra single-row launch)
     mu_f, var_f = ops.frontier_moments(best_w[None, :], mus, sigmas,
                                        num_t=max(num_t, 2048), impl=impl,
-                                       block_f=block_f)
+                                       block_f=block_f,
+                                       family=(dist_id, extra))
     return PartitionDecision(weights=np.asarray(best_w, np.float64),
                              mu=float(mu_f[0]), var=float(var_f[0]),
                              method="pgd-simplex")
 
 
-def predict_moments(w, mus, sigmas, exact: bool = True, num_t: int = 2048) -> Tuple[float, float]:
-    """Predicted (mu, var) for an arbitrary split; Clark fast-path optional."""
-    means, stds = scaled_channel_params(jnp.asarray(w), jnp.asarray(mus), jnp.asarray(sigmas))
-    if exact:
-        mu, var = max_moments_quad(means, stds, num=num_t)
+def predict_moments(w, mus, sigmas, exact: bool = True, num_t: int = 2048,
+                    family="normal") -> Tuple[float, float]:
+    """Predicted (mu, var) for an arbitrary split; Clark fast-path optional
+    (Clark moment-matching is Normal-only — non-normal families always take
+    the family-generic quadrature oracle)."""
+    fam_id = resolve_family(family, jnp.asarray(w).shape[-1])[0]
+    if exact or fam_id != "normal":
+        mu, var = max_moments_quad_w(w, mus, sigmas, num=num_t, family=family)
     else:
+        means, stds = scaled_channel_params(jnp.asarray(w), jnp.asarray(mus),
+                                            jnp.asarray(sigmas))
         mu, var = clark_max_moments_seq(means, stds)
     return float(mu), float(var)

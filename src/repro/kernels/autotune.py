@@ -14,13 +14,21 @@ Three layers, cheapest first:
    arithmetic, used whenever ``ops.frontier_moments`` is called without an
    explicit ``block_f``. Deterministic per shape, safe to consult at trace
    time inside jit.
-2. An **in-process cache** keyed by ``(F, K, num_t, backend, fused)`` so the
-   model (or a sweep result) is computed once per process.
+2. An **in-process cache** keyed by ``(F, K, num_t, backend, fused, dist_id)``
+   so the model (or a sweep result) is computed once per process.
 3. A **timed sweep** (:func:`sweep`) over ``block_f in {32..512}`` x the
    requested ``num_t`` that benchmarks the real kernel on synthetic data and
    persists the winner to ``experiments/bench/autotune_cache.json`` — run by
    ``benchmarks/cluster_scale.py`` (and ``scripts/bench_smoke.sh``) so tuned
    configs survive across processes and ride along in the repo.
+
+The completion-time family is part of the key AND the model: the fused
+adjoint carries two per-channel accumulator pairs for the ``drift`` family
+(vs one for the scale-like families), and the ``empirical`` mixture streams
+3C extra CDF tiles per channel — different working sets, different safe
+block sizes. Cache keys are versioned (``v2:``); legacy un-versioned keys
+from the pre-family schema are migrated on load as normal-family entries, so
+an existing JSON cache survives the schema bump.
 """
 from __future__ import annotations
 
@@ -41,6 +49,8 @@ _VMEM_BUDGET_BYTES = int(16 * 1024 * 1024 * 0.75)
 # VMEM — a much looser working-set ceiling (the (bf, T, K) intermediates)
 _XLA_BLOCK_BUDGET_BYTES = 1024 * 1024 * 1024
 
+_KEY_VERSION = "v2"  # v2: family-aware keys (un-versioned = legacy normal)
+
 _CACHE: Dict[str, dict] = {}
 _JSON_LOADED: set = set()
 
@@ -51,40 +61,74 @@ def default_cache_path() -> str:
     return os.path.join(root, "experiments", "bench", "autotune_cache.json")
 
 
-def _key(F: int, K: int, num_t: int, backend: str, fused: bool) -> str:
-    return f"{backend}:F{F}:K{K}:T{num_t}:fused{int(bool(fused))}"
+def _key(F: int, K: int, num_t: int, backend: str, fused: bool,
+         dist_id: str = "normal") -> str:
+    return (f"{_KEY_VERSION}:{backend}:F{F}:K{K}:T{num_t}"
+            f":fused{int(bool(fused))}:fam{dist_id}")
 
 
-def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False) -> int:
+def _migrate_key(k: str) -> str:
+    """Lift a legacy (pre-family, un-versioned) key to the v2 schema."""
+    if k.startswith(f"{_KEY_VERSION}:"):
+        return k
+    return f"{_KEY_VERSION}:{k}:famnormal"
+
+
+def _grad_acc_pairs(dist_id: str) -> int:
+    # local import: distributions sits above kernels in the package DAG but
+    # this module must stay importable before repro.core finishes init
+    from repro.core.distributions import family_accumulators
+    use_p0, use_p1 = family_accumulators(dist_id)
+    return int(use_p0) + int(use_p1)
+
+
+def _mix_tiles(dist_id: str) -> int:
+    from repro.core.distributions import EMP_COMPONENTS
+    # transient per-component z/cdf tiles the mixture family keeps live
+    return EMP_COMPONENTS - 1 if dist_id == "empirical" else 0
+
+
+def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
+               dist_id: str = "normal") -> int:
     """Working-set model of one kernel program, in bytes (f32).
 
     Forward: W/means/stds (bf, K) tiles + ts/logF/surv/tsurv (bf, T) tiles.
-    Fused adds the P1/Pv accumulators and both gradient outputs in (bf, K)
-    plus the weighted-CDF / t(t-mu) work tiles in (bf, T) — ~3x the forward
-    accumulator footprint, the reason PR 1's block_f=128 default is retired.
+    Fused adds the per-channel accumulators and both gradient outputs in
+    (bf, K) plus the weighted-CDF / t(t-mu) work tiles in (bf, T). The family
+    moves both axes: ``drift`` carries FOUR accumulators (P0/P1/Pv0/Pv1)
+    where the scale-like families carry two, and the ``empirical`` mixture
+    holds C-1 extra per-component tiles live per channel step — which is why
+    the family is part of the autotune key.
     """
-    per_fk = 8 if fused else 3
-    per_ft = 6 if fused else 4
+    acc = 2 * _grad_acc_pairs(dist_id)        # accumulators + matching outputs
+    per_fk = (6 + acc) if fused else 3
+    per_ft = (6 if fused else 4) + _mix_tiles(dist_id)
     return 4 * block_f * (per_fk * num_k + per_ft * num_t)
 
 
-def _xla_block_bytes(block_f: int, num_k: int, num_t: int, fused: bool) -> int:
-    # the pure-jnp path materializes (bf, T, K) zscore/cdf/phi intermediates
-    live = 5 if fused else 3
+def _xla_block_bytes(block_f: int, num_k: int, num_t: int, fused: bool,
+                     dist_id: str = "normal") -> int:
+    # the pure-jnp path materializes (bf, T, K) zscore/cdf/phi intermediates;
+    # the mixture family adds per-component copies of them
+    live = (5 if fused else 3) + _mix_tiles(dist_id)
     return 4 * block_f * num_t * num_k * live
 
 
-def _fits(block_f: int, K: int, num_t: int, backend: str, fused: bool) -> bool:
+def _fits(block_f: int, K: int, num_t: int, backend: str, fused: bool,
+          dist_id: str = "normal") -> bool:
     if backend == "xla":
-        return _xla_block_bytes(block_f, K, num_t, fused) <= _XLA_BLOCK_BUDGET_BYTES
-    return vmem_bytes(block_f, K, num_t, fused) <= _VMEM_BUDGET_BYTES
+        return (_xla_block_bytes(block_f, K, num_t, fused, dist_id)
+                <= _XLA_BLOCK_BUDGET_BYTES)
+    return vmem_bytes(block_f, K, num_t, fused, dist_id) <= _VMEM_BUDGET_BYTES
 
 
 def pick_block_f(F: int, K: int, num_t: int, backend: str = "xla",
                  fused: bool = False,
-                 candidates: Sequence[int] = BLOCK_F_CANDIDATES) -> int:
+                 candidates: Sequence[int] = BLOCK_F_CANDIDATES,
+                 dist_id: str = "normal") -> int:
     """Largest candidate block_f that fits the backend's budget model."""
-    feasible = [bf for bf in candidates if _fits(bf, K, num_t, backend, fused)]
+    feasible = [bf for bf in candidates
+                if _fits(bf, K, num_t, backend, fused, dist_id)]
     pick = max(feasible) if feasible else min(candidates)
     return max(min(pick, F), 1)
 
@@ -99,13 +143,15 @@ def _load_json(cache_path: str) -> None:
     except (OSError, ValueError):
         return
     for k, v in disk.items():
+        k = _migrate_key(k)
         # sweep results on disk outrank anything model-derived in-process
         if k not in _CACHE or _CACHE[k].get("source") != "sweep":
             _CACHE[k] = v
 
 
 def lookup(F: int, K: int, num_t: int, backend: str = "xla",
-           fused: bool = False, cache_path: Optional[str] = None) -> int:
+           fused: bool = False, cache_path: Optional[str] = None,
+           dist_id: str = "normal") -> int:
     """block_f for a launch shape: in-process cache -> JSON cache -> model.
 
     This is what ``ops.frontier_moments`` consults when ``block_f`` is not
@@ -114,11 +160,11 @@ def lookup(F: int, K: int, num_t: int, backend: str = "xla",
     caches.
     """
     _load_json(cache_path or default_cache_path())
-    key = _key(F, K, num_t, backend, fused)
+    key = _key(F, K, num_t, backend, fused, dist_id)
     hit = _CACHE.get(key)
     if hit is not None:
         return max(min(int(hit["block_f"]), F), 1)
-    bf = pick_block_f(F, K, num_t, backend, fused)
+    bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id)
     _CACHE[key] = {"block_f": bf, "source": "model"}
     return bf
 
@@ -126,15 +172,17 @@ def lookup(F: int, K: int, num_t: int, backend: str = "xla",
 def sweep(F: int, K: int, num_t: int, backend: str = "xla",
           fused: bool = False, repeats: int = 2, seed: int = 0,
           candidates: Sequence[int] = BLOCK_F_CANDIDATES,
-          cache_path: Optional[str] = None) -> dict:
+          cache_path: Optional[str] = None, dist_id: str = "normal") -> dict:
     """Time the real kernel across feasible block_f values; cache the winner.
 
     Returns the winning entry ``{"block_f", "source": "sweep", "us", "timings"}``
-    and persists it (in-process + JSON) under ``(F, K, num_t, backend, fused)``.
+    and persists it (in-process + JSON) under
+    ``(F, K, num_t, backend, fused, dist_id)``.
     """
     import jax
     import numpy as np
 
+    from repro.core.distributions import Drift, extra_rows
     from . import ops
 
     rng = np.random.default_rng(seed)
@@ -142,8 +190,17 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
     W = (e / e.sum(1, keepdims=True)).astype(np.float32)
     mus = rng.uniform(10, 40, K).astype(np.float32)
     sgs = (mus * rng.uniform(0.02, 0.3, K)).astype(np.float32)
+    if dist_id == "drift":
+        family = Drift(rng.uniform(0.0, 0.5, K).astype(np.float32))
+    elif dist_id == "empirical":
+        from repro.core.distributions import Empirical
+        family = Empirical.from_samples(
+            rng.normal(mus[None, :], sgs[None, :], size=(256, K)))
+    else:
+        family = dist_id
 
-    feasible = [bf for bf in candidates if _fits(bf, K, num_t, backend, fused)]
+    feasible = [bf for bf in candidates
+                if _fits(bf, K, num_t, backend, fused, dist_id)]
     if not feasible:
         feasible = [min(candidates)]
     timings = {}
@@ -151,10 +208,12 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
         def run(bf=bf):
             if fused:
                 out = ops.frontier_moments_with_grads(
-                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf)
+                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf,
+                    family=family)
             else:
                 out = ops.frontier_moments(
-                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf)
+                    W, mus, sgs, num_t=num_t, impl=backend, block_f=bf,
+                    family=family)
             jax.block_until_ready(out)
         run()  # compile + warm
         samples = []
@@ -167,13 +226,14 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
     entry = {"block_f": int(best_bf), "source": "sweep",
              "us": float(timings[best_bf]),
              "timings": {str(k): float(v) for k, v in timings.items()}}
-    key = _key(F, K, num_t, backend, fused)
+    key = _key(F, K, num_t, backend, fused, dist_id)
     _CACHE[key] = entry
     path = cache_path or default_cache_path()
     disk = {}
     try:
         with open(path) as f:
-            disk = json.load(f)
+            # normalize any legacy keys on rewrite so the file converges to v2
+            disk = {_migrate_key(k): v for k, v in json.load(f).items()}
     except (OSError, ValueError):
         pass
     disk[key] = entry

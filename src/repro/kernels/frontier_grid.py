@@ -1,5 +1,8 @@
 """The paper's hot loop as a Pallas TPU kernel: survival-integral moments for a
-grid of candidate splits, with an optional fused analytic-gradient pass.
+grid of candidate splits, with an optional fused analytic-gradient pass —
+generalized over pluggable completion-time families (normal / lognormal /
+drift / empirical, selected by a **static** ``dist_id`` so every family
+compiles to its own specialized kernel).
 
 Why a kernel: at fleet scale the scheduler re-evaluates mu(w), sigma^2(w) for
 thousands of candidate splits x hundreds/thousands of channels every rebalance
@@ -12,62 +15,84 @@ program holds a (block_f, T) survival accumulator in VMEM and streams the K
 channels in registers via a fori_loop, adding each channel's log-CDF. T and K
 are small enough (T<=2048, K<=4096) that one tile's working set
 block_f*(T)*4B stays well under the ~16 MB v5e VMEM budget for block_f<=256.
-The fused gradient kernel additionally carries two (block_f, K) accumulators
-and the (block_f, K) gradient outputs (~3x the forward working set), which is
-why ``kernels.autotune`` picks a smaller block_f for it.
+The fused gradient kernel additionally carries per-channel (block_f, K)
+accumulators — two for the scale-like families, FOUR for ``drift`` (see the
+derivation below) — plus the (block_f, K) gradient outputs, which is why
+``kernels.autotune`` keys its working-set model and cache on
+``(shape, backend, fused, dist_id)`` and picks a smaller block_f for the
+fused and drift variants.
 
 Per-candidate integration grids (t in [0, tmax_f]) keep accuracy uniform
-across candidates whose means differ by orders of magnitude.
+across candidates whose means differ by orders of magnitude; ``tmax`` uses the
+family's *effective* moments, max_k(mean_k(w) + z std_k(w)).
 
-Differentiating the survival integral
--------------------------------------
+Differentiating the family-parametric survival integral
+-------------------------------------------------------
 
-The kernel computes, per candidate row w (weights over K channels, with
-per-channel rates mu_k, sigma_k, scaled means m_k = w_k mu_k and stds
-s_k = w_k sigma_k):
+The kernel computes, per candidate row w (weights over K channels with
+per-unit-work statistics mu_k, sigma_k and family shape parameters
+``extra[:, k]``):
 
-    F(t)   = prod_k Phi((t - m_k)/s_k)          joint CDF of the max
+    F(t)   = prod_k C_k(t; w_k)                 joint CDF of the max
     mu     = int_0^tmax (1 - F(t)) dt           survival-integral mean
     m2     = 2 int_0^tmax t (1 - F(t)) dt       second moment
     var    = m2 - mu^2
 
-discretized by trapezoid quadrature on t_j = tmax * j/(T-1), with
-tmax = max_k(m_k + z s_k). The adjoints reduce to ONE extra Gaussian-pdf
-accumulator per channel evaluated on the same grid. Writing z_k = (t-m_k)/s_k
-and the inverse-Mills-style ratio r_k(t) = phi(z_k)/Phi(z_k):
+discretized by trapezoid quadrature on t_j = tmax * j/(T-1). For the Normal
+family C_k(t) = Phi((t - w mu_k)/(w sigma_k)); the other families substitute
+their own CDF (see ``core.distributions``). The adjoints stay a streaming
+two-pass computation for EVERY family because each family's log-CDF
+derivatives are affine in t after factoring out a pdf-like numerator D_k(t):
 
-    d logF / d w_k |_t  = r_k(t) * dz_k/dw_k,   dz_k/dw_k = -t/(w_k^2 sigma_k)
+    d log C_k / d w_k |_t = g_jk * (alpha_k + beta_k t),
+    d log C_k / d t   |_t = g_jk * (gamma0_k + gamma1_k t) / t,
+    g_jk = gate_jk * D_k(t_j) / C_k(t_j)        (inverse-Mills-style ratio)
 
-so with a_jk = omega_j F(t_j) r_k(t_j) (omega_j the trapezoid weights):
+with per-channel constants (family_coeffs):
 
-    dmu/dw_k  (fixed grid) = (dt / (w_k^2 sigma_k)) * P1_k,
-                             P1_k = sum_j a_jk t_j
-    dvar/dw_k (fixed grid) = (2 dt / (w_k^2 sigma_k)) * Pv_k,
-                             Pv_k = sum_j a_jk t_j (t_j - mu)
+    normal      alpha=0,              beta=-1/(w^2 sigma),  gamma1=1/(w sigma)
+    lognormal   alpha=-1/(w s_l),     beta=0,               gamma0=1/s_l
+    drift       alpha=-rho mu/(2 s),  beta=-1/(w^2 sigma),  gamma1=1/(w sigma)
+    empirical   alpha=0,              beta=-1/w^2,          gamma1=1/w
 
-Pv folds the m2 and -2 mu dmu cotangents together per grid point — the same
-combination autodiff's backward makes — which avoids the catastrophic
-cancellation of accumulating them separately when var << mu^2.
+(lognormal's z-score lives in log-space, so its dw-derivative is t-free;
+drift's z = (t - mu g(w))/(w sigma) with g = w(1 + rho w/2) contributes both
+a t-free and a t-linear term — that family alone needs all four
+accumulators.) With a_jk = omega_j F(t_j) g_jk (omega_j trapezoid weights)
+the fixed-grid adjoints contract into per-channel sums
+
+    P0_k  = sum_j a_jk              Pv0_k = sum_j a_jk (t_j - mu)
+    P1_k  = sum_j a_jk t_j          Pv1_k = sum_j a_jk t_j (t_j - mu)
+
+    dmu/dw_k  (fixed grid) = -dt (alpha_k P0_k + beta_k P1_k)
+    dvar/dw_k (fixed grid) = -2 dt (alpha_k Pv0_k + beta_k Pv1_k)
+
+The Pv* accumulators fold the m2 and -2 mu dmu cotangents together per grid
+point — the same combination autodiff's backward makes — which avoids the
+catastrophic cancellation of accumulating them separately when var << mu^2.
 
 Because the grid itself moves with w (t_j = tmax(w) * j/(T-1), dt ∝ tmax),
 each output also carries a tmax term on the argmax channel
-a = argmax_k(m_k + z s_k), where dtmax/dw_a = mu_a + z sigma_a:
+a = argmax_k(mean_k + z std_k), where dtmax/dw_a = dreach_a (family_dreach;
+mu_a + z sigma_a for the normal/lognormal families):
 
-    dmu/dtmax  = mu/tmax  - (dt/tmax)   sum_k P1_k / s_k
-    dvar/dtmax = 2 var/tmax - (2 dt/tmax) sum_k Pv_k / s_k
+    dmu/dtmax  = mu/tmax  - (dt/tmax)  sum_k (gamma0_k P0_k + gamma1_k P1_k)
+    dvar/dtmax = 2 var/tmax
+                 - (2 dt/tmax) sum_k (gamma0_k Pv0_k + gamma1_k Pv1_k)
 
 (The continuum limit of dmu/dtmax is surv(tmax) ~ 0 at z=10; these discrete
-forms keep exact parity with autodiff through the quadrature.) Zero-std
-channels contribute no direct term (their point-mass CDF is flat a.e.) but
-still receive the tmax term when they set the grid end; CDF values clipped to
-the [1e-37, 1] floor/ceiling follow jnp.clip's gradient conventions (0 below
-the floor, 0.5 exactly at saturation).
+forms keep exact parity with autodiff through the quadrature.) Degenerate
+point-mass channels (w=0, sigma=0, spread-free mixtures) contribute no direct
+term (their CDF — right-continuous per ``distributions.point_mass_cdf`` — is
+flat a.e.) but still receive the tmax term when they set the grid end; CDF
+values clipped to the [1e-37, 1] floor/ceiling follow jnp.clip's gradient
+conventions (0 below the floor, 0.5 exactly at saturation).
 
 The fused kernel computes the forward pass (one K-loop building log F), then a
-second K-loop accumulating P1/Pv per channel from the shared (block_f, T)
-joint-CDF tile — so ``(mu, var, dmu_dW, dvar_dW)`` costs ~2 forward passes in
-one launch, instead of a forward plus a full autodiff replay through the
-quadrature graph.
+second K-loop accumulating the P*/Pv* sums per channel from the shared
+(block_f, T) joint-CDF tile — so ``(mu, var, dmu_dW, dvar_dW)`` costs ~2
+forward passes in one launch, instead of a forward plus a full autodiff
+replay through the quadrature graph.
 """
 from __future__ import annotations
 
@@ -79,9 +104,8 @@ from jax.experimental import pallas as pl
 
 __all__ = ["frontier_grid", "frontier_grid_with_grads"]
 
-from .ref import _CDF_FLOOR, _INV_SQRT2PI  # single source: kernel must match its oracle
-
-_SQRT2 = 1.4142135623730951
+from .ref import _CDF_FLOOR  # single source: kernel must match its oracle
+from repro.core import distributions as dists
 
 
 def _check_block(F: int, block_f: int) -> None:
@@ -93,27 +117,27 @@ def _check_block(F: int, block_f: int) -> None:
             f"(ops.frontier_moments pads with copies of row 0 to guarantee this)")
 
 
-def _frontier_kernel(w_ref, mu_ref, sg_ref, mu_out_ref, var_out_ref, *,
-                     num_t: int, z: float, num_k: int):
+def _slice_k(arr, kk):
+    return jax.lax.dynamic_slice_in_dim(arr, kk, 1, axis=1)
+
+
+def _frontier_kernel(w_ref, mu_ref, sg_ref, ex_ref, mu_out_ref, var_out_ref, *,
+                     num_t: int, z: float, num_k: int, dist_id: str):
     w = w_ref[...]            # (bf, K)
     mus = mu_ref[...]         # (1, K)
     sgs = sg_ref[...]         # (1, K)
-    means = w * mus           # (bf, K)
-    stds = w * sgs
+    ex = ex_ref[...]          # (E, K)
+    means_eff, stds_eff = dists.family_effective_moments(dist_id, w, mus, sgs, ex)
 
-    tmax = jnp.maximum(jnp.max(means + z * stds, axis=-1, keepdims=True), 1e-12)  # (bf,1)
+    tmax = jnp.maximum(jnp.max(means_eff + z * stds_eff, axis=-1,
+                               keepdims=True), 1e-12)  # (bf, 1)
     # per-candidate time grid (bf, T): tmax * linspace(0,1,T)
     frac = jax.lax.broadcasted_iota(jnp.float32, (1, num_t), 1) / (num_t - 1)
     ts = tmax * frac          # (bf, T)
 
     def add_channel(kk, logF):
-        mean_k = jax.lax.dynamic_slice_in_dim(means, kk, 1, axis=1)  # (bf,1)
-        std_k = jax.lax.dynamic_slice_in_dim(stds, kk, 1, axis=1)
-        ok = std_k > 0.0
-        zsc = (ts - mean_k) / jnp.where(ok, std_k, 1.0)
-        cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
-        point = (ts >= mean_k).astype(jnp.float32)
-        cdf = jnp.where(ok, cdf, point)
+        cdf = dists.family_cdf(dist_id, ts, _slice_k(w, kk), _slice_k(mus, kk),
+                               _slice_k(sgs, kk), _slice_k(ex, kk))
         return logF + jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0))
 
     logF = jax.lax.fori_loop(0, num_k, add_channel,
@@ -128,12 +152,27 @@ def _frontier_kernel(w_ref, mu_ref, sg_ref, mu_out_ref, var_out_ref, *,
     var_out_ref[...] = jnp.maximum(m2 - mu * mu, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f", "interpret"))
-def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
-                  block_f: int = 128, interpret: bool = False):
+def _family_extra(dist_id: str, extra, K: int):
+    if extra is None:
+        extra = jnp.zeros((dists.extra_rows(dist_id), K), jnp.float32)
+    extra = jnp.asarray(extra, jnp.float32)
+    if extra.shape != (dists.extra_rows(dist_id), K):
+        raise ValueError(f"extra for {dist_id!r} must be "
+                         f"({dists.extra_rows(dist_id)}, {K}), got {extra.shape}")
+    return extra
+
+
+@functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f",
+                                             "interpret", "dist_id"))
+def frontier_grid(W, mus, sigmas, extra=None, *, num_t: int = 1024,
+                  z: float = 10.0, block_f: int = 128,
+                  interpret: bool = False, dist_id: str = "normal"):
     """(mu, var) arrays of shape (F,) for candidate splits W: (F, K).
 
-    F must be divisible by block_f (ops.py pads with copies of row 0 otherwise).
+    ``dist_id`` statically selects the completion-time family; ``extra`` is
+    its (E, K) per-channel shape-parameter array (zeros when the family has
+    none). F must be divisible by block_f (ops.py pads with copies of row 0
+    otherwise).
     """
     F, K = W.shape
     block_f = min(block_f, F)
@@ -141,8 +180,11 @@ def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
     W = W.astype(jnp.float32)
     mus2 = jnp.asarray(mus, jnp.float32)[None, :]
     sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
+    ex = _family_extra(dist_id, extra, K)
+    E = ex.shape[0]
 
-    kernel = functools.partial(_frontier_kernel, num_t=num_t, z=z, num_k=K)
+    kernel = functools.partial(_frontier_kernel, num_t=num_t, z=z, num_k=K,
+                               dist_id=dist_id)
     return pl.pallas_call(
         kernel,
         grid=(F // block_f,),
@@ -150,6 +192,7 @@ def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
             pl.BlockSpec((block_f, K), lambda i: (i, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((E, K), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_f,), lambda i: (i,)),
@@ -158,25 +201,27 @@ def frontier_grid(W, mus, sigmas, *, num_t: int = 1024, z: float = 10.0,
         out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32),
                    jax.ShapeDtypeStruct((F,), jnp.float32)],
         interpret=interpret,
-    )(W, mus2, sgs2)
+    )(W, mus2, sgs2, ex)
 
 
-def _frontier_grad_kernel(w_ref, mu_ref, sg_ref,
+def _frontier_grad_kernel(w_ref, mu_ref, sg_ref, ex_ref,
                           mu_out_ref, var_out_ref, dmu_out_ref, dvar_out_ref,
-                          *, num_t: int, z: float, num_k: int):
+                          *, num_t: int, z: float, num_k: int, dist_id: str):
     """Fused forward + analytic adjoint (see module docstring for the math).
 
     Pass 1 is the forward K-loop building the joint log-CDF; pass 2 streams K
     again, turning the shared (bf, T) joint-CDF tile into the per-channel
-    P1/Pv accumulators. Grad accumulators live in the same VMEM tile as the
+    P*/Pv* accumulators — two pairs for drift, one pair otherwise (the
+    static ``dist_id`` fixes which, so unused accumulators never exist in the
+    compiled program). Grad accumulators live in the same VMEM tile as the
     forward state — no (F, T, K) residuals ever leave the program.
     """
     w = w_ref[...]            # (bf, K)
     mus = mu_ref[...]         # (1, K)
     sgs = sg_ref[...]         # (1, K)
-    means = w * mus           # (bf, K)
-    stds = w * sgs
-    reach = means + z * stds
+    ex = ex_ref[...]          # (E, K)
+    means_eff, stds_eff = dists.family_effective_moments(dist_id, w, mus, sgs, ex)
+    reach = means_eff + z * stds_eff
 
     amax = jnp.max(reach, axis=-1, keepdims=True)            # (bf, 1)
     tmax = jnp.maximum(amax, 1e-12)
@@ -184,13 +229,8 @@ def _frontier_grad_kernel(w_ref, mu_ref, sg_ref,
     ts = tmax * frac          # (bf, T)
 
     def add_channel(kk, logF):
-        mean_k = jax.lax.dynamic_slice_in_dim(means, kk, 1, axis=1)  # (bf,1)
-        std_k = jax.lax.dynamic_slice_in_dim(stds, kk, 1, axis=1)
-        ok = std_k > 0.0
-        zsc = (ts - mean_k) / jnp.where(ok, std_k, 1.0)
-        cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
-        point = (ts >= mean_k).astype(jnp.float32)
-        cdf = jnp.where(ok, cdf, point)
+        cdf = dists.family_cdf(dist_id, ts, _slice_k(w, kk), _slice_k(mus, kk),
+                               _slice_k(sgs, kk), _slice_k(ex, kk))
         return logF + jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0))
 
     logF = jax.lax.fori_loop(0, num_k, add_channel, jnp.zeros_like(ts))
@@ -205,60 +245,74 @@ def _frontier_grad_kernel(w_ref, mu_ref, sg_ref,
     mu_out_ref[...] = mu
     var_out_ref[...] = jnp.maximum(var_raw, 0.0)
 
-    # pass 2: per-channel Gaussian-pdf accumulators off the shared F(t) tile.
-    # wF folds the trapezoid weights into the joint CDF once.
+    # pass 2: per-channel accumulators off the shared F(t) tile. wF folds the
+    # trapezoid weights into the joint CDF once.
     idx = jax.lax.broadcasted_iota(jnp.int32, (1, num_t), 1)
     wq = jnp.where((idx == 0) | (idx == num_t - 1), 0.5, 1.0)
     wF = wq * F_t                                            # (bf, T)
-    tv = ts * (ts - mu[:, None])                             # (bf, T)
+    tmu = ts - mu[:, None]                                   # (bf, T)
+    use_p0, use_p1 = dists.family_accumulators(dist_id)
 
     def grad_channel(kk, carry):
-        P1, Pv = carry                                       # (bf, K) each
-        mean_k = jax.lax.dynamic_slice_in_dim(means, kk, 1, axis=1)
-        std_k = jax.lax.dynamic_slice_in_dim(stds, kk, 1, axis=1)
-        ok = std_k > 0.0
-        zsc = (ts - mean_k) / jnp.where(ok, std_k, 1.0)
-        cdf = 0.5 * (1.0 + jax.lax.erf(zsc / _SQRT2))
-        Cc = jnp.clip(cdf, _CDF_FLOOR, 1.0)
-        phi = jnp.exp(-0.5 * zsc * zsc) * _INV_SQRT2PI
-        gate = jnp.where(cdf >= 1.0, 0.5, 1.0) * (cdf > _CDF_FLOOR) * ok
-        a = wF * (gate * phi / Cc)                           # (bf, T)
-        p1 = jnp.sum(a * ts, -1, keepdims=True)              # (bf, 1)
-        pv = jnp.sum(a * tv, -1, keepdims=True)
-        return (jax.lax.dynamic_update_slice_in_dim(P1, p1, kk, axis=1),
-                jax.lax.dynamic_update_slice_in_dim(Pv, pv, kk, axis=1))
+        cdf_raw, D, ok = dists.family_pdf_parts(
+            dist_id, ts, _slice_k(w, kk), _slice_k(mus, kk),
+            _slice_k(sgs, kk), _slice_k(ex, kk))
+        Cc = jnp.clip(cdf_raw, _CDF_FLOOR, 1.0)
+        gate = jnp.where(cdf_raw >= 1.0, 0.5, 1.0) * (cdf_raw > _CDF_FLOOR) * ok
+        a = wF * (gate * D / Cc)                             # (bf, T)
+        updates = []
+        if use_p0:
+            updates.append(jnp.sum(a, -1, keepdims=True))            # P0
+            updates.append(jnp.sum(a * tmu, -1, keepdims=True))      # Pv0
+        if use_p1:
+            updates.append(jnp.sum(a * ts, -1, keepdims=True))       # P1
+            updates.append(jnp.sum(a * ts * tmu, -1, keepdims=True))  # Pv1
+        return tuple(jax.lax.dynamic_update_slice_in_dim(acc, upd, kk, axis=1)
+                     for acc, upd in zip(carry, updates))
 
     zeros_fk = jnp.zeros_like(w)
-    P1, Pv = jax.lax.fori_loop(0, num_k, grad_channel, (zeros_fk, zeros_fk))
+    n_acc = 2 * (int(use_p0) + int(use_p1))
+    accs = jax.lax.fori_loop(0, num_k, grad_channel, (zeros_fk,) * n_acc)
+    if use_p0 and use_p1:
+        P0, Pv0, P1, Pv1 = accs
+    elif use_p0:
+        (P0, Pv0), (P1, Pv1) = accs, (0.0, 0.0)
+    else:
+        (P0, Pv0), (P1, Pv1) = (0.0, 0.0), accs
 
-    # epilogue: combine fixed-grid and moving-grid (tmax) terms — module
-    # docstring "Differentiating the survival integral"
-    ok = stds > 0.0
-    inv_w2s = jnp.where(ok, 1.0 / jnp.where(ok, w * stds, 1.0), 0.0)
-    inv_s = jnp.where(ok, 1.0 / jnp.where(ok, stds, 1.0), 0.0)
+    # epilogue: combine fixed-grid and moving-grid (tmax) terms with the
+    # family's per-channel constants — module docstring "Differentiating the
+    # family-parametric survival integral"
+    alpha, beta, gamma0, gamma1 = dists.family_coeffs(dist_id, w, mus, sgs, ex)
     dtc = dt[:, None]
     tmx = tmax[:, 0]
-    b_mu = (mu - dt * jnp.sum(P1 * inv_s, -1)) / tmx
-    b_var = 2.0 * (var_raw - dt * jnp.sum(Pv * inv_s, -1)) / tmx
+    b_mu = (mu - dt * jnp.sum(gamma0 * P0 + gamma1 * P1, -1)) / tmx
+    b_var = 2.0 * (var_raw
+                   - dt * jnp.sum(gamma0 * Pv0 + gamma1 * Pv1, -1)) / tmx
     ind = (reach == amax).astype(jnp.float32)
-    gvec = ((mus + z * sgs) * ind / jnp.sum(ind, -1, keepdims=True)
+    dreach = dists.family_dreach(dist_id, w, mus, sgs, ex, z)
+    gvec = (dreach * ind / jnp.sum(ind, -1, keepdims=True)
             * (amax > 1e-12).astype(jnp.float32))
-    dmu = dtc * P1 * inv_w2s + b_mu[:, None] * gvec
+    dmu = -dtc * (alpha * P0 + beta * P1) + b_mu[:, None] * gvec
     dvar = jnp.where((var_raw > 0.0)[:, None],
-                     2.0 * dtc * Pv * inv_w2s + b_var[:, None] * gvec, 0.0)
+                     -2.0 * dtc * (alpha * Pv0 + beta * Pv1)
+                     + b_var[:, None] * gvec, 0.0)
     dmu_out_ref[...] = dmu
     dvar_out_ref[...] = dvar
 
 
-@functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f", "interpret"))
-def frontier_grid_with_grads(W, mus, sigmas, *, num_t: int = 1024,
+@functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f",
+                                             "interpret", "dist_id"))
+def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
                              z: float = 10.0, block_f: int = 64,
-                             interpret: bool = False):
+                             interpret: bool = False,
+                             dist_id: str = "normal"):
     """Fused ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W: (F, K).
 
     One launch returns the moments AND their analytic adjoints w.r.t. every
-    split weight (matching ``ref.frontier_grid_with_grads_ref``). F must be
-    divisible by block_f (ops.py pads with copies of row 0 otherwise).
+    split weight (matching ``ref.frontier_grid_with_grads_ref``) for the
+    family statically selected by ``dist_id``. F must be divisible by
+    block_f (ops.py pads with copies of row 0 otherwise).
     """
     F, K = W.shape
     block_f = min(block_f, F)
@@ -266,8 +320,11 @@ def frontier_grid_with_grads(W, mus, sigmas, *, num_t: int = 1024,
     W = W.astype(jnp.float32)
     mus2 = jnp.asarray(mus, jnp.float32)[None, :]
     sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
+    ex = _family_extra(dist_id, extra, K)
+    E = ex.shape[0]
 
-    kernel = functools.partial(_frontier_grad_kernel, num_t=num_t, z=z, num_k=K)
+    kernel = functools.partial(_frontier_grad_kernel, num_t=num_t, z=z,
+                               num_k=K, dist_id=dist_id)
     return pl.pallas_call(
         kernel,
         grid=(F // block_f,),
@@ -275,6 +332,7 @@ def frontier_grid_with_grads(W, mus, sigmas, *, num_t: int = 1024,
             pl.BlockSpec((block_f, K), lambda i: (i, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((E, K), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_f,), lambda i: (i,)),
@@ -287,4 +345,4 @@ def frontier_grid_with_grads(W, mus, sigmas, *, num_t: int = 1024,
                    jax.ShapeDtypeStruct((F, K), jnp.float32),
                    jax.ShapeDtypeStruct((F, K), jnp.float32)],
         interpret=interpret,
-    )(W, mus2, sgs2)
+    )(W, mus2, sgs2, ex)

@@ -191,48 +191,61 @@ def rmsnorm(x, w, *, eps: float = 1e-6, impl: str = "xla"):
 
 
 def _resolve_block_f(F: int, K: int, num_t: int, impl: str,
-                     block_f: Optional[int], fused: bool) -> int:
+                     block_f: Optional[int], fused: bool,
+                     dist_id: str = "normal") -> int:
     """Explicit block_f wins; otherwise consult the autotune cache/model."""
     if block_f is not None:
         return max(min(block_f, F), 1)
-    return _at.lookup(F, K, num_t, backend=impl, fused=fused)
+    return _at.lookup(F, K, num_t, backend=impl, fused=fused, dist_id=dist_id)
 
 
-def _moments_fwd(W, mus, sigmas, num_t, impl, bf, z):
+def _resolve_family(family, K: int):
+    """Lower a family spec to (static dist_id, traced (E, K) extra array)."""
+    from repro.core.distributions import resolve_family
+
+    dist_id, extra = resolve_family(family, K)
+    return dist_id, jnp.asarray(extra, jnp.float32)
+
+
+def _moments_fwd(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
     """Forward-only batched moments on aligned shapes (bf resolved)."""
     F = W.shape[0]
     pad = (-F) % bf
     if impl == "xla":
         if F <= bf:
-            return ref.frontier_grid_ref(W, mus, sigmas, num_t=num_t, z=z)
+            return ref.frontier_grid_ref(W, mus, sigmas, num_t=num_t, z=z,
+                                         dist_id=dist_id, extra=extra)
         if pad:
             W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
         blocks = W.reshape(-1, bf, W.shape[1])
         mu, var = jax.lax.map(
-            lambda wb: ref.frontier_grid_ref(wb, mus, sigmas, num_t=num_t, z=z),
+            lambda wb: ref.frontier_grid_ref(wb, mus, sigmas, num_t=num_t,
+                                             z=z, dist_id=dist_id, extra=extra),
             blocks)
         return mu.reshape(-1)[:F], var.reshape(-1)[:F]
     if pad:
         W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
-    mu, var = _fg.frontier_grid(W, mus, sigmas, num_t=num_t, z=z, block_f=bf,
+    mu, var = _fg.frontier_grid(W, mus, sigmas, extra, num_t=num_t, z=z,
+                                block_f=bf, dist_id=dist_id,
                                 interpret=(impl == "pallas_interpret"))
     return mu[:F], var[:F]
 
 
-def _moments_grads(W, mus, sigmas, num_t, impl, bf, z):
+def _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
     """Fused (mu, var, dmu_dW, dvar_dW) on aligned shapes (bf resolved)."""
     F = W.shape[0]
     pad = (-F) % bf
     if impl == "xla":
         if F <= bf:
-            return ref.frontier_grid_with_grads_ref(W, mus, sigmas,
-                                                    num_t=num_t, z=z)
+            return ref.frontier_grid_with_grads_ref(
+                W, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id, extra=extra)
         if pad:
             W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
         blocks = W.reshape(-1, bf, W.shape[1])
         mu, var, dmu, dvar = jax.lax.map(
-            lambda wb: ref.frontier_grid_with_grads_ref(wb, mus, sigmas,
-                                                        num_t=num_t, z=z),
+            lambda wb: ref.frontier_grid_with_grads_ref(
+                wb, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id,
+                extra=extra),
             blocks)
         K = W.shape[1]
         return (mu.reshape(-1)[:F], var.reshape(-1)[:F],
@@ -240,30 +253,32 @@ def _moments_grads(W, mus, sigmas, num_t, impl, bf, z):
     if pad:
         W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
     mu, var, dmu, dvar = _fg.frontier_grid_with_grads(
-        W, mus, sigmas, num_t=num_t, z=z, block_f=bf,
+        W, mus, sigmas, extra, num_t=num_t, z=z, block_f=bf, dist_id=dist_id,
         interpret=(impl == "pallas_interpret"))
     return mu[:F], var[:F], dmu[:F], dvar[:F]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _frontier_moments_vjp(W, mus, sigmas, num_t, impl, bfs, z):
-    return _moments_fwd(W, mus, sigmas, num_t, impl, bfs[0], z)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl, bfs, z, dist_id):
+    return _moments_fwd(W, mus, sigmas, extra, num_t, impl, bfs[0], z, dist_id)
 
 
-def _frontier_moments_vjp_fwd(W, mus, sigmas, num_t, impl, bfs, z):
+def _frontier_moments_vjp_fwd(W, mus, sigmas, extra, num_t, impl, bfs, z,
+                              dist_id):
     # bfs = (forward block_f, fused block_f): the fused launch holds ~3x the
     # accumulators, so a forward-tuned block can overflow the fused budget
-    mu, var, dmu, dvar = _moments_grads(W, mus, sigmas, num_t, impl, bfs[1], z)
-    return (mu, var), (dmu, dvar, mus, sigmas)
+    mu, var, dmu, dvar = _moments_grads(W, mus, sigmas, extra, num_t, impl,
+                                        bfs[1], z, dist_id)
+    return (mu, var), (dmu, dvar, mus, sigmas, extra)
 
 
-def _frontier_moments_vjp_bwd(num_t, impl, bfs, z, res, cts):
-    dmu, dvar, mus, sigmas = res
+def _frontier_moments_vjp_bwd(num_t, impl, bfs, z, dist_id, res, cts):
+    dmu, dvar, mus, sigmas, extra = res
     g_mu, g_var = cts
     dW = g_mu[:, None] * dmu + g_var[:, None] * dvar
-    # mus/sigmas are posterior point estimates — constants of the solve
+    # mus/sigmas/extra are posterior point estimates — constants of the solve
     # (stop-gradient semantics, see frontier_moments docstring)
-    return dW, jnp.zeros_like(mus), jnp.zeros_like(sigmas)
+    return dW, jnp.zeros_like(mus), jnp.zeros_like(sigmas), jnp.zeros_like(extra)
 
 
 _frontier_moments_vjp.defvjp(_frontier_moments_vjp_fwd,
@@ -271,63 +286,74 @@ _frontier_moments_vjp.defvjp(_frontier_moments_vjp_fwd,
 
 
 def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
-                     block_f: Optional[int] = None, z: float = 10.0):
+                     block_f: Optional[int] = None, z: float = 10.0,
+                     family="normal"):
     """Batched (mu, var) over candidate splits W: (F, K).
 
     The single entry point for candidate-split moment evaluation: the frontier
     tracers, the PGD objective, the balancer tick and the fleet benchmarks all
-    route here. F is padded to a ``block_f`` multiple internally (padding rows
-    repeat row 0 and are sliced off), so callers never see the kernel's
-    divisibility requirement. When ``block_f`` is None the launch shape is
-    resolved through ``kernels.autotune`` (VMEM-budget model + cached sweep
-    results). The "xla" path streams candidates through lax.map over
+    route here. ``family`` selects the per-channel completion-time
+    distribution — a name in {normal, lognormal, drift} or a
+    ``core.distributions.ChannelFamily`` instance (Drift with per-channel
+    rates, a fitted Empirical mixture); it lowers to a static ``dist_id`` so
+    each family compiles to its own specialized kernel. F is padded to a
+    ``block_f`` multiple internally (padding rows repeat row 0 and are sliced
+    off), so callers never see the kernel's divisibility requirement. When
+    ``block_f`` is None the launch shape is resolved through
+    ``kernels.autotune`` (VMEM-budget model + cached sweep results, keyed by
+    family). The "xla" path streams candidates through lax.map over
     ``block_f``-row blocks, bounding peak memory at O(block_f * num_t * K)
     instead of materializing the full (F, T, K) intermediate — that is what
     lets a K=1024 x F=4096 tick run at all.
 
     Differentiable in W on every impl via a registered ``jax.custom_vjp``
-    that backprops through the analytic adjoint of the survival integral
-    (see ``frontier_grid.py``) instead of autodiff-replaying the quadrature.
-    ``mus``/``sigmas`` are treated as constants of the solve (posterior point
-    estimates): their cotangents are zero by construction.
+    that backprops through the analytic adjoint of the (family-parametric)
+    survival integral (see ``frontier_grid.py``) instead of
+    autodiff-replaying the quadrature. ``mus``/``sigmas``/family parameters
+    are treated as constants of the solve (posterior point estimates): their
+    cotangents are zero by construction.
     """
     _check(impl)
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
+    F, K = W.shape
+    dist_id, extra = _resolve_family(family, K)
     # resolve BOTH launch shapes up front: the primal runs the forward
     # kernel, but under jax.grad the VJP's forward pass runs the fused one,
     # whose working set is ~3x larger (smaller safe block_f). An explicit
     # block_f binds the forward launch verbatim; the fused launch it implies
     # is still clamped by the budget model — the caller sized the block they
     # asked for, not the 3x-bigger one differentiation swaps in.
-    F, K = W.shape
-    bf_fwd = _resolve_block_f(F, K, num_t, impl, block_f, fused=False)
-    bf_fused = _resolve_block_f(F, K, num_t, impl, None, fused=True)
+    bf_fwd = _resolve_block_f(F, K, num_t, impl, block_f, fused=False,
+                              dist_id=dist_id)
+    bf_fused = _resolve_block_f(F, K, num_t, impl, None, fused=True,
+                                dist_id=dist_id)
     if block_f is not None:
         bf_fused = min(max(min(block_f, F), 1), bf_fused)
-    return _frontier_moments_vjp(W, mus, sigmas, num_t, impl,
-                                 (bf_fwd, bf_fused), z)
+    return _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl,
+                                 (bf_fwd, bf_fused), z, dist_id)
 
 
 def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
                                 impl: str = "xla",
                                 block_f: Optional[int] = None,
-                                z: float = 10.0):
+                                z: float = 10.0, family="normal"):
     """Fused (mu, var, dmu_dW, dvar_dW) over candidate splits W: (F, K).
 
     One launch returns the moments and their analytic adjoints w.r.t. every
     split weight — what the PGD solver consumes directly each step (no
-    autodiff replay, no second launch). Padding/autotune glue matches
+    autodiff replay, no second launch). Family/padding/autotune glue matches
     :func:`frontier_moments`.
     """
     _check(impl)
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
+    dist_id, extra = _resolve_family(family, W.shape[1])
     bf = _resolve_block_f(W.shape[0], W.shape[1], num_t, impl, block_f,
-                          fused=True)
-    return _moments_grads(W, mus, sigmas, num_t, impl, bf, z)
+                          fused=True, dist_id=dist_id)
+    return _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id)
 
 
 def decode_attention(q, k_cache, v_cache, valid, *, sm_scale=None,

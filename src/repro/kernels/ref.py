@@ -20,30 +20,44 @@ __all__ = ["frontier_grid_ref", "frontier_grid_with_grads_ref",
 # inf * 0 = NaN — the PGD solver differentiates through this function.
 _CDF_FLOOR = 1e-37
 
-_INV_SQRT2PI = 0.3989422804014327  # 1/sqrt(2*pi)
+_INV_SQRT2PI = 0.3989422804014327  # 1/sqrt(2*pi) (dists.phi's constant; kept
+# exported — kernel-parity tests and external callers reference it)
+
+# Constants above must precede this import: repro.core's init transitively
+# re-imports this module (core.frontier -> kernels.ops -> frontier_grid ->
+# ref._CDF_FLOOR), so the re-entrant import must find them already bound.
+from repro.core import distributions as dists  # noqa: E402
 
 
-def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
+def _family_args(dist_id, extra, K):
+    if extra is None:
+        extra = jnp.zeros((dists.extra_rows(dist_id), K), jnp.float32)
+    return jnp.asarray(extra, jnp.float32)
+
+
+def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0,
+                      dist_id: str = "normal", extra=None):
     """(mu, var) of the joint max-completion time for each candidate split.
 
-    W: (F, K) rows on the simplex; mus/sigmas: (K,).
-    Per-candidate integration grid [0, max_i(w_i*(mu_i + z*sigma_i))], num_t pts.
-    Mirrors repro.core.maxstat.max_moments_quad but with a per-row grid so the
-    whole batch is one fused computation (this is the kernel's contract).
+    W: (F, K) rows on the simplex; mus/sigmas: (K,); the per-channel
+    completion-time distribution is the family named by static ``dist_id``
+    with per-channel shape parameters ``extra`` ((E, K), see
+    ``core.distributions``). Per-candidate integration grid
+    [0, max_i(mean_i(w) + z*std_i(w))], num_t pts, on the family's effective
+    moments. Mirrors repro.core.maxstat.max_moments_quad but with a per-row
+    grid so the whole batch is one fused computation (the kernel's contract).
     """
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
-    means = W * mus  # (F, K)
-    stds = W * sigmas
-    tmax = jnp.maximum(jnp.max(means + z * stds, axis=-1), 1e-12)  # (F,)
+    extra = _family_args(dist_id, extra, W.shape[1])
+    means_eff, stds_eff = dists.family_effective_moments(
+        dist_id, W, mus, sigmas, extra)                          # (F, K)
+    tmax = jnp.maximum(jnp.max(means_eff + z * stds_eff, axis=-1), 1e-12)
     ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
 
-    zscore = (ts[:, :, None] - means[:, None, :]) / jnp.where(stds[:, None, :] > 0,
-                                                              stds[:, None, :], 1.0)
-    cdf = 0.5 * (1.0 + jax.lax.erf(zscore / jnp.sqrt(2.0).astype(jnp.float32)))
-    point = (ts[:, :, None] >= means[:, None, :]).astype(jnp.float32)
-    cdf = jnp.where(stds[:, None, :] > 0, cdf, point)
+    cdf = dists.family_cdf(dist_id, ts[:, :, None], W[:, None, :],
+                           mus, sigmas, extra)                   # (F, T, K)
     logF = jnp.sum(jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0)), axis=-1)  # (F, T)
     surv = 1.0 - jnp.exp(logF)
 
@@ -56,13 +70,15 @@ def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0):
 
 
 def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
-                                 z: float = 10.0):
+                                 z: float = 10.0, dist_id: str = "normal",
+                                 extra=None):
     """Fused oracle: ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W.
 
-    Same forward contract as :func:`frontier_grid_ref`, plus the analytic
-    adjoints of both moments w.r.t. every split weight, computed in the same
-    pass — the semantics the fused Pallas kernel must match and the function
-    the ``frontier_moments`` custom VJP rides.
+    Same forward contract as :func:`frontier_grid_ref` (family selected by
+    static ``dist_id``), plus the analytic adjoints of both moments w.r.t.
+    every split weight, computed in the same pass — the semantics the fused
+    Pallas kernel must match and the function the ``frontier_moments`` custom
+    VJP rides.
 
     The adjoint must agree with ``jax.grad`` through the quadrature graph, so
     it replicates autodiff's boundary conventions exactly:
@@ -72,28 +88,34 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
       z >= ~5.3), and 0 outside. The f32 cancellation in ``0.5*(1+erf)``
       means the lower clip only ever activates at cdf == 0, never at a tie.
     * ``jnp.max`` over channels splits the tmax cotangent evenly over ties.
-    * zero-std channels take the (non-differentiable) point-mass branch, so
+    * degenerate (point-mass) channels take the non-differentiable branch, so
       their direct gradient is 0 — they still receive the grid-path gradient
       when they set ``tmax``.
 
-    Gradients are w.r.t. W only; mus/sigmas are treated as constants of the
-    solve (the posterior point estimates), matching every caller in repro.
+    The family enters through the affine decomposition
+    ``dC/dw = D(t) (alpha + beta t)`` / ``dC/dt = D(t) (gamma0 + gamma1 t)/t``
+    of ``core.distributions`` (see ``frontier_grid.py`` for the derivation):
+    the t-sums contract into at most four per-channel accumulators
+    (P0/P1/Pv0/Pv1), of which each family statically needs a subset.
+
+    Gradients are w.r.t. W only; mus/sigmas/extra are treated as constants of
+    the solve (the posterior point estimates), matching every caller in repro.
     """
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
-    means = W * mus                       # (F, K)
-    stds = W * sigmas
-    reach = means + z * stds
+    extra = _family_args(dist_id, extra, W.shape[1])
+    means_eff, stds_eff = dists.family_effective_moments(
+        dist_id, W, mus, sigmas, extra)                      # (F, K)
+    reach = means_eff + z * stds_eff
     amax = jnp.max(reach, axis=-1)        # (F,) unclamped grid end
     tmax = jnp.maximum(amax, 1e-12)
     ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
-    ok = stds > 0
-    safe = jnp.where(ok, stds, 1.0)
-    zsc = (ts[:, :, None] - means[:, None, :]) / safe[:, None, :]
-    cdf_raw = 0.5 * (1.0 + jax.lax.erf(zsc / jnp.sqrt(2.0).astype(jnp.float32)))
-    point = (ts[:, :, None] >= means[:, None, :]).astype(jnp.float32)
-    cdf = jnp.where(ok[:, None, :], cdf_raw, point)
+
+    cdf_raw, D, ok = dists.family_pdf_parts(
+        dist_id, ts[:, :, None], W[:, None, :], mus, sigmas, extra)  # (F,T,K)
+    cdf = jnp.where(ok, cdf_raw,
+                    dists.point_mass_cdf(ts[:, :, None], means_eff[:, None, :]))
     Cc = jnp.clip(cdf, _CDF_FLOOR, 1.0)
     F_t = jnp.exp(jnp.sum(jnp.log(Cc), axis=-1))     # joint CDF (F, T)
     surv = 1.0 - F_t
@@ -105,33 +127,39 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     var_raw = m2 - mu * mu
     var = jnp.maximum(var_raw, 0.0)
 
-    # d logF / d z_k = phi(z_k) / Phi(z_k), gated by the clip conventions
-    phi = jnp.exp(-0.5 * zsc * zsc) * _INV_SQRT2PI
+    # d logF / d w_k |_t = gate * D/Cc * (alpha_k + beta_k t), gated by the
+    # clip conventions (family-generic inverse-Mills ratio)
     gate = (jnp.where(cdf_raw >= 1.0, 0.5, 1.0)
-            * (cdf_raw > _CDF_FLOOR) * ok[:, None, :])
-    r = gate * phi / Cc                              # (F, T, K)
+            * (cdf_raw > _CDF_FLOOR) * ok)
+    r = gate * D / Cc                                # (F, T, K)
     a = (wq[None, :, None] * F_t[:, :, None]) * r    # trapezoid-weighted
-    P1 = jnp.einsum("ftk,ft->fk", a, ts)             # sum_j w_j F_j r_jk t_j
-    # var accumulator combines the m2 and -2*mu*mu cotangents PER GRID POINT
-    # (t_j - mu), exactly as autodiff's backward does — accumulating P2 and
-    # P1 separately and subtracting after the reduction loses ~3 digits to
+    use_p0, use_p1 = dists.family_accumulators(dist_id)
+    ones_t = jnp.ones_like(ts)
+    # var accumulators combine the m2 and -2*mu*mu cotangents PER GRID POINT
+    # (t_j - mu), exactly as autodiff's backward does — accumulating them
+    # separately and subtracting after the reduction loses ~3 digits to
     # cancellation when var << mu^2
-    Pv = jnp.einsum("ftk,ft->fk", a, ts * (ts - mu[:, None]))
+    P0 = jnp.einsum("ftk,ft->fk", a, ones_t) if use_p0 else 0.0
+    Pv0 = jnp.einsum("ftk,ft->fk", a, ts - mu[:, None]) if use_p0 else 0.0
+    P1 = jnp.einsum("ftk,ft->fk", a, ts) if use_p1 else 0.0
+    Pv1 = jnp.einsum("ftk,ft->fk", a, ts * (ts - mu[:, None])) if use_p1 else 0.0
 
-    # fixed-grid terms: dz_k/dw_k = -t / (w_k^2 sigma_k); w*stds = w^2 sigma
-    inv_w2s = jnp.where(ok, 1.0 / jnp.where(ok, W * stds, 1.0), 0.0)
-    dmu_direct = dt[:, None] * P1 * inv_w2s
-    dvar_direct = 2.0 * dt[:, None] * Pv * inv_w2s
+    alpha, beta, gamma0, gamma1 = dists.family_coeffs(
+        dist_id, W, mus, sigmas, extra)              # (F, K) each
+    # fixed-grid terms: dmu/dw_k = -dt (alpha P0 + beta P1)_k
+    dmu_direct = -dt[:, None] * (alpha * P0 + beta * P1)
+    dvar_direct = -2.0 * dt[:, None] * (alpha * Pv0 + beta * Pv1)
 
-    # grid terms: every z_jk moves with tmax (dz/dtmax = frac_j / s_k), and
-    # dt scales with tmax, so dmu/dtmax = mu/tmax - (dt/tmax) sum_k P1_k/s_k
-    # and dvar/dtmax = 2 (var - dt sum_k Pv_k/s_k) / tmax
-    inv_s = jnp.where(ok, 1.0 / safe, 0.0)
-    b_mu = (mu - dt * jnp.sum(P1 * inv_s, -1)) / tmax
-    b_var = 2.0 * (var_raw - dt * jnp.sum(Pv * inv_s, -1)) / tmax
-    # dtmax/dw_k = (mu_k + z sigma_k) on argmax channels (ties split evenly)
+    # grid terms: every z_jk moves with tmax, and dt scales with tmax, so
+    # dmu/dtmax = mu/tmax - (dt/tmax) sum_k (gamma0 P0 + gamma1 P1)_k
+    # and dvar/dtmax = 2 (var - dt sum_k (gamma0 Pv0 + gamma1 Pv1)_k) / tmax
+    b_mu = (mu - dt * jnp.sum(gamma0 * P0 + gamma1 * P1, -1)) / tmax
+    b_var = 2.0 * (var_raw
+                   - dt * jnp.sum(gamma0 * Pv0 + gamma1 * Pv1, -1)) / tmax
+    # dtmax/dw_k = dreach_k on argmax channels (ties split evenly)
     ind = (reach == amax[:, None]).astype(jnp.float32)
-    gvec = ((mus + z * sigmas)[None, :] * ind / jnp.sum(ind, -1, keepdims=True)
+    dreach = dists.family_dreach(dist_id, W, mus, sigmas, extra, z)
+    gvec = (dreach * ind / jnp.sum(ind, -1, keepdims=True)
             * (amax > 1e-12)[:, None])
 
     dmu = dmu_direct + b_mu[:, None] * gvec

@@ -16,9 +16,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core import (NIGState, nig_init, nig_point_estimates, nig_update_batch,
-                    equal_split, inverse_mu_split, optimize_2ch,
-                    optimize_weights, predict_moments)
+from ..core import (NIGState, get_family, nig_init, nig_point_estimates,
+                    nig_update_batch, equal_split, inverse_mu_split,
+                    optimize_2ch, optimize_weights, predict_moments)
 
 __all__ = ["integerize", "UncertaintyAwareBalancer"]
 
@@ -56,8 +56,10 @@ class UncertaintyAwareBalancer:
     impl: str = "xla"           # frontier_moments backend: xla | pallas[_interpret]
     num_t: int = 1024           # survival-integral resolution per candidate
     block_f: Optional[int] = None  # kernel launch shape; None = autotuned
+    family: object = "normal"   # completion-time family for the solve
     _nig: NIGState = field(default=None, repr=False)
     _cached_w: np.ndarray = field(default=None, repr=False)
+    _cached_family_key: object = field(default=None, repr=False)
     _obs_count: int = 0
 
     def __post_init__(self):
@@ -84,24 +86,45 @@ class UncertaintyAwareBalancer:
         return np.asarray(mu, np.float64), np.asarray(sigma, np.float64)
 
     # ------------------------------------------------------------ decisions
-    def weights(self) -> np.ndarray:
+    @staticmethod
+    def _family_key(fam) -> tuple:
+        """Hashable fingerprint of a family spec (cache-invalidation key)."""
+        fam = get_family(fam)
+        extra_items = tuple(sorted(
+            (k, tuple(np.asarray(v).ravel().tolist()) if not isinstance(v, str)
+             else v)
+            for k, v in fam.state_dict().items()))
+        return (fam.dist_id, extra_items)
+
+    def weights(self, family=None) -> np.ndarray:
+        """Current split decision; ``family`` overrides the configured
+        completion-time family for this solve (e.g. the straggler policy
+        passing a Drift family with per-channel rates)."""
         mus, sigmas = self.estimates()
         k = self.num_channels
+        fam = self.family if family is None else family
         if self.policy == "equal":
             w = np.asarray(equal_split(k))
         elif self.policy == "inverse_mu":
             w = np.asarray(inverse_mu_split(mus))
         else:
             # frontier: cached between refreshes (the solve is the scheduler
-            # tick cost — it must stay off the per-step critical path)
+            # tick cost — it must stay off the per-step critical path). A
+            # family change (straggler detected -> drift priced in) is a
+            # model change: it always invalidates the cached solve.
+            fam_key = self._family_key(fam)
             stale = (self._cached_w is None
                      or len(self._cached_w) != k
+                     or fam_key != self._cached_family_key
                      or self._obs_count % max(self.refresh_every, 1) == 0)
             if not stale:
-                return self._cached_w.copy()
-            if k == 2:
+                # fall through to the min_weight floor below: cached and
+                # fresh ticks must return identical post-processing
+                w = self._cached_w.copy()
+            elif k == 2:
                 w = optimize_2ch(mus[0], sigmas[0], mus[1], sigmas[1],
-                                 lam=self.lam, impl=self.impl).weights
+                                 lam=self.lam, impl=self.impl,
+                                 family=fam).weights
             else:
                 restarts = 2 if k <= 16 else 0
                 # warm-start from the previous solve: posteriors move a
@@ -116,8 +139,10 @@ class UncertaintyAwareBalancer:
                                      restarts=restarts,
                                      num_t=self.num_t, impl=self.impl,
                                      warm_start=warm,
-                                     block_f=self.block_f).weights
+                                     block_f=self.block_f,
+                                     family=fam).weights
             self._cached_w = np.asarray(w, np.float64)
+            self._cached_family_key = fam_key
         if self.min_weight > 0:
             w = np.maximum(w, self.min_weight)
             w = w / w.sum()
@@ -127,10 +152,12 @@ class UncertaintyAwareBalancer:
         """Integer work assignment (e.g. microbatch counts per pod)."""
         return integerize(self.weights(), total_units)
 
-    def predicted_moments(self, weights: Optional[np.ndarray] = None):
+    def predicted_moments(self, weights: Optional[np.ndarray] = None,
+                          family=None):
         mus, sigmas = self.estimates()
         w = self.weights() if weights is None else weights
-        return predict_moments(w, mus, sigmas)
+        fam = self.family if family is None else family
+        return predict_moments(w, mus, sigmas, family=fam)
 
     # ------------------------------------------------------------ elasticity
     def add_channel(self, prior_mean: Optional[float] = None):
@@ -163,13 +190,15 @@ class UncertaintyAwareBalancer:
     def state_dict(self) -> dict:
         return {"num_channels": self.num_channels, "lam": self.lam,
                 "policy": self.policy, "impl": self.impl, "num_t": self.num_t,
+                "family": get_family(self.family).state_dict(),
                 "nig": {k: np.asarray(v).tolist() for k, v in self._nig._asdict().items()}}
 
     @classmethod
     def from_state_dict(cls, d: dict) -> "UncertaintyAwareBalancer":
         import jax.numpy as jnp
         b = cls(num_channels=d["num_channels"], lam=d["lam"], policy=d["policy"],
-                impl=d.get("impl", "xla"), num_t=d.get("num_t", 1024))
+                impl=d.get("impl", "xla"), num_t=d.get("num_t", 1024),
+                family=get_family(d.get("family", "normal")))
         b._nig = NIGState(**{k: jnp.asarray(v, jnp.float32)
                              for k, v in d["nig"].items()})
         return b

@@ -5,16 +5,25 @@ rises and the frontier moves work away from it. This module adds the
 operational edges a 1000-node deployment needs:
 
   * z-score detection of acute stragglers (vs the fleet's posterior mix),
-  * quarantine (weight -> 0) after repeated offenses, with probation retries,
+  * two mitigation modes:
+      - ``"quarantine"``: weight -> 0 after repeated offenses, with probation
+        retries (the blunt classic);
+      - ``"drift"``: straggler-aware frontiers — a detected straggler is NOT
+        dropped; it gets the ``drift`` completion-time family with a
+        per-channel drift rate estimated from its observed slowdown, so the
+        solver prices the straggle into the survival integral and keeps the
+        (discounted) capacity enlisted. Channels that behave again decay
+        back to rho=0, i.e. the plain normal family.
   * hard-failure handling (missed heartbeat -> elastic removal).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..core import Drift
 from .balancer import UncertaintyAwareBalancer
 
 __all__ = ["StragglerPolicy"]
@@ -24,11 +33,20 @@ __all__ = ["StragglerPolicy"]
 class StragglerPolicy:
     balancer: UncertaintyAwareBalancer
     z_threshold: float = 3.0          # acute-straggler z score
-    quarantine_after: int = 3         # offenses before weight->0
+    quarantine_after: int = 3         # offenses before weight->0 (quarantine mode)
     probation_period: int = 20        # steps before a quarantined node retries
+    mitigation: str = "quarantine"    # "quarantine" | "drift"
+    drift_decay: float = 0.5          # per-clean-step multiplicative rho decay
+    max_rho: float = 4.0              # cap on the estimated drift rate
     offenses: Dict[int, int] = field(default_factory=dict)
     quarantined: Dict[int, int] = field(default_factory=dict)  # idx -> step
+    drift_rhos: Dict[int, float] = field(default_factory=dict)  # idx -> rho
     step: int = 0
+
+    def __post_init__(self):
+        if self.mitigation not in ("quarantine", "drift"):
+            raise ValueError(f"mitigation must be 'quarantine' or 'drift', "
+                             f"got {self.mitigation!r}")
 
     def record(self, durations: Sequence[float], work: Sequence[float]) -> List[int]:
         """Feed observations; returns indices flagged as acute stragglers."""
@@ -46,10 +64,27 @@ class StragglerPolicy:
             if z > self.z_threshold:
                 self.offenses[i] = self.offenses.get(i, 0) + 1
                 flagged.append(i)
-                if self.offenses[i] >= self.quarantine_after:
+                if self.mitigation == "drift":
+                    # estimated per-unit-work drift: the observed mean excess
+                    # over the posterior, as a fraction of the posterior mean
+                    # (matches the drift family's E[T] = w mu (1 + rho w / 2)
+                    # with the observed share). EMA over repeat offenses.
+                    excess = max(rate / max(mus[i], 1e-9) - 1.0, 0.0)
+                    rho_obs = min(2.0 * excess / max(w[i], 1e-6), self.max_rho)
+                    old = self.drift_rhos.get(i, 0.0)
+                    self.drift_rhos[i] = min(0.5 * old + 0.5 * rho_obs,
+                                             self.max_rho)
+                elif self.offenses[i] >= self.quarantine_after:
                     self.quarantined[i] = self.step
             else:
                 self.offenses[i] = max(0, self.offenses.get(i, 0) - 1)
+                if i in self.drift_rhos:
+                    # behaving again: decay the priced-in drift toward normal
+                    rho = self.drift_rhos[i] * self.drift_decay
+                    if rho < 1e-3:
+                        del self.drift_rhos[i]
+                    else:
+                        self.drift_rhos[i] = rho
         # probation: let quarantined nodes back in for re-evaluation
         for i, since in list(self.quarantined.items()):
             if self.step - since >= self.probation_period:
@@ -57,8 +92,20 @@ class StragglerPolicy:
                 self.offenses[i] = 0
         return flagged
 
+    def family(self) -> Optional[Drift]:
+        """The Drift family pricing current stragglers, or None when clean."""
+        if self.mitigation != "drift" or not self.drift_rhos:
+            return None
+        rho = np.zeros(self.balancer.num_channels, np.float32)
+        for i, r in self.drift_rhos.items():
+            if i < rho.shape[0]:
+                rho[i] = r
+        return Drift(rho)
+
     def weights(self) -> np.ndarray:
-        w = self.balancer.weights()
+        fam = self.family()
+        w = self.balancer.weights(family=fam) if fam is not None \
+            else self.balancer.weights()
         for i in self.quarantined:
             w[i] = 0.0
         s = w.sum()
@@ -74,6 +121,8 @@ class StragglerPolicy:
         self.offenses = {i - (i > idx): c for i, c in self.offenses.items() if i != idx}
         self.quarantined = {i - (i > idx): s for i, s in self.quarantined.items()
                             if i != idx}
+        self.drift_rhos = {i - (i > idx): r for i, r in self.drift_rhos.items()
+                           if i != idx}
 
     def join(self, prior_mean=None):
         """Elastic scale-up."""

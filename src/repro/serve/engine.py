@@ -60,14 +60,17 @@ class PartitionedBatcher:
     def __init__(self, groups: List[ReplicaGroup], lam: float = 0.05,
                  policy: str = "frontier", sim: Optional[ClusterSim] = None,
                  seed: int = 0, impl: str = "xla", num_t: int = 1024,
-                 refresh_every: int = 1):
+                 refresh_every: int = 1, family="normal"):
         self.groups = groups
         # forward the solver knobs so serving ticks run the kernel-backed
-        # (and, with impl="pallas", compiled) fused solve path online
+        # (and, with impl="pallas", compiled) fused solve path online;
+        # ``family`` swaps the completion-time model the frontier solves
+        # under (e.g. "lognormal" for heavy-tailed WAN-style service times)
         self.balancer = UncertaintyAwareBalancer(len(groups), lam=lam,
                                                  policy=policy, impl=impl,
                                                  num_t=num_t,
-                                                 refresh_every=refresh_every)
+                                                 refresh_every=refresh_every,
+                                                 family=family)
         self.sim = sim or ClusterSim.heterogeneous(len(groups), seed=seed)
 
     def split(self, num_requests: int) -> np.ndarray:

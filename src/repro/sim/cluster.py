@@ -2,40 +2,64 @@
 
 Reproduces the paper's experimental conditions (contended VMs, jittery WAN
 paths) without hardware: channel i processing work fraction w completes in
-``w * rate`` where rate ~ the channel's distribution (Normal by default,
-log-normal / shifted regimes for robustness studies, plus drift and failure
-injection for the fault-tolerance benchmarks).
+``w * rate`` where rate ~ the channel's distribution. Three per-channel
+regimes generate ground truth for the corresponding solver families:
+
+  * ``normal``    — the paper's model (contended compute),
+  * ``lognormal`` — heavy-tailed WAN transfer times, moment-matched to
+                    (mu, sigma) exactly like ``core.distributions.LogNormal``,
+  * ``drift``     — within-work straggle: the effective rate inflates over
+                    the executed share, T = w*r + rho*mu*w^2/2 (matching the
+                    drift family's mean model E[T] = w mu (1 + rho w/2)),
+
+plus slow per-step mu drift (multi-tenant hotspots) and failure injection for
+the fault-tolerance benchmarks.
 
 Used by: benchmarks/fig34_convex_opt.py, fig56_file_transfer.py,
-cluster_scale.py, and the examples. Everything is seeded and reproducible.
+cluster_scale.py, and the examples. Everything is seeded and reproducible;
+``run_step`` optionally takes an explicit rng/seed so fleet benchmarks can
+replay identical traces across policies.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..core.distributions import lognormal_shape_np
+
 __all__ = ["Channel", "ClusterSim"]
+
+_DISTS = ("normal", "lognormal", "drift")
 
 
 @dataclass
 class Channel:
     mu: float                      # mean seconds per unit work
     sigma: float                   # std seconds per unit work
-    dist: str = "normal"           # normal | lognormal
-    drift: float = 0.0             # per-step multiplicative drift (hotspots)
+    dist: str = "normal"           # normal | lognormal | drift
+    drift: float = 0.0             # per-step multiplicative mu drift (hotspots)
+    rho: float = 0.0               # within-work drift rate (dist == "drift")
     failed: bool = False
 
+    def __post_init__(self):
+        if self.dist not in _DISTS:
+            raise ValueError(f"dist must be one of {_DISTS}, got {self.dist!r}")
+
     def sample(self, rng: np.random.Generator, work: float) -> float:
+        """Single-channel draw (the vectorized path in run_step is primary)."""
         if self.failed or work <= 0:
             return 0.0
-        if self.dist == "normal":
-            r = rng.normal(self.mu, self.sigma)
+        if self.dist == "lognormal":
+            s_l, base = lognormal_shape_np(self.mu, self.sigma)
+            r = rng.lognormal(base, s_l)
         else:
-            s2 = np.log1p((self.sigma / self.mu) ** 2)
-            r = rng.lognormal(np.log(self.mu) - s2 / 2, np.sqrt(s2))
-        return max(work * r, 1e-9)
+            r = rng.normal(self.mu, self.sigma)
+        dur = work * r
+        if self.dist == "drift":
+            dur += 0.5 * self.rho * self.mu * work * work
+        return max(dur, 1e-9)
 
 
 @dataclass
@@ -50,13 +74,17 @@ class ClusterSim:
 
     @classmethod
     def heterogeneous(cls, n: int, mu_range=(10.0, 40.0), cov_range=(0.02, 0.3),
-                      seed: int = 0, dist: str = "normal") -> "ClusterSim":
+                      seed: int = 0, dist: str = "normal",
+                      rho_range=(0.1, 0.8)) -> "ClusterSim":
+        """Random fleet; ``dist`` selects the regime (drift draws per-channel
+        rho from ``rho_range``)."""
         rng = np.random.default_rng(seed)
         chans = []
         for _ in range(n):
             mu = rng.uniform(*mu_range)
             sigma = mu * rng.uniform(*cov_range)
-            chans.append(Channel(mu=mu, sigma=sigma, dist=dist))
+            rho = rng.uniform(*rho_range) if dist == "drift" else 0.0
+            chans.append(Channel(mu=mu, sigma=sigma, dist=dist, rho=rho))
         return cls(channels=chans, seed=seed + 1)
 
     @property
@@ -64,24 +92,56 @@ class ClusterSim:
         return (np.asarray([c.mu for c in self.channels]),
                 np.asarray([c.sigma for c in self.channels]))
 
-    def run_step(self, weights: Sequence[float]) -> Tuple[float, np.ndarray]:
+    def _resolve_rng(self, rng) -> np.random.Generator:
+        if rng is None:
+            return self.rng
+        if isinstance(rng, np.random.Generator):
+            return rng
+        return np.random.default_rng(rng)
+
+    def run_step(self, weights,
+                 rng: Union[None, int, np.random.Generator] = None
+                 ) -> Tuple[float, np.ndarray]:
         """Execute one partitioned step: returns (join_time, per-channel durations).
 
         join_time = max over active channels (the paper's completion time).
-        All-Normal fleets take a single vectorized draw — at 1024 channels the
-        per-channel Python loop dominated the fleet benchmarks, not the solver.
+
+        Boundary conventions (this is the host edge of the stack): ``weights``
+        may be any array-like — numpy, jax arrays, lists — and need not be
+        normalized; they are converted with ``np.asarray`` and scaled to sum
+        to 1 here (all-zero weights stay zero). ``rng`` optionally overrides
+        the simulator's own stream — pass a seed int or a Generator to make a
+        single step reproducible independent of sim history (fleet benchmarks
+        replaying one trace across policies).
+
+        All draws are vectorized — at 1024 channels a per-channel Python loop
+        dominated the fleet benchmarks, not the solver. All-Normal fleets take
+        exactly one vectorized draw (stream-compatible with the pre-family
+        simulator); mixed fleets add one lognormal draw for those channels.
         """
         self.step_count += 1
-        w = np.asarray(weights, np.float64)
-        if all(c.dist == "normal" for c in self.channels):
-            mu = np.asarray([c.mu for c in self.channels])
-            sigma = np.asarray([c.sigma for c in self.channels])
-            active = np.asarray([not c.failed for c in self.channels]) & (w > 0)
-            rates = self.rng.normal(mu, sigma)
-            durs = np.where(active, np.maximum(w * rates, 1e-9), 0.0)
-        else:
-            durs = np.array([c.sample(self.rng, w[i])
-                             for i, c in enumerate(self.channels)])
+        r = self._resolve_rng(rng)
+        w = np.asarray(weights, np.float64).reshape(-1)
+        if w.shape[0] != len(self.channels):
+            raise ValueError(f"got {w.shape[0]} weights for "
+                             f"{len(self.channels)} channels")
+        total = w.sum()
+        if total > 0:
+            w = w / total
+        mu = np.asarray([c.mu for c in self.channels])
+        sigma = np.asarray([c.sigma for c in self.channels])
+        active = np.asarray([not c.failed for c in self.channels]) & (w > 0)
+        rates = r.normal(mu, sigma)
+        ln_mask = np.asarray([c.dist == "lognormal" for c in self.channels])
+        if ln_mask.any():
+            s_l, base = lognormal_shape_np(mu, sigma)
+            rates = np.where(ln_mask, r.lognormal(base, s_l), rates)
+        durs = w * rates
+        rho = np.asarray([c.rho if c.dist == "drift" else 0.0
+                          for c in self.channels])
+        if rho.any():
+            durs = durs + 0.5 * rho * mu * w * w
+        durs = np.where(active, np.maximum(durs, 1e-9), 0.0)
         for c in self.channels:  # slow drift (multi-tenant hotspots)
             if c.drift:
                 c.mu *= (1.0 + c.drift)

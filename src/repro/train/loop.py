@@ -133,8 +133,12 @@ class Trainer:
         labels = labels.reshape(t.max_micro, t.num_pods * t.microbatch, S)
         state, metrics = self._step_fn(state, jnp.asarray(tokens),
                                        jnp.asarray(labels), jnp.asarray(k_pods))
-        # simulated per-pod durations feed the posterior (real pods: runtime)
+        # simulated per-pod durations feed the posterior (real pods: runtime).
+        # run_step normalizes the counts to work fractions; pod rates are sec
+        # per *microbatch*, so scale the realized times back to seconds
         join_t, durs = self.sim.run_step(k_pods.astype(np.float64))
+        total_work = float(k_pods.sum())
+        join_t, durs = join_t * total_work, durs * total_work
         self.balancer.observe(durs, k_pods.astype(np.float64))
         metrics = dict(metrics)
         metrics["sim_join_time"] = join_t

@@ -176,7 +176,7 @@ class TestAutotuneCache:
                                candidates=(4, 8), cache_path=path)
         assert entry["source"] == "sweep" and entry["block_f"] in (4, 8)
         on_disk = json.load(open(path))
-        key = "xla:F8:K3:T64:fused0"
+        key = "v2:xla:F8:K3:T64:fused0:famnormal"
         assert on_disk[key]["block_f"] == entry["block_f"]
         autotune.clear_cache()
         assert autotune.lookup(8, 3, 64, backend="xla",
