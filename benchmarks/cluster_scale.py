@@ -28,6 +28,12 @@ Three sections:
    regimes and straggler-aware frontiers) — the scenario-diverse numbers the
    distribution-generic stack buys. Entries carry a ``family`` field.
 
+5. Auto-family tick: the closed estimation loop's tick cost — BIC-score the
+   observed (rate, work) history across all K channels (vectorized fits,
+   batch GMM EM included), instantiate the winner, run the fused solve under
+   it — vs the identical fused solve with the family fixed up front.
+   Acceptance: within 1.2x (``auto_family_tick_overhead`` in the JSON).
+
 ``--json`` additionally writes machine-readable ``BENCH_cluster_scale.json``
 (median/p90 per tick, impl, block_f, family, speedups) at the repo root so
 the perf trajectory is tracked from this PR on; ``scripts/bench_smoke.sh``
@@ -48,6 +54,13 @@ TICK_T = 256       # survival-integral points per candidate
 VMAP_CHUNK = 512   # legacy path OOMs beyond this (4 GB+ intermediates)
 PGD_LAM = 0.05     # scalarization weight in the PGD-tick objective
 TICK_FAMILIES = ("lognormal", "drift")  # non-normal fleet-tick regimes
+
+# the machine-readable contract of BENCH_cluster_scale*.json — declared next
+# to the writer; scripts/ci.sh imports these to validate the emitted files
+SCHEMA_KEYS = ("bench", "smoke", "pgd_speedup_vs_autodiff",
+               "auto_family_tick_overhead", "entries")
+ENTRY_KEYS = ("name", "impl", "K", "F", "num_t", "family", "median_us",
+              "p90_us", "repeats")
 
 _JSON_ENTRIES = []
 
@@ -304,6 +317,67 @@ def tick_family_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
     return rows
 
 
+def tick_auto_family_compare(num_k=TICK_K, num_f=TICK_F, num_t=TICK_T,
+                             window=96):
+    """One ``family="auto"`` rebalance tick vs the fixed-family fused solve.
+
+    The auto tick is everything the closed loop adds on the tick path: BIC-
+    score the (rate, work) history (vectorized fits — batch GMM EM included)
+    across all K channels, instantiate the winning family, THEN run the
+    fused moments+gradient launch under it. The baseline runs the identical
+    launch with the family fixed up front. Acceptance: auto within 1.2x of
+    fixed — model selection must ride the tick, not dominate it.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bayes import fit_selected_family, score_families
+    from repro.core.distributions import lognormal_shape_np, resolve_family
+    from repro.kernels import autotune, ops
+
+    W, mus, sgs = _tick_problem(num_k, num_f)
+    rng = np.random.default_rng(7)
+    # lognormal-generated history: the selector has a real (non-default)
+    # family to find, so the scoring pass does full work
+    mu_h = np.asarray(mus, np.float64)
+    sg_h = mu_h * rng.uniform(0.25, 0.5, num_k)
+    s_l, base = lognormal_shape_np(mu_h, sg_h)
+    rates = rng.lognormal(base, s_l, size=(window, num_k)).astype(np.float32)
+    works = rng.uniform(0.5 / num_k, 2.0 / num_k,
+                        size=(window, num_k)).astype(np.float32)
+    mask = np.ones((window, num_k), np.float32)
+
+    rows = []
+    bench = _make_bench(rows, "auto_tick_", "auto_tick_", num_k, num_f,
+                        num_t, family="auto")
+
+    # fixed-family baseline: family resolved once, outside the tick
+    fixed_fam = fit_selected_family(score_families(rates, works, mask))
+    dist_id, extra = resolve_family(fixed_fam, num_k)
+    extra = jnp.asarray(extra, jnp.float32)
+    bf = autotune.lookup(num_f, num_k, num_t, backend="xla", fused=True,
+                         dist_id=dist_id)
+    fused = jax.jit(lambda W, ex, bf=bf: ops.frontier_moments_with_grads(
+        W, mus, sgs, num_t=num_t, impl="xla", block_f=bf,
+        family=(dist_id, ex)))
+    bench(f"fixed_{dist_id}_fused_xla", "xla", bf, lambda: fused(W, extra))
+    fixed_med = rows[-1][4]
+
+    def auto_tick():
+        scores = score_families(rates, works, mask)
+        fam = fit_selected_family(scores)
+        d_id, ex = resolve_family(fam, num_k)
+        assert d_id == dist_id  # same winner -> same compiled kernel
+        return fused(W, jnp.asarray(ex, jnp.float32))
+
+    bench("score_plus_fused_xla", "xla", bf, auto_tick)
+    auto_med = rows[-1][4]
+    ratio = auto_med / fixed_med
+    emit(f"auto_tick_{num_k}ch_{num_f}cand_overhead", ratio,
+         f"auto_vs_fixed_{dist_id};accept<=1.2")
+    return rows, ratio
+
+
 def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
     rows = []
     out = {}
@@ -350,12 +424,13 @@ def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
     pgd_rows, speedup = tick_pgd_compare(num_k, num_f, num_t,
                                          with_interpret=interp_fused)
     fam_rows = tick_family_compare(num_k, num_f, num_t)
+    auto_rows, auto_ratio = tick_auto_family_compare(num_k, num_f, num_t)
     # smoke rows go to their own table: they must never clobber the tracked
     # full-scale perf-trajectory CSV
     csv_name = ("cluster_tick_kernel_smoke.csv" if smoke
                 else "cluster_tick_kernel.csv")
     save_table(csv_name, "K,F,num_t,path,us_per_tick",
-               tick_rows + pgd_rows + fam_rows)
+               tick_rows + pgd_rows + fam_rows + auto_rows)
 
     if not ticks_only:
         for n in (64, 256, 1024):
@@ -364,7 +439,8 @@ def run(smoke=False, ticks_only=False, with_interpret=None) -> dict:
             assert fr[2] < eq[2], f"frontier should beat equal p99 at n={n}"
     return {f"{n}:{p}": out[(n, p)] for n in (64, 256, 1024)
             for p in ("equal", "frontier") if (n, p) in out} | {
-                "pgd_speedup_vs_autodiff": speedup}
+                "pgd_speedup_vs_autodiff": speedup,
+                "auto_family_tick_overhead": auto_ratio}
 
 
 def _write_json(path, payload):
@@ -397,9 +473,20 @@ def main():
             "smoke": args.smoke,
             "pgd_speedup_vs_autodiff": round(
                 res["pgd_speedup_vs_autodiff"], 3),
+            "auto_family_tick_overhead": round(
+                res["auto_family_tick_overhead"], 3),
             "entries": _JSON_ENTRIES,
         })
     print(res)
+    if not args.smoke:
+        # acceptance gate LAST, after every artifact is on disk: model
+        # selection must ride the tick, not dominate it — but a noisy run
+        # should still leave a data point in the trajectory, not a hole
+        # (smoke scale is solve-starved; the ratio only means anything at
+        # the tracked full scale)
+        ratio = res["auto_family_tick_overhead"]
+        assert ratio <= 1.2, \
+            f"auto-family tick overhead {ratio:.3f}x exceeds the 1.2x bound"
 
 
 if __name__ == "__main__":

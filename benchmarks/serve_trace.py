@@ -1,0 +1,146 @@
+"""Serving-path end-to-end benchmark: ``PartitionedBatcher`` under a
+synthetic bursty request trace (the ROADMAP "real request traces" item).
+
+The trace is Poisson arrivals whose rate switches between a calm and a burst
+regime (two-state Markov chain, seeded); each regime switch also moves the
+fleet-wide congestion factor of the simulator (``ClusterSim.set_load``), so
+the batcher faces exactly the non-stationarity the closed estimation loop is
+for: service statistics that change while the frontier solve is running.
+
+Per tick we drive one batch through the batcher (autotuned ``block_f`` — the
+solver resolves its launch shapes through ``kernels.autotune`` whenever
+``block_f`` is None), record the join latency, the family the solve ran
+under (``family="auto"`` BIC selection with hysteresis) and the batcher's
+adaptive refresh cadence, and aggregate latency mean/variance per regime.
+
+``--json`` writes machine-readable ``BENCH_serve_trace.json`` at the repo
+root (schema: bench / smoke / ticks / groups / family_mode / latency{mean,
+var,p50,p99} / per_family_ticks / regimes{calm,burst}{ticks,latency_mean} /
+entries) so the serving-path perf trajectory is tracked alongside
+``BENCH_cluster_scale.json``; ``scripts/bench_smoke.sh`` runs the small
+config and ``scripts/ci.sh`` asserts the schema keys.
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .common import emit, save_table
+
+GROUPS = 6          # replica groups (channels)
+TICKS = 400         # batches driven through the batcher
+LAM_CALM = 24.0     # mean requests/tick, calm regime
+LAM_BURST = 96.0    # mean requests/tick, burst regime
+P_ENTER_BURST = 0.05   # per-tick calm -> burst probability
+P_EXIT_BURST = 0.15    # per-tick burst -> calm probability
+BURST_LOAD = 1.6    # fleet-wide congestion factor while bursting
+
+# the machine-readable contract of BENCH_serve_trace*.json — declared next
+# to the writer; scripts/ci.sh imports these to validate the emitted files
+SCHEMA_KEYS = ("bench", "smoke", "ticks", "groups", "family_mode", "latency",
+               "per_family_ticks", "regimes", "entries")
+ENTRY_KEYS = ("name", "family", "ticks", "mean_s", "var_s2", "p99_s")
+
+
+def run(ticks: int = TICKS, groups: int = GROUPS, seed: int = 0,
+        family="auto", smoke: bool = False) -> dict:
+    from repro.serve.engine import PartitionedBatcher, ReplicaGroup
+    from repro.sim import ClusterSim
+
+    rng = np.random.default_rng(seed)
+    # lognormal ground truth: WAN-ish heavy-tailed service times, the regime
+    # where the auto-selector has something real to find
+    sim = ClusterSim.heterogeneous(groups, seed=seed, dist="lognormal",
+                                   cov_range=(0.2, 0.5))
+    batcher = PartitionedBatcher(
+        [ReplicaGroup(name=f"g{i}") for i in range(groups)],
+        lam=0.02, sim=sim, family=family, adaptive_refresh=True,
+        refresh_every=8)
+
+    burst = False
+    lat, fams, regimes, rows = [], [], [], []
+    for t in range(ticks):
+        if burst and rng.random() < P_EXIT_BURST:
+            burst = False
+            sim.set_load(1.0)
+        elif not burst and rng.random() < P_ENTER_BURST:
+            burst = True
+            sim.set_load(BURST_LOAD)
+        lam = LAM_BURST if burst else LAM_CALM
+        n_req = max(int(rng.poisson(lam)), 1)
+        prompts = np.zeros((n_req, 4), np.int32)   # routing-only batch
+        join_t, counts, _ = batcher.run_batch(prompts, execute=False)
+        tick = batcher.last_tick
+        lat.append(join_t)
+        fams.append(tick["family"])
+        regimes.append("burst" if burst else "calm")
+        rows.append((t, regimes[-1], n_req, tick["family"],
+                     round(join_t, 6), tick["effective_refresh"]))
+
+    lat = np.asarray(lat)
+    per_family = {f: int(sum(1 for x in fams if x == f)) for f in set(fams)}
+    reg = {}
+    for name in ("calm", "burst"):
+        m = np.asarray([r == name for r in regimes])
+        reg[name] = {"ticks": int(m.sum()),
+                     "latency_mean": (float(lat[m].mean()) if m.any()
+                                      else None)}
+    save_table("serve_trace_smoke.csv" if smoke else "serve_trace.csv",
+               "tick,regime,requests,family,join_latency,effective_refresh",
+               rows)
+    family_mode = family if isinstance(family, str) else "instance"
+    out = {
+        "bench": "serve_trace",
+        "smoke": smoke,
+        "ticks": ticks,
+        "groups": groups,
+        "family_mode": family_mode,
+        "latency": {
+            "mean": float(lat.mean()),
+            "var": float(lat.var()),
+            "p50": float(np.percentile(lat, 50)),
+            "p99": float(np.percentile(lat, 99)),
+        },
+        "per_family_ticks": per_family,
+        "regimes": reg,
+        "entries": [
+            {"name": "serve_trace_join_latency", "family": family_mode,
+             "ticks": ticks, "mean_s": float(lat.mean()),
+             "var_s2": float(lat.var()), "p99_s": float(np.percentile(lat, 99))},
+        ],
+    }
+    # simulated-time seconds, NOT wall-clock us: the value matches the name
+    emit("serve_trace_latency_mean_s", float(lat.mean()),
+         f"ticks={ticks};families={per_family}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable BENCH_serve_trace.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale (fewer ticks) for smoke runs")
+    ap.add_argument("--ticks", type=int, default=None)
+    ap.add_argument("--groups", type=int, default=GROUPS)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default: repo-root "
+                         "BENCH_serve_trace.json, or _smoke variant)")
+    args = ap.parse_args()
+
+    ticks = args.ticks or (60 if args.smoke else TICKS)
+    res = run(ticks=ticks, groups=args.groups, smoke=args.smoke)
+    if args.json:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        default = ("BENCH_serve_trace_smoke.json" if args.smoke
+                   else "BENCH_serve_trace.json")
+        path = args.out or os.path.abspath(os.path.join(root, default))
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    print({k: res[k] for k in ("latency", "per_family_ticks", "regimes")})
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.cluster_scale --json --smoke --ticks-only
 
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.serve_trace --json --smoke
+
 python - <<'PY'
 import json
 
@@ -20,10 +23,21 @@ names = {e["name"] for e in d["entries"]}
 assert any(n.startswith("pgd_tick_autodiff") for n in names), names
 assert any(n.startswith("pgd_tick_fused_xla") for n in names), names
 fams = {e.get("family") for e in d["entries"]}
-assert {"normal", "lognormal", "drift"} <= fams, fams  # family tick section ran
+assert {"normal", "lognormal", "drift", "auto"} <= fams, fams  # all sections
 assert any(n.startswith("lognormal_tick_fused") for n in names), names
+assert any(n.startswith("auto_tick_score_plus_fused") for n in names), names
 assert all(e["median_us"] > 0 for e in d["entries"])
 print(f"bench smoke OK: {len(d['entries'])} entries "
       f"(families: {sorted(f for f in fams if f)}), "
-      f"fused/autodiff speedup {d['pgd_speedup_vs_autodiff']}x (smoke scale)")
+      f"fused/autodiff speedup {d['pgd_speedup_vs_autodiff']}x, "
+      f"auto-family overhead {d['auto_family_tick_overhead']}x (smoke scale)")
+
+s = json.load(open("BENCH_serve_trace_smoke.json"))
+assert s["bench"] == "serve_trace" and s["ticks"] > 0
+assert {"mean", "var", "p50", "p99"} <= set(s["latency"]), s["latency"]
+assert s["per_family_ticks"], "no family ticks recorded"
+assert {"calm", "burst"} <= set(s["regimes"]), s["regimes"]
+print(f"serve trace smoke OK: {s['ticks']} ticks, "
+      f"families {s['per_family_ticks']}, "
+      f"latency mean {s['latency']['mean']:.3f}s p99 {s['latency']['p99']:.3f}s")
 PY

@@ -1,21 +1,61 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + the reduced-scale benchmark smoke.
 #
-# Default keeps the run fast by deselecting tests marked `slow`
-# (pyproject.toml defines the marker); pass --full to run everything the
-# ROADMAP tier-1 command runs (`PYTHONPATH=src python -m pytest -x -q`),
-# plus the bench smoke either way. Extra args go to pytest verbatim, e.g.
-#   scripts/ci.sh -k families
+# Tiers:
+#   (default) --fast : deselect `slow` AND `mc_oracle` tests — the
+#                      Monte-Carlo ground-truth comparisons burn minutes of
+#                      sampling and guard math that the FD/autodiff parity
+#                      tests also cover; run them when the quadrature or a
+#                      family's sampling changes.
+#   --full           : everything the ROADMAP tier-1 command runs
+#                      (`PYTHONPATH=src python -m pytest -x -q`).
+# Extra args go to pytest verbatim, e.g.  scripts/ci.sh -k families
+#
+# After the tests, the bench smoke runs, and every repo-root BENCH_*.json is
+# checked: it must parse and carry the schema keys its benchmark promises —
+# trajectory readers break silently otherwise.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MARKER=(-m "not slow")
-if [[ "${1:-}" == "--full" ]]; then
-    MARKER=()
-    shift
-fi
+MARKER=(-m "not slow and not mc_oracle")
+case "${1:-}" in
+    --full) MARKER=(); shift ;;
+    --fast) shift ;;
+esac
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q "${MARKER[@]}" "$@"
 
 scripts/bench_smoke.sh
+
+python - <<'PY'
+import glob
+import json
+
+# single source: the schema each benchmark promises is declared next to its
+# writer and imported here — no hand-copied key lists to drift
+from benchmarks import cluster_scale, serve_trace
+
+SCHEMAS = {
+    "cluster_scale": cluster_scale.SCHEMA_KEYS,
+    "serve_trace": serve_trace.SCHEMA_KEYS,
+}
+ENTRY_KEYS = {
+    "cluster_scale": cluster_scale.ENTRY_KEYS,
+    "serve_trace": serve_trace.ENTRY_KEYS,
+}
+
+paths = sorted(glob.glob("BENCH_*.json"))
+assert paths, "no BENCH_*.json found at the repo root"
+for path in paths:
+    with open(path) as f:
+        d = json.load(f)   # must parse
+    bench = d.get("bench")
+    assert bench in SCHEMAS, f"{path}: unknown bench tag {bench!r}"
+    missing = [k for k in SCHEMAS[bench] if k not in d]
+    assert not missing, f"{path}: missing schema keys {missing}"
+    for e in d["entries"]:
+        gone = [k for k in ENTRY_KEYS[bench] if k not in e]
+        assert not gone, f"{path}: entry {e.get('name')} missing {gone}"
+    print(f"{path}: schema OK ({bench}, {len(d['entries'])} entries)")
+PY

@@ -8,6 +8,8 @@ Public API:
     max_moments_quad             — survival-integral oracle (paper's integrals)
     clark_max_moments_2 / _seq   — closed-form / sequential moment matching
     NIGState, nig_*              — Bayesian on-the-fly channel estimation
+    score_families               — online BIC family selection (family="auto")
+    moment_sensitivity / posterior_sensitivity — d(solve)/d(posterior params)
     select_channels              — how many channels to enlist (group testing ext.)
     ChannelFamily / get_family   — pluggable completion-time families
                                    (normal | lognormal | drift | empirical)
@@ -19,11 +21,15 @@ from .distributions import (
     Empirical,
     LogNormal,
     Normal,
+    Phi,
+    Phi_c,
     get_family,
+    phi,
     point_mass_cdf,
     resolve_family,
+    safe_cdf,
+    scaled_channel_params,
 )
-from .normal import Phi, Phi_c, phi, safe_cdf, scaled_channel_params
 from .maxstat import (
     clark_max_moments_2,
     clark_max_moments_seq,
@@ -54,7 +60,26 @@ from .partitioner import (
     optimize_weights,
     predict_moments,
 )
-from .bayes import NIGState, nig_init, nig_point_estimates, nig_update, nig_update_batch
+from .bayes import (
+    AUTO_FAMILIES,
+    FamilyScores,
+    NIGState,
+    fit_selected_family,
+    nig_estimate_ses,
+    nig_init,
+    nig_point_estimates,
+    nig_update,
+    nig_update_batch,
+    score_families,
+)
+from .sensitivity import (
+    MomentSensitivity,
+    PosteriorSensitivity,
+    estimation_fragility,
+    fragility_batch,
+    moment_sensitivity,
+    posterior_sensitivity,
+)
 from .group import GroupChoice, select_channels, select_channels_exhaustive
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -12,15 +12,33 @@ Observations are *normalized rates*: a channel that processed work fraction w
 in time t contributes the sample t/w ~ N(mu_i, sigma_i^2) under the paper's
 scaling model. Updates are O(1), jit-able, and vectorized over channels so a
 1000-node scheduler refreshes all posteriors in one fused kernel.
+
+Two closed-loop extensions live here alongside the conjugate updates:
+
+* **Estimation uncertainty** (:func:`nig_estimate_ses`): the standard errors
+  of the point estimates the solver consumes. Composed with the solve's
+  parameter adjoints (``core.sensitivity``) they give the delta-method
+  spread of the predicted completion time under estimation error — the
+  Bayesian loop of arXiv:1511.00613.
+* **Online model selection** (:func:`score_families`): the distribution
+  family itself is chosen from the observed (rate, work) history by BIC —
+  NIG-Normal vs moment-matched lognormal vs the drift regression vs a
+  per-channel GMM (arXiv:1607.04334's adapt-the-model argument). The
+  scheduler's ``family="auto"`` mode consumes these scores with hysteresis.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["NIGState", "nig_init", "nig_update", "nig_update_batch", "nig_point_estimates"]
+__all__ = ["NIGState", "nig_init", "nig_update", "nig_update_batch",
+           "nig_point_estimates", "nig_estimate_ses",
+           "FamilyScores", "score_families", "fit_selected_family",
+           "AUTO_FAMILIES"]
 
 
 class NIGState(NamedTuple):
@@ -86,3 +104,265 @@ def nig_point_estimates(state: NIGState):
     ev = state.beta / jnp.maximum(state.alpha - 1.0, 1e-3)
     sigma2 = ev * (1.0 + 1.0 / jnp.maximum(state.kappa, 1e-6))
     return state.m, jnp.sqrt(sigma2)
+
+
+@jax.jit
+def nig_estimate_ses(state: NIGState):
+    """Standard errors ``(se_mu, se_sigma)`` of the point estimates.
+
+    ``se_mu``: the posterior sd of the location — the marginal of mu under
+    NIG is Student-t with variance ``beta / ((alpha - 1) kappa)``.
+    ``se_sigma``: delta-method sd of ``sigma_hat = sqrt(E[sigma^2])`` from
+    the IG posterior of sigma^2 (``Var[sigma^2] =
+    beta^2 / ((alpha-1)^2 (alpha-2))``), floored for the weak-prior regime
+    alpha <= 2 where the IG variance is infinite — there the estimate is
+    "one observation's worth" uncertain, so we cap the relative se at 1.
+
+    These are what :mod:`core.sensitivity` contracts against the solve's
+    parameter adjoints to price estimation risk; both shrink ~ 1/sqrt(n) as
+    observations accrue, which is what lets the balancer stretch its refresh
+    cadence as posteriors firm up.
+    """
+    am1 = jnp.maximum(state.alpha - 1.0, 1e-3)
+    kap = jnp.maximum(state.kappa, 1e-6)
+    se_mu = jnp.sqrt(state.beta / (am1 * kap))
+    _, sigma_hat = nig_point_estimates(state)
+    # sigma_hat^2 = (1 + 1/kappa) * E[sigma^2], so its sd carries the same
+    # (1 + 1/kappa) factor as the point estimate — dropping it would
+    # understate the young-posterior (kappa ~ 1) uncertainty by ~2x, exactly
+    # the regime the adaptive refresh exists for
+    sd_sig2 = ((1.0 + 1.0 / kap) * state.beta
+               / (am1 * jnp.sqrt(jnp.maximum(state.alpha - 2.0, 1e-3))))
+    se_sigma = jnp.minimum(sd_sig2 / jnp.maximum(2.0 * sigma_hat, 1e-12),
+                           sigma_hat)
+    return se_mu, se_sigma
+
+
+# --------------------------------------------------------------------------
+# online family selection: BIC over the observed (rate, work) history
+# --------------------------------------------------------------------------
+
+AUTO_FAMILIES = ("normal", "lognormal", "drift", "empirical")
+
+# free parameters per channel for the BIC penalty k*ln(n)
+_FAMILY_DOF = {"normal": 2.0, "lognormal": 2.0, "drift": 3.0}
+_LOG_2PI = float(np.log(2.0 * np.pi))
+
+
+@dataclass(frozen=True)
+class FamilyScores:
+    """Result of one BIC scoring pass over the rate history.
+
+    ``bics`` maps family name -> total BIC (summed over scoreable channels;
+    lower is better); ``winner`` is the argmin. ``rho`` is the drift
+    regression's per-channel rate estimate and ``gmm`` the fitted
+    ``(weights, means, stds)`` mixture — kept so the selected family can be
+    instantiated without refitting (:func:`fit_selected_family`).
+    """
+
+    bics: Dict[str, float]
+    winner: str
+    n_channels: int            # channels with enough history to score
+    rho: np.ndarray            # (K,) drift-rate estimates (clipped >= 0)
+    gmm: tuple                 # (W, M, S) each (C, K)
+
+
+def _masked_moments(x: np.ndarray, mask: np.ndarray):
+    """Per-channel (n, mean, var) of ``x`` (N, K) under ``mask`` (N, K)."""
+    n = mask.sum(axis=0)
+    safe_n = np.maximum(n, 1.0)
+    mean = (x * mask).sum(axis=0) / safe_n
+    var = (((x - mean) ** 2) * mask).sum(axis=0) / safe_n
+    return n, mean, var
+
+
+def _gauss_loglik(n: np.ndarray, var: np.ndarray, floor: np.ndarray):
+    """ln L of per-channel Gaussian MLE fits: -n/2 (ln 2 pi var + 1)."""
+    v = np.maximum(var, floor)
+    return -0.5 * n * (_LOG_2PI + np.log(v) + 1.0)
+
+
+def _em_batch(x: np.ndarray, mask: np.ndarray, C: int = 3, iters: int = 16,
+              var_floor_frac: float = 1e-3):
+    """Vectorized per-channel 1-D Gaussian-mixture EM under a sample mask.
+
+    The batched twin of ``distributions._em_1d`` (same quantile init, fixed
+    iteration count, floored variances, deterministic — no RNG), run on
+    (N, K) arrays at once so scoring a 1024-channel fleet's history is a few
+    dozen numpy passes instead of K python EM loops. The E-step runs in
+    float32 (the (C, N, K) responsibility tensor is the cost) with the
+    log-likelihood accumulated in float64 — BIC selection needs relative
+    likelihoods, not converged mixtures, which is also why the default
+    iteration count is lower than the solver-grade ``_em_1d`` fit. Returns
+    ``(W, M, S, loglik)`` with the mixtures (C, K) and per-channel ln L (K,).
+    """
+    x = np.asarray(x, np.float32)
+    N, K = x.shape
+    m = mask.astype(np.float32)
+    n_valid = m.sum(axis=0)
+    has_data = n_valid >= 1.0
+    n = np.maximum(n_valid, 1.0).astype(np.float32)
+    _, mean, var = _masked_moments(x, m)
+    spread = np.maximum(np.sqrt(var), np.maximum(np.abs(mean) * 1e-6, 1e-12))
+    # channels with no valid samples (idle the whole window) get a benign
+    # unit-variance placeholder so no -inf/NaN can leak out of the E-step;
+    # their log-likelihood is exactly 0 (no samples) and the caller
+    # substitutes real parameters for them (see score_families)
+    floor = np.where(has_data, (var_floor_frac * spread) ** 2,
+                     1.0).astype(np.float32)
+    # masked quantile init: sort with masked-out entries pushed to +inf, pick
+    # evenly spaced order statistics of each channel's valid prefix
+    xs = np.where(m > 0, x, np.inf)
+    xs = np.sort(xs, axis=0)
+    qidx = ((np.arange(C)[:, None] + 0.5) / C * n[None, :]).astype(np.int64)
+    qidx = np.minimum(qidx, np.maximum(n.astype(np.int64) - 1, 0))
+    mus = np.take_along_axis(xs, qidx, axis=0)                # (C, K)
+    mus = np.where(np.isfinite(mus), mus, 0.0).astype(np.float32)
+    vars_ = np.maximum(np.broadcast_to(var / C, (C, K)), floor
+                       ).astype(np.float32)
+    pis = np.full((C, K), 1.0 / C, np.float32)
+    ll = np.zeros(K)
+    for _ in range(iters):
+        logp = (-0.5 * (x[None] - mus[:, None]) ** 2 / vars_[:, None]
+                - 0.5 * np.log(2 * np.pi * vars_[:, None])
+                + np.log(np.maximum(pis[:, None], 1e-30)))    # (C, N, K)
+        mx = logp.max(axis=0)
+        r = np.exp(logp - mx)
+        tot = np.maximum(r.sum(axis=0), 1e-30)
+        # select-then-sum (no multiply): a masked sample's -inf/NaN term must
+        # not poison the channel's log-likelihood via inf * 0
+        ll = np.where(m > 0, (mx + np.log(tot)).astype(np.float64),
+                      0.0).sum(axis=0)
+        r = r / tot * m[None]
+        nk = np.maximum(r.sum(axis=1), 1e-12)                 # (C, K)
+        mus = (r * x[None]).sum(axis=1) / nk
+        vars_ = np.maximum((r * x[None] ** 2).sum(axis=1) / nk - mus ** 2,
+                           floor)
+        pis = nk / n[None, :]
+    order = np.argsort(mus, axis=0)
+    take = lambda a: np.take_along_axis(a, order, axis=0)
+    return take(pis), take(mus), np.sqrt(take(vars_)), ll
+
+
+def score_families(rates: np.ndarray, works: np.ndarray, mask: np.ndarray,
+                   min_obs: int = 8, max_rho: float = 8.0,
+                   families=AUTO_FAMILIES) -> Optional[FamilyScores]:
+    """BIC-score the candidate completion-time families on observed history.
+
+    ``rates``/``works``/``mask``: (N, K) windows of normalized per-unit-work
+    rates, the work shares they were observed under, and observation
+    validity. Models, each fit per channel by (closed-form or EM) maximum
+    likelihood, BIC = k ln n - 2 ln L summed over scoreable channels:
+
+    * ``normal``     rate ~ N(mu, sigma^2)                       (k = 2)
+    * ``lognormal``  log rate ~ N(m, s^2)                        (k = 2)
+    * ``drift``      rate ~ N(mu (1 + rho w / 2), sigma^2)       (k = 3)
+      — linear regression of rate on work share: under within-work straggle
+      the *normalized* rate still rises with the share (T/w = r + rho mu w/2),
+      which is exactly the signature an iid fit cannot see.
+    * ``empirical``  rate ~ GMM_3                                (k = 8)
+
+    Returns None when no channel has ``min_obs`` valid observations yet (the
+    caller should keep its current family). Channels below ``min_obs`` are
+    excluded from every family's total so the comparison stays apples-to-
+    apples.
+    """
+    rates = np.asarray(rates, np.float64)
+    works = np.asarray(works, np.float64)
+    mask = np.asarray(mask, np.float64)
+    n_all = mask.sum(axis=0)
+    ok = n_all >= min_obs
+    if not ok.any():
+        return None
+    m = mask * ok[None, :]
+    n, mean, var = _masked_moments(rates, m)
+    spread2 = np.maximum(var, (np.abs(mean) * 1e-6 + 1e-12) ** 2)
+    floor = spread2 * 1e-8
+    logn = np.log(np.maximum(n, 2.0))
+    bics: Dict[str, float] = {}
+
+    def total(k_dof, ll):
+        return float(((k_dof * logn - 2.0 * ll) * ok).sum())
+
+    if "normal" in families:
+        bics["normal"] = total(_FAMILY_DOF["normal"],
+                               _gauss_loglik(n, var, floor))
+
+    if "lognormal" in families:
+        pos = rates > 0
+        logs = np.log(np.where(pos, rates, 1.0))
+        m_ln = m * pos
+        n_ln, _, var_ln = _masked_moments(logs, m_ln)
+        # the Jacobian term sum(-log r) converts log-space likelihood back to
+        # rate space; nonpositive rates are impossible under a lognormal, so
+        # each one costs a large fixed log-likelihood deficit. The variance
+        # floor must be LOG-space (scale-free: var_ln ~ CoV^2 regardless of
+        # rate magnitude) — the rate-space floor would clamp var_ln whenever
+        # rates are numerically large and silently disqualify the family.
+        floor_ln = np.full_like(var_ln, 1e-10)
+        jac = (-logs * m_ln).sum(axis=0)
+        ll_ln = (_gauss_loglik(n_ln, var_ln, floor_ln) + jac
+                 - 1e3 * np.maximum(n - n_ln, 0.0))
+        bics["lognormal"] = total(_FAMILY_DOF["lognormal"], ll_ln)
+
+    rho_hat = np.zeros(rates.shape[1])
+    if "drift" in families:
+        # per-channel least squares rate = a + b w; rho = 2 b / a, clipped to
+        # the physical (nonnegative) range — a negative slope refits as b=0,
+        # collapsing to the normal model (BIC then penalizes the extra dof)
+        nw = n
+        sw = (works * m).sum(axis=0)
+        sww = (works * works * m).sum(axis=0)
+        sr = (rates * m).sum(axis=0)
+        swr = (works * rates * m).sum(axis=0)
+        det = nw * sww - sw * sw
+        det_ok = det > 1e-12 * np.maximum(nw * sww, 1e-300)
+        safe_det = np.where(det_ok, det, 1.0)
+        b = np.where(det_ok, (nw * swr - sw * sr) / safe_det, 0.0)
+        b = np.maximum(b, 0.0)
+        a = np.where(nw > 0, (sr - b * sw) / np.maximum(nw, 1.0), 1.0)
+        resid = rates - (a[None, :] + b[None, :] * works)
+        var_d = ((resid ** 2) * m).sum(axis=0) / np.maximum(nw, 1.0)
+        rho_hat = np.clip(np.where(a > 1e-12, 2.0 * b / np.maximum(a, 1e-12),
+                                   0.0), 0.0, max_rho)
+        bics["drift"] = total(_FAMILY_DOF["drift"],
+                              _gauss_loglik(nw, var_d, floor))
+
+    gmm = None
+    if "empirical" in families:
+        from .distributions import EMP_COMPONENTS
+        Wg, Mg, Sg, ll_g = _em_batch(rates, m, C=EMP_COMPONENTS)
+        # channels below min_obs are excluded from the BIC totals, but their
+        # mixture columns still reach the solver if empirical wins — give
+        # them a single pooled-fleet component instead of a starved EM fit
+        # (an idle channel must not look like a point mass at 0)
+        if not ok.all():
+            pool_n = max(float((mask * ok[None, :]).sum()), 1.0)
+            pool_mean = float((rates * mask * ok[None, :]).sum() / pool_n)
+            pool_var = float((((rates - pool_mean) ** 2) * mask
+                              * ok[None, :]).sum() / pool_n)
+            pool_sd = max(np.sqrt(pool_var), abs(pool_mean) * 1e-3, 1e-6)
+            bad = ~ok
+            Wg[:, bad] = np.array([[1.0]] + [[0.0]] * (EMP_COMPONENTS - 1))
+            Mg[:, bad] = pool_mean
+            Sg[:, bad] = pool_sd
+        gmm = (Wg, Mg, Sg)
+        k_gmm = 3.0 * EMP_COMPONENTS - 1.0
+        bics["empirical"] = total(k_gmm, ll_g)
+
+    winner = min(bics, key=bics.get)
+    return FamilyScores(bics=bics, winner=winner, n_channels=int(ok.sum()),
+                        rho=rho_hat, gmm=gmm)
+
+
+def fit_selected_family(scores: FamilyScores, winner: Optional[str] = None):
+    """Instantiate the ChannelFamily a scoring pass selected (no refitting)."""
+    from .distributions import Drift, Empirical, get_family
+
+    name = winner or scores.winner
+    if name == "drift":
+        return Drift(np.asarray(scores.rho, np.float32))
+    if name == "empirical":
+        Wg, Mg, Sg = scores.gmm
+        return Empirical(Wg, Mg, Sg)
+    return get_family(name)

@@ -81,8 +81,14 @@ __all__ = [
     "family_effective_moments",
     "family_cdf",
     "family_pdf_parts",
+    "family_adjoint_parts",
     "family_coeffs",
+    "family_param_coeffs",
     "family_accumulators",
+    "family_features",
+    "family_has_extra_grads",
+    "family_dreach",
+    "family_dreach_params",
     "family_sample",
     "ChannelFamily",
     "Normal",
@@ -305,14 +311,19 @@ def family_cdf(dist_id: str, t, w, mu, sigma, extra):
     return jnp.where(ok, raw, point_mass_cdf(t, m_eff))
 
 
-def family_pdf_parts(dist_id: str, t, w, mu, sigma, extra):
-    """Per-grid-point adjoint pieces: ``(cdf_raw, D, ok)``.
+def family_adjoint_parts(dist_id: str, t, w, mu, sigma, extra):
+    """Per-grid-point adjoint pieces: ``(cdf_raw, D, ok, z)``.
 
     ``cdf_raw`` is the un-substituted CDF (drives the clip/saturation gates),
     ``D`` the pdf-like numerator with ``dC/dw = D * (alpha + beta t)`` and
     ``dC/dt = D * (gamma0 + gamma1 t) / t`` for the per-channel constants
     from :func:`family_coeffs`, and ``ok`` the non-degenerate mask (False
     rows contribute no direct gradient — a point mass is flat a.e.).
+    ``z`` is the family's standardized score at each grid point — the third
+    basis feature the *parameter* adjoints of the lognormal family contract
+    against (``dz/dmu`` and ``dz/dsigma`` are affine in z, not in t, because
+    the shape parameter ``s_l`` itself moves with (mu, sigma)); families that
+    never use the z feature return zeros (empirical has no single z).
     """
     _check_dist(dist_id)
     ok = _family_ok(dist_id, w, mu, sigma, extra)
@@ -330,7 +341,7 @@ def family_pdf_parts(dist_id: str, t, w, mu, sigma, extra):
         m_d = mu * _drift_mean_scale(w, extra)
         z = (t - m_d) / jnp.where(ok, w * sigma, 1.0)
         D = phi(z)
-    else:  # empirical: D = sum_c pi_c phi(z_c) / s_c
+    else:  # empirical: D = sum_c pi_c phi(z_c) / s_c; no single z score
         C = EMP_COMPONENTS
         D = 0.0
         for c in range(C):
@@ -339,6 +350,13 @@ def family_pdf_parts(dist_id: str, t, w, mu, sigma, extra):
             z_c = (t - w * m_c) / jnp.where(c_ok, w * s_c, 1.0)
             D = D + jnp.where(c_ok, pi_c / jnp.where(c_ok, s_c, 1.0), 0.0) \
                 * phi(z_c)
+        z = jnp.zeros_like(D)
+    return cdf_raw, D, ok, z
+
+
+def family_pdf_parts(dist_id: str, t, w, mu, sigma, extra):
+    """Back-compat wrapper over :func:`family_adjoint_parts` without ``z``."""
+    cdf_raw, D, ok, _ = family_adjoint_parts(dist_id, t, w, mu, sigma, extra)
     return cdf_raw, D, ok
 
 
@@ -390,22 +408,136 @@ def family_coeffs(dist_id: str, w, mu, sigma, extra):
 
 
 def family_accumulators(dist_id: str) -> Tuple[bool, bool]:
-    """Which per-channel accumulator pairs the fused adjoint needs.
+    """Which per-channel accumulator pairs the W-only fused adjoint needs.
 
     Returns ``(use_p0, use_p1)``: P0/Pv0 contract the t-free (alpha, gamma0)
     coefficients, P1/Pv1 the t-weighted (beta, gamma1) ones. Pure scale
     families (normal, empirical) and drift keep P1; lognormal's log-space
     z-score is t-free in dw and needs P0 instead; drift's affine dz/dw needs
     both — 4 live (block_f, K) accumulators instead of 2, which is why the
-    family is part of the autotune working-set model and cache key.
+    family is part of the autotune working-set model and cache key. The
+    full-parameter adjoint needs the wider :func:`family_features` basis.
+    """
+    use_1, use_t, _ = family_features(dist_id, params=False)
+    return use_1, use_t
+
+
+def family_features(dist_id: str, params: bool = False
+                    ) -> Tuple[bool, bool, bool]:
+    """Accumulator basis the fused adjoint contracts against.
+
+    Returns ``(use_1, use_t, use_z)``: every live feature f costs a
+    ``(block_f, K)`` accumulator pair (``Pf`` for the mu cotangent, ``Pvf``
+    for the fused var cotangent). With ``params=False`` (W-gradients only —
+    the PGD path) this is the legacy :func:`family_accumulators` set; with
+    ``params=True`` the mus/sigmas/extra adjoints widen the basis:
+
+    * ``normal``/``drift``: dz/dmu is t-free and dz/dsigma = -z/sigma expands
+      to an affine-in-t form, so the {1, t} basis covers every parameter.
+    * ``lognormal``: the moment-matched shape ``s_l(mu, sigma)`` makes
+      dz/dmu and dz/dsigma affine in **z** itself (not t) — the z feature
+      joins the basis, and that family alone contracts Pz/Pvz.
+    * ``empirical``: the channel's (mu, sigma) never enter the mixture CDF —
+      no parameter adjoints, the {t} basis stays.
     """
     _check_dist(dist_id)
+    if not params:
+        return {
+            "normal": (False, True, False),
+            "lognormal": (True, False, False),
+            "drift": (True, True, False),
+            "empirical": (False, True, False),
+        }[dist_id]
     return {
-        "normal": (False, True),
-        "lognormal": (True, False),
-        "drift": (True, True),
-        "empirical": (False, True),
+        "normal": (True, True, False),
+        "lognormal": (True, False, True),
+        "drift": (True, True, False),
+        "empirical": (False, True, False),
     }[dist_id]
+
+
+def family_has_extra_grads(dist_id: str) -> bool:
+    """Whether the family's ``extra`` row 0 carries a differentiable shape
+    parameter (drift's per-channel ``rho``). The empirical mixture's fitted
+    parameters are solve constants by contract (re-fit, not descended)."""
+    _check_dist(dist_id)
+    return dist_id == "drift"
+
+
+def family_param_coeffs(dist_id: str, w, mu, sigma, extra):
+    """Per-channel adjoint constants for the *channel-statistic* parameters.
+
+    Returns ``(c_mu, c_sigma, c_rho)``, each a triple ``(a, b, c)`` of
+    per-channel coefficient arrays against the (1, t, z) feature basis of
+    :func:`family_features`:
+
+        d log C_k / d theta_k |_t = g_jk * (a_k + b_k t + c_k z_jk)
+
+    with ``g_jk`` the same gated inverse-Mills ratio the W-adjoint uses, and
+    ``z_jk`` the standardized score from :func:`family_adjoint_parts`.
+    ``c_rho`` is the coefficient triple for ``extra`` row 0 and is all-zero
+    unless :func:`family_has_extra_grads` (drift). Degenerate (point-mass)
+    channels get all-zero constants, exactly like :func:`family_coeffs` —
+    they still receive the moving-grid term through
+    :func:`family_dreach_params` when they set the integration end.
+
+    Derivations (z-scores as in :func:`family_adjoint_parts`):
+
+    * normal, z = (t - w mu)/(w sigma):
+        dz/dmu    = -1/sigma                              -> (a, 0, 0)
+        dz/dsigma = -z/sigma = mu/sigma^2 - t/(w sigma^2) -> (a, b, 0)
+    * lognormal, z = (log t - log w - base)/s_l with v = (sigma/mu)^2,
+      s_l^2 = log(1+v), base = log mu - s_l^2/2:
+        ds_l/dmu    = -v/(mu (1+v) s_l),  dbase/dmu    = 1/mu + v/(mu (1+v))
+        ds_l/dsigma =  v/(sigma (1+v) s_l), dbase/dsigma = -v/(sigma (1+v))
+        dz/dtheta = -(dbase/dtheta)/s_l - z (ds_l/dtheta)/s_l -> (a, 0, c)
+    * drift, z = (t - mu g(w))/(w sigma), g = w(1 + rho w/2):
+        dz/dmu    = -g/(w sigma)                          -> (a, 0, 0)
+        dz/dsigma = -z/sigma = mu g/(w sigma^2) - t/(w sigma^2) -> (a, b, 0)
+        dz/drho   = -mu w/(2 sigma)                       -> (a, 0, 0)
+    * empirical: all zero (mus/sigmas unused; mixture params are constants).
+    """
+    _check_dist(dist_id)
+    ok = _family_ok(dist_id, w, mu, sigma, extra)
+    zero = jnp.zeros_like(w * mu)
+
+    def guard(x):
+        return jnp.where(ok, x, 0.0)
+
+    z3 = (zero, zero, zero)
+    if dist_id == "normal":
+        inv_s = 1.0 / jnp.where(ok, sigma, 1.0)
+        inv_ws2 = 1.0 / jnp.where(ok, w * sigma * sigma, 1.0)
+        c_mu = (guard(-inv_s), zero, zero)
+        c_sigma = (guard(mu * inv_s * inv_s), guard(-inv_ws2), zero)
+        return c_mu, c_sigma, z3
+    if dist_id == "lognormal":
+        mu_ok = mu > 0.0
+        safe_mu = jnp.where(mu_ok, mu, 1.0)
+        safe_sg = jnp.where(sigma > 0.0, sigma, 1.0)
+        v = jnp.square(sigma / safe_mu)
+        s_l, _ = _lognormal_shape(mu, sigma)
+        s_safe = jnp.where(ok, s_l, 1.0)
+        r = v / (1.0 + v)                      # = d s_l^2 scale factor
+        dbase_dmu = (1.0 + r) / safe_mu
+        dsl_dmu = -r / (safe_mu * s_safe)
+        dbase_dsg = -r / safe_sg
+        dsl_dsg = r / (safe_sg * s_safe)
+        c_mu = (guard(-dbase_dmu / s_safe), zero,
+                guard(-dsl_dmu / s_safe))
+        c_sigma = (guard(-dbase_dsg / s_safe), zero,
+                   guard(-dsl_dsg / s_safe))
+        return c_mu, c_sigma, z3
+    if dist_id == "drift":
+        g = _drift_mean_scale(w, extra)
+        inv_ws = 1.0 / jnp.where(ok, w * sigma, 1.0)
+        inv_ws2 = 1.0 / jnp.where(ok, w * sigma * sigma, 1.0)
+        c_mu = (guard(-g * inv_ws), zero, zero)
+        c_sigma = (guard(mu * g * inv_ws2), guard(-inv_ws2), zero)
+        c_rho = (guard(-0.5 * mu * w / jnp.where(ok, sigma, 1.0)), zero, zero)
+        return c_mu, c_sigma, c_rho
+    # empirical: the mixture CDF never reads (mu, sigma); extra is a constant
+    return z3, z3, z3
 
 
 def family_dreach(dist_id: str, w, mu, sigma, extra, z: float):
@@ -418,6 +550,30 @@ def family_dreach(dist_id: str, w, mu, sigma, extra, z: float):
         return mu * (1.0 + rho * w) + z * sigma
     m_mix, s_mix = _mixture_stats(extra)
     return (m_mix + z * s_mix) * jnp.ones_like(w)
+
+
+def family_dreach_params(dist_id: str, w, mu, sigma, extra, z: float):
+    """``(d reach/dmu, d reach/dsigma, d reach/drho)`` per channel.
+
+    The parameter twin of :func:`family_dreach`: when a channel's statistic
+    moves, the integration end ``tmax = max_k reach_k`` moves with it on the
+    argmax channel, so every parameter adjoint carries the same moving-grid
+    term the W-adjoint does. ``reach = mean_eff + z * std_eff``:
+
+    * normal / lognormal: mean = w mu, std = w sigma -> (w, z w, 0)
+    * drift: mean = mu g(w) with g = w(1 + rho w/2), std = w sigma
+      -> (g(w), z w, mu w^2/2)
+    * empirical: the mixture stats ignore (mu, sigma) -> all zero.
+    """
+    _check_dist(dist_id)
+    ones = jnp.ones_like(w * mu)
+    zero = jnp.zeros_like(ones)
+    if dist_id in ("normal", "lognormal"):
+        return w * ones, z * w * ones, zero
+    if dist_id == "drift":
+        g = _drift_mean_scale(w, extra)
+        return g * ones, z * w * ones, 0.5 * mu * w * w * ones
+    return zero, zero, zero
 
 
 def family_sample(dist_id: str, rng: np.random.Generator, w, mu, sigma, extra,

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import distributions as dists
-from .normal import Phi, phi, safe_cdf
+from .distributions import Phi, phi, safe_cdf
 
 __all__ = [
     "joint_cdf",

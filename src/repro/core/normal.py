@@ -1,11 +1,26 @@
-"""Compat shim: the Normal-distribution primitives moved to
+"""DEPRECATED compat shim: the Normal-distribution primitives moved to
 ``repro.core.distributions`` when the channel completion-time model became a
-pluggable family (normal / lognormal / drift / empirical). Import from there;
-this module re-exports the original names so existing call sites keep working.
+pluggable family (normal / lognormal / drift / empirical).
+
+Importing this module emits a :class:`DeprecationWarning`; it will be removed
+once external callers have migrated. Every name here is a re-export —
+``from repro.core.distributions import ...`` (or ``from repro.core import
+...``) is the supported spelling, and no in-repo module imports this shim
+anymore.
 """
 from __future__ import annotations
 
-from .distributions import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.normal is deprecated: import these primitives from "
+    "repro.core.distributions (they moved when the completion-time model "
+    "became a pluggable ChannelFamily)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from .distributions import (  # noqa: F401,E402
     Phi,
     Phi_c,
     log_Phi,

@@ -30,10 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
-from .distributions import resolve_family
+from .distributions import resolve_family, scaled_channel_params
 from .frontier import frontier_2ch, select_on_frontier
 from .maxstat import clark_max_moments_seq, max_moments_quad_w
-from .normal import scaled_channel_params
 
 __all__ = [
     "PartitionDecision",
@@ -145,7 +144,9 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      key: Optional[jax.Array] = None, impl: str = "xla",
                      warm_start: Optional[np.ndarray] = None,
                      block_f: Optional[int] = None,
-                     family="normal") -> PartitionDecision:
+                     family="normal", risk_lam: float = 0.0,
+                     posterior=None,
+                     return_sensitivity: bool = False):
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
     Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
@@ -156,6 +157,22 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
     adjoints, no autodiff replay) under the requested ``impl``, and the final
     candidates are scored in a single batched ``frontier_moments`` launch.
     ``block_f=None`` defers the launch shape to ``kernels.autotune``.
+
+    Closed-loop extensions (the channel statistics are *estimates*):
+
+    * ``risk_lam > 0`` (needs ``posterior``, the balancer's ``NIGState``):
+      final candidates are scored by the risk-adjusted objective
+      ``mu + lam var + risk_lam * fragility(w)``, where fragility is the
+      delta-method sd of the predicted mean under the posterior's estimation
+      error (``core.sensitivity.fragility_batch`` — one extra fused
+      full-parameter launch over the finalists). This penalizes splits whose
+      optimum is fragile to estimation error: two near-tied candidates
+      resolve toward the one whose prediction survives the posterior moving.
+    * ``return_sensitivity=True``: returns ``(decision, report)`` where the
+      report is a ``core.sensitivity.PosteriorSensitivity`` at the chosen
+      split when ``posterior`` is given (closed-form d(moments)/d(m, kappa,
+      alpha, beta)), else a ``MomentSensitivity`` (d(moments)/d(mus, sigmas,
+      rho)).
     """
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
@@ -178,15 +195,34 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                                        impl=impl, block_f=block_f,
                                        family=(dist_id, extra))
     score = np.asarray(mu_c) + lam * np.asarray(var_c)
+    method = "pgd-simplex"
+    if risk_lam > 0.0 and posterior is not None:
+        from .sensitivity import fragility_batch  # lazy: avoids import cycle
+
+        frag = fragility_batch(Wf, mus, sigmas, posterior,
+                               family=(dist_id, extra), num_t=num_t,
+                               impl=impl, block_f=block_f)
+        score = score + risk_lam * frag
+        method = "pgd-simplex-risk"
     best_w = Wf[int(np.argmin(score))]
     # report moments at oracle resolution (one extra single-row launch)
     mu_f, var_f = ops.frontier_moments(best_w[None, :], mus, sigmas,
                                        num_t=max(num_t, 2048), impl=impl,
                                        block_f=block_f,
                                        family=(dist_id, extra))
-    return PartitionDecision(weights=np.asarray(best_w, np.float64),
-                             mu=float(mu_f[0]), var=float(var_f[0]),
-                             method="pgd-simplex")
+    decision = PartitionDecision(weights=np.asarray(best_w, np.float64),
+                                 mu=float(mu_f[0]), var=float(var_f[0]),
+                                 method=method)
+    if not return_sensitivity:
+        return decision
+    from .sensitivity import moment_sensitivity, posterior_sensitivity
+
+    sens = moment_sensitivity(decision.weights, mus, sigmas,
+                              family=(dist_id, extra), num_t=num_t,
+                              impl=impl, block_f=block_f)
+    report = (posterior_sensitivity(sens, posterior)
+              if posterior is not None else sens)
+    return decision, report
 
 
 def predict_moments(w, mus, sigmas, exact: bool = True, num_t: int = 2048,

@@ -1,0 +1,188 @@
+"""Posterior-sensitivity analysis: differentiate the frontier solve through
+the *learned* channel statistics (the Bayesian loop of arXiv:1511.00613).
+
+The solver consumes posterior point estimates ``(mu_hat, sigma_hat)`` (and,
+for the drift family, per-channel ``rho``). Those estimates carry error, and
+a split that is optimal at the point estimates can be fragile: a small move
+of one channel's statistics can swing the predicted join time far more than
+the optimality gap between candidate splits. This module closes the loop:
+
+1. :func:`moment_sensitivity` — the solve's analytic parameter adjoints
+   ``d(mu, var)/d(mus, sigmas, rho)`` at a split, straight from the fused
+   full-parameter kernel launch (``ops.frontier_moments_with_grads`` with
+   ``param_grads=True``; one launch on every impl).
+2. :func:`posterior_sensitivity` — chains those adjoints through the NIG
+   posterior parameterization ``(m, kappa, alpha, beta)`` of ``core.bayes``:
+   closed-form ``d(completion moments)/d(posterior params)``.
+3. :func:`estimation_fragility` — contracts the adjoints against the
+   posterior standard errors (:func:`core.bayes.nig_estimate_ses`): the
+   first-order (delta-method) sd of the predicted completion mean under
+   estimation error. This is the *risk-adjusted objective*'s penalty term
+   (``optimize_weights(..., risk_lam=...)``) and what the balancer's
+   adaptive refresh sizes its cadence by — fragile solves refresh often,
+   firm ones stretch.
+
+Chain rule used by :func:`posterior_sensitivity` (see ``bayes.py``):
+
+    mu_hat      = m                                  -> d mu_hat/dm = 1
+    sigma_hat^2 = (beta/(alpha-1)) (1 + 1/kappa)
+      d sigma_hat/dkappa = -(beta/(alpha-1)) / kappa^2 / (2 sigma_hat)
+      d sigma_hat/dalpha = -sigma_hat^2/(alpha-1)    / (2 sigma_hat)
+      d sigma_hat/dbeta  =  sigma_hat^2/beta         / (2 sigma_hat)
+
+All arrays are host numpy (this sits on the scheduler thread, next to the
+balancer); the kernel launch inside is the only device work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..kernels import ops
+from .bayes import NIGState, nig_estimate_ses
+
+__all__ = [
+    "MomentSensitivity",
+    "PosteriorSensitivity",
+    "moment_sensitivity",
+    "posterior_sensitivity",
+    "estimation_fragility",
+    "fragility_batch",
+]
+
+
+@dataclass(frozen=True)
+class MomentSensitivity:
+    """Adjoints of the joint-completion moments at one split.
+
+    Everything is (K,) except the scalars; ``d*_dextra`` is the cotangent of
+    the family's ``extra`` row 0 (drift's per-channel rho — zeros for
+    families without a differentiable shape parameter).
+    """
+
+    weights: np.ndarray
+    mu: float
+    var: float
+    dmu_dw: np.ndarray
+    dvar_dw: np.ndarray
+    dmu_dmus: np.ndarray
+    dvar_dmus: np.ndarray
+    dmu_dsigmas: np.ndarray
+    dvar_dsigmas: np.ndarray
+    dmu_dextra: np.ndarray
+    dvar_dextra: np.ndarray
+
+
+@dataclass(frozen=True)
+class PosteriorSensitivity:
+    """``d(completion moments)/d(NIG posterior params)`` plus the fragility.
+
+    The closed-form Bayesian loop: how the solve's output moves per unit
+    change of each channel's posterior ``(m, kappa, alpha, beta)``, and the
+    delta-method sd of the predicted mean under the current estimation
+    error (``fragility``, in the same time units as ``mu``).
+    """
+
+    sens: MomentSensitivity
+    dmu_dm: np.ndarray
+    dmu_dkappa: np.ndarray
+    dmu_dalpha: np.ndarray
+    dmu_dbeta: np.ndarray
+    dvar_dm: np.ndarray
+    dvar_dkappa: np.ndarray
+    dvar_dalpha: np.ndarray
+    dvar_dbeta: np.ndarray
+    fragility: float
+
+    @property
+    def relative_fragility(self) -> float:
+        """Fragility as a fraction of the predicted mean (refresh sizing)."""
+        return float(self.fragility / max(self.sens.mu, 1e-12))
+
+
+def moment_sensitivity(w, mus, sigmas, family="normal", num_t: int = 1024,
+                       impl: str = "xla", block_f: Optional[int] = None,
+                       z: float = 10.0) -> MomentSensitivity:
+    """Full parameter adjoints of the solve at split ``w`` (one launch)."""
+    w = np.asarray(w, np.float64)
+    outs = ops.frontier_moments_with_grads(
+        w[None, :].astype(np.float32), mus, sigmas, num_t=num_t, impl=impl,
+        block_f=block_f, z=z, family=family, param_grads=True)
+    (mu, var, dw, dvw, dm, dvm, ds, dvs, de, dve) = \
+        (np.asarray(o, np.float64) for o in outs)
+    return MomentSensitivity(
+        weights=w, mu=float(mu[0]), var=float(var[0]),
+        dmu_dw=dw[0], dvar_dw=dvw[0], dmu_dmus=dm[0], dvar_dmus=dvm[0],
+        dmu_dsigmas=ds[0], dvar_dsigmas=dvs[0],
+        dmu_dextra=de[0], dvar_dextra=dve[0])
+
+
+def _nig_chain(nig: NIGState):
+    """d(mu_hat, sigma_hat)/d(m, kappa, alpha, beta), each (K,)."""
+    m = np.asarray(nig.m, np.float64)
+    kappa = np.maximum(np.asarray(nig.kappa, np.float64), 1e-6)
+    alpha = np.asarray(nig.alpha, np.float64)
+    beta = np.asarray(nig.beta, np.float64)
+    am1 = np.maximum(alpha - 1.0, 1e-3)
+    ev = beta / am1
+    sigma2 = ev * (1.0 + 1.0 / kappa)
+    sigma_hat = np.sqrt(np.maximum(sigma2, 1e-24))
+    inv2s = 1.0 / (2.0 * sigma_hat)
+    dsig_dkappa = -(ev / (kappa * kappa)) * inv2s
+    dsig_dalpha = -(sigma2 / am1) * inv2s
+    dsig_dbeta = (sigma2 / np.maximum(beta, 1e-12)) * inv2s
+    return dsig_dkappa, dsig_dalpha, dsig_dbeta
+
+
+def posterior_sensitivity(sens: MomentSensitivity,
+                          nig: NIGState) -> PosteriorSensitivity:
+    """Chain the solve adjoints through the NIG posterior parameters."""
+    dsig_dkappa, dsig_dalpha, dsig_dbeta = _nig_chain(nig)
+    return PosteriorSensitivity(
+        sens=sens,
+        # mu_hat = m exactly, so the m-cotangent IS the mus adjoint
+        dmu_dm=sens.dmu_dmus.copy(),
+        dmu_dkappa=sens.dmu_dsigmas * dsig_dkappa,
+        dmu_dalpha=sens.dmu_dsigmas * dsig_dalpha,
+        dmu_dbeta=sens.dmu_dsigmas * dsig_dbeta,
+        dvar_dm=sens.dvar_dmus.copy(),
+        dvar_dkappa=sens.dvar_dsigmas * dsig_dkappa,
+        dvar_dalpha=sens.dvar_dsigmas * dsig_dalpha,
+        dvar_dbeta=sens.dvar_dsigmas * dsig_dbeta,
+        fragility=estimation_fragility(sens, nig))
+
+
+def estimation_fragility(sens: MomentSensitivity, nig: NIGState) -> float:
+    """Delta-method sd of the predicted completion mean under estimation
+    error: ``sqrt(sum_k (dmu/dmu_k se_mu_k)^2 + (dmu/dsigma_k se_sig_k)^2)``.
+
+    Channel posteriors are independent, so the first-order variance is the
+    sum of squared per-channel contributions. Units: time (same as mu), so
+    ``mu + risk_lam * fragility`` is a coherent risk-adjusted objective.
+    """
+    se_mu, se_sigma = (np.asarray(s, np.float64)
+                       for s in nig_estimate_ses(nig))
+    return float(np.sqrt(
+        np.sum((sens.dmu_dmus * se_mu) ** 2)
+        + np.sum((sens.dmu_dsigmas * se_sigma) ** 2)))
+
+
+def fragility_batch(W, mus, sigmas, nig: NIGState, family="normal",
+                    num_t: int = 1024, impl: str = "xla",
+                    block_f: Optional[int] = None) -> np.ndarray:
+    """Fragility of every candidate row of ``W`` (F, K) in one fused launch.
+
+    The batched form :func:`estimation_fragility` — what the risk-adjusted
+    candidate scoring inside ``optimize_weights`` consumes.
+    """
+    outs = ops.frontier_moments_with_grads(
+        W, mus, sigmas, num_t=num_t, impl=impl, block_f=block_f,
+        family=family, param_grads=True)
+    dmu_m = np.asarray(outs[4], np.float64)       # (F, K)
+    dmu_s = np.asarray(outs[6], np.float64)
+    se_mu, se_sigma = (np.asarray(s, np.float64)
+                       for s in nig_estimate_ses(nig))
+    return np.sqrt(((dmu_m * se_mu) ** 2).sum(axis=1)
+                   + ((dmu_s * se_sigma) ** 2).sum(axis=1))

@@ -26,14 +26,21 @@ The completion-time family is part of the key AND the model: the fused
 adjoint carries two per-channel accumulator pairs for the ``drift`` family
 (vs one for the scale-like families), and the ``empirical`` mixture streams
 3C extra CDF tiles per channel — different working sets, different safe
-block sizes. Cache keys are versioned (``v2:``); legacy un-versioned keys
-from the pre-family schema are migrated on load as normal-family entries, so
-an existing JSON cache survives the schema bump.
+block sizes. So is the launch *mode*: ``fwd`` (forward moments only),
+``grad`` (fused W-adjoints — the PGD tick) and ``pgrad`` (full-parameter
+adjoints for the estimation loop: up to six accumulator pairs plus six more
+(block_f, K) output tiles, the largest working set of the three). Cache keys
+are versioned (``v3:``); v2 (family-aware, fused-flag) keys and legacy
+un-versioned keys from the pre-family schema are migrated on load — v2
+``fused0/fused1`` map to ``fwd``/``grad`` (``pgrad`` shapes never existed
+before v3), un-versioned keys additionally pick up the normal family — so an
+existing JSON cache survives both schema bumps.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -49,7 +56,7 @@ _VMEM_BUDGET_BYTES = int(16 * 1024 * 1024 * 0.75)
 # VMEM — a much looser working-set ceiling (the (bf, T, K) intermediates)
 _XLA_BLOCK_BUDGET_BYTES = 1024 * 1024 * 1024
 
-_KEY_VERSION = "v2"  # v2: family-aware keys (un-versioned = legacy normal)
+_KEY_VERSION = "v3"  # v3: mode-aware keys (fwd | grad | pgrad)
 
 _CACHE: Dict[str, dict] = {}
 _JSON_LOADED: set = set()
@@ -61,25 +68,49 @@ def default_cache_path() -> str:
     return os.path.join(root, "experiments", "bench", "autotune_cache.json")
 
 
+def _mode(fused: bool, params: bool) -> str:
+    if not fused:
+        return "fwd"
+    return "pgrad" if params else "grad"
+
+
 def _key(F: int, K: int, num_t: int, backend: str, fused: bool,
-         dist_id: str = "normal") -> str:
+         dist_id: str = "normal", params: bool = False) -> str:
     return (f"{_KEY_VERSION}:{backend}:F{F}:K{K}:T{num_t}"
-            f":fused{int(bool(fused))}:fam{dist_id}")
+            f":mode{_mode(fused, params)}:fam{dist_id}")
+
+
+_V2_RE = re.compile(r"^v2:(?P<body>.*):fused(?P<fused>[01]):fam(?P<fam>\w+)$")
+_LEGACY_RE = re.compile(r"^(?P<body>[^:]+:F\d+:K\d+:T\d+):fused(?P<fused>[01])$")
 
 
 def _migrate_key(k: str) -> str:
-    """Lift a legacy (pre-family, un-versioned) key to the v2 schema."""
+    """Lift a v2 (fused-flag) or legacy (pre-family, un-versioned) key to v3.
+
+    v2 ``fused0``/``fused1`` become ``modefwd``/``modegrad`` (the pgrad mode
+    is new in v3, so no v2 entry can alias it); un-versioned legacy keys are
+    additionally normal-family.
+    """
     if k.startswith(f"{_KEY_VERSION}:"):
         return k
-    return f"{_KEY_VERSION}:{k}:famnormal"
+    m = _V2_RE.match(k)
+    if m:
+        mode = "grad" if m.group("fused") == "1" else "fwd"
+        return (f"{_KEY_VERSION}:{m.group('body')}:mode{mode}"
+                f":fam{m.group('fam')}")
+    m = _LEGACY_RE.match(k)
+    if m:
+        mode = "grad" if m.group("fused") == "1" else "fwd"
+        return f"{_KEY_VERSION}:{m.group('body')}:mode{mode}:famnormal"
+    return k  # unknown schema: keep verbatim (never collides with v3 keys)
 
 
-def _grad_acc_pairs(dist_id: str) -> int:
+def _grad_acc_pairs(dist_id: str, params: bool = False) -> int:
     # local import: distributions sits above kernels in the package DAG but
     # this module must stay importable before repro.core finishes init
-    from repro.core.distributions import family_accumulators
-    use_p0, use_p1 = family_accumulators(dist_id)
-    return int(use_p0) + int(use_p1)
+    from repro.core.distributions import family_features
+    use_1, use_t, use_z = family_features(dist_id, params=params)
+    return int(use_1) + int(use_t) + int(use_z)
 
 
 def _mix_tiles(dist_id: str) -> int:
@@ -89,7 +120,7 @@ def _mix_tiles(dist_id: str) -> int:
 
 
 def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
-               dist_id: str = "normal") -> int:
+               dist_id: str = "normal", params: bool = False) -> int:
     """Working-set model of one kernel program, in bytes (f32).
 
     Forward: W/means/stds (bf, K) tiles + ts/logF/surv/tsurv (bf, T) tiles.
@@ -98,37 +129,42 @@ def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
     moves both axes: ``drift`` carries FOUR accumulators (P0/P1/Pv0/Pv1)
     where the scale-like families carry two, and the ``empirical`` mixture
     holds C-1 extra per-component tiles live per channel step — which is why
-    the family is part of the autotune key.
+    the family is part of the autotune key. Full-parameter mode (``params``)
+    widens the basis again (lognormal's z feature: up to three accumulator
+    pairs, six live (bf, K) accumulators) and adds the six channel-statistic
+    gradient output tiles — the ``pgrad`` key mode.
     """
-    acc = 2 * _grad_acc_pairs(dist_id)        # accumulators + matching outputs
-    per_fk = (6 + acc) if fused else 3
+    acc = 2 * _grad_acc_pairs(dist_id, params)  # accumulators + grad outputs
+    per_fk = (6 + acc + (6 if params else 0)) if fused else 3
     per_ft = (6 if fused else 4) + _mix_tiles(dist_id)
     return 4 * block_f * (per_fk * num_k + per_ft * num_t)
 
 
 def _xla_block_bytes(block_f: int, num_k: int, num_t: int, fused: bool,
-                     dist_id: str = "normal") -> int:
+                     dist_id: str = "normal", params: bool = False) -> int:
     # the pure-jnp path materializes (bf, T, K) zscore/cdf/phi intermediates;
-    # the mixture family adds per-component copies of them
-    live = (5 if fused else 3) + _mix_tiles(dist_id)
+    # the mixture family adds per-component copies of them, the z-feature
+    # accumulators of full-parameter mode one more
+    live = (5 if fused else 3) + _mix_tiles(dist_id) + (1 if params else 0)
     return 4 * block_f * num_t * num_k * live
 
 
 def _fits(block_f: int, K: int, num_t: int, backend: str, fused: bool,
-          dist_id: str = "normal") -> bool:
+          dist_id: str = "normal", params: bool = False) -> bool:
     if backend == "xla":
-        return (_xla_block_bytes(block_f, K, num_t, fused, dist_id)
+        return (_xla_block_bytes(block_f, K, num_t, fused, dist_id, params)
                 <= _XLA_BLOCK_BUDGET_BYTES)
-    return vmem_bytes(block_f, K, num_t, fused, dist_id) <= _VMEM_BUDGET_BYTES
+    return (vmem_bytes(block_f, K, num_t, fused, dist_id, params)
+            <= _VMEM_BUDGET_BYTES)
 
 
 def pick_block_f(F: int, K: int, num_t: int, backend: str = "xla",
                  fused: bool = False,
                  candidates: Sequence[int] = BLOCK_F_CANDIDATES,
-                 dist_id: str = "normal") -> int:
+                 dist_id: str = "normal", params: bool = False) -> int:
     """Largest candidate block_f that fits the backend's budget model."""
     feasible = [bf for bf in candidates
-                if _fits(bf, K, num_t, backend, fused, dist_id)]
+                if _fits(bf, K, num_t, backend, fused, dist_id, params)]
     pick = max(feasible) if feasible else min(candidates)
     return max(min(pick, F), 1)
 
@@ -151,20 +187,22 @@ def _load_json(cache_path: str) -> None:
 
 def lookup(F: int, K: int, num_t: int, backend: str = "xla",
            fused: bool = False, cache_path: Optional[str] = None,
-           dist_id: str = "normal") -> int:
+           dist_id: str = "normal", params: bool = False) -> int:
     """block_f for a launch shape: in-process cache -> JSON cache -> model.
 
     This is what ``ops.frontier_moments`` consults when ``block_f`` is not
     explicitly passed. Never runs a timed sweep itself (deterministic and
     trace-safe); :func:`sweep` feeds better-than-model entries into the same
-    caches.
+    caches. ``params`` selects the full-parameter-adjoint (``pgrad``) launch
+    mode the estimation loop's custom VJP uses.
     """
     _load_json(cache_path or default_cache_path())
-    key = _key(F, K, num_t, backend, fused, dist_id)
+    key = _key(F, K, num_t, backend, fused, dist_id, params)
     hit = _CACHE.get(key)
     if hit is not None:
         return max(min(int(hit["block_f"]), F), 1)
-    bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id)
+    bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id,
+                      params=params)
     _CACHE[key] = {"block_f": bf, "source": "model"}
     return bf
 
@@ -172,12 +210,13 @@ def lookup(F: int, K: int, num_t: int, backend: str = "xla",
 def sweep(F: int, K: int, num_t: int, backend: str = "xla",
           fused: bool = False, repeats: int = 2, seed: int = 0,
           candidates: Sequence[int] = BLOCK_F_CANDIDATES,
-          cache_path: Optional[str] = None, dist_id: str = "normal") -> dict:
+          cache_path: Optional[str] = None, dist_id: str = "normal",
+          params: bool = False) -> dict:
     """Time the real kernel across feasible block_f values; cache the winner.
 
     Returns the winning entry ``{"block_f", "source": "sweep", "us", "timings"}``
     and persists it (in-process + JSON) under
-    ``(F, K, num_t, backend, fused, dist_id)``.
+    ``(F, K, num_t, backend, fused, dist_id, params)``.
     """
     import jax
     import numpy as np
@@ -200,7 +239,7 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
         family = dist_id
 
     feasible = [bf for bf in candidates
-                if _fits(bf, K, num_t, backend, fused, dist_id)]
+                if _fits(bf, K, num_t, backend, fused, dist_id, params)]
     if not feasible:
         feasible = [min(candidates)]
     timings = {}
@@ -209,7 +248,7 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
             if fused:
                 out = ops.frontier_moments_with_grads(
                     W, mus, sgs, num_t=num_t, impl=backend, block_f=bf,
-                    family=family)
+                    family=family, param_grads=params)
             else:
                 out = ops.frontier_moments(
                     W, mus, sgs, num_t=num_t, impl=backend, block_f=bf,
@@ -226,7 +265,7 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
     entry = {"block_f": int(best_bf), "source": "sweep",
              "us": float(timings[best_bf]),
              "timings": {str(k): float(v) for k, v in timings.items()}}
-    key = _key(F, K, num_t, backend, fused, dist_id)
+    key = _key(F, K, num_t, backend, fused, dist_id, params)
     _CACHE[key] = entry
     path = cache_path or default_cache_path()
     disk = {}

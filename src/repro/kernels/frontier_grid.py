@@ -67,6 +67,46 @@ the fixed-grid adjoints contract into per-channel sums
     dmu/dw_k  (fixed grid) = -dt (alpha_k P0_k + beta_k P1_k)
     dvar/dw_k (fixed grid) = -2 dt (alpha_k Pv0_k + beta_k Pv1_k)
 
+Parameter adjoints (the closed estimation loop)
+-----------------------------------------------
+
+The channel statistics are learned online, so the solve must also be
+differentiable in mu_k, sigma_k and the family extras (drift's rho_k). The
+SAME contraction covers them: for any per-channel parameter theta_k,
+
+    d log C_k / d theta_k |_t = g_jk * (a_k + b_k t + c_k z_jk)
+
+is affine in the widened feature basis {1, t, z} (family_param_coeffs):
+
+    normal      dz/dmu = -1/sigma                          {1}
+                dz/dsigma = mu/sigma^2 - t/(w sigma^2)     {1, t}
+    lognormal   dz/dtheta = -(dbase/dtheta)/s_l
+                            - z (ds_l/dtheta)/s_l          {1, z}
+    drift       dz/dmu = -g(w)/(w sigma)                   {1}
+                dz/dsigma = mu g/(w sigma^2) - t/(w s^2)   {1, t}
+                dz/drho = -mu w/(2 sigma)                  {1}
+    empirical   (mus/sigmas unused; mixture extras are solve constants)
+
+The z feature is lognormal-only: its moment-matched shape s_l(mu, sigma)
+moves with the statistics, so dz/dmu picks up a term proportional to z
+itself — which contracts against two more accumulators
+
+    Pz_k  = sum_j a_jk z_jk         Pvz_k = sum_j a_jk z_jk (t_j - mu)
+
+    dmu/dtheta_k  (fixed grid) = -dt (a_k P0 + b_k P1 + c_k Pz)_k
+    dvar/dtheta_k (fixed grid) = -2 dt (a_k Pv0 + b_k Pv1 + c_k Pvz)_k
+
+and every parameter also carries the moving-grid term below with
+dtmax/dtheta_a = dreach_a/dtheta (family_dreach_params: w for mu, z_span*w
+for sigma, mu w^2/2 for rho) on the argmax channel. So full-parameter mode
+(static ``param_grads=True``) is the same two-pass streaming kernel with at
+most SIX per-channel accumulators instead of four, six extra (block_f, K)
+output tiles, and an unchanged K-loop count — the accumulators are shared
+across w/mu/sigma/rho; only the epilogue contractions differ. The
+``empirical`` family's mixture parameters are deliberately NOT adjointed
+(re-fit from data each tick, never descended); its mus/sigmas cotangents
+are exactly zero because the mixture CDF never reads them.
+
 The Pv* accumulators fold the m2 and -2 mu dmu cotangents together per grid
 point — the same combination autodiff's backward makes — which avoids the
 catastrophic cancellation of accumulating them separately when var << mu^2.
@@ -206,15 +246,21 @@ def frontier_grid(W, mus, sigmas, extra=None, *, num_t: int = 1024,
 
 def _frontier_grad_kernel(w_ref, mu_ref, sg_ref, ex_ref,
                           mu_out_ref, var_out_ref, dmu_out_ref, dvar_out_ref,
-                          *, num_t: int, z: float, num_k: int, dist_id: str):
+                          *param_out_refs, num_t: int, z: float, num_k: int,
+                          dist_id: str, param_grads: bool):
     """Fused forward + analytic adjoint (see module docstring for the math).
 
     Pass 1 is the forward K-loop building the joint log-CDF; pass 2 streams K
     again, turning the shared (bf, T) joint-CDF tile into the per-channel
-    P*/Pv* accumulators — two pairs for drift, one pair otherwise (the
-    static ``dist_id`` fixes which, so unused accumulators never exist in the
-    compiled program). Grad accumulators live in the same VMEM tile as the
-    forward state — no (F, T, K) residuals ever leave the program.
+    P*/Pv* accumulator pairs — one per live feature in
+    ``distributions.family_features(dist_id, param_grads)``, so unused
+    accumulators never exist in the compiled program. Grad accumulators live
+    in the same VMEM tile as the forward state — no (F, T, K) residuals ever
+    leave the program. With ``param_grads`` the same two passes additionally
+    emit the mus/sigmas/extra-row-0 adjoints (six more (bf, K) outputs):
+    the parameter cotangents contract the SAME accumulators against
+    different per-channel constants, so full-parameter mode costs extra
+    epilogue arithmetic and output tiles, not a third K-loop.
     """
     w = w_ref[...]            # (bf, K)
     mus = mu_ref[...]         # (1, K)
@@ -251,34 +297,35 @@ def _frontier_grad_kernel(w_ref, mu_ref, sg_ref, ex_ref,
     wq = jnp.where((idx == 0) | (idx == num_t - 1), 0.5, 1.0)
     wF = wq * F_t                                            # (bf, T)
     tmu = ts - mu[:, None]                                   # (bf, T)
-    use_p0, use_p1 = dists.family_accumulators(dist_id)
+    use_1, use_t, use_z = dists.family_features(dist_id, params=param_grads)
 
     def grad_channel(kk, carry):
-        cdf_raw, D, ok = dists.family_pdf_parts(
+        cdf_raw, D, ok, zsc = dists.family_adjoint_parts(
             dist_id, ts, _slice_k(w, kk), _slice_k(mus, kk),
             _slice_k(sgs, kk), _slice_k(ex, kk))
         Cc = jnp.clip(cdf_raw, _CDF_FLOOR, 1.0)
         gate = jnp.where(cdf_raw >= 1.0, 0.5, 1.0) * (cdf_raw > _CDF_FLOOR) * ok
         a = wF * (gate * D / Cc)                             # (bf, T)
         updates = []
-        if use_p0:
+        if use_1:
             updates.append(jnp.sum(a, -1, keepdims=True))            # P0
             updates.append(jnp.sum(a * tmu, -1, keepdims=True))      # Pv0
-        if use_p1:
+        if use_t:
             updates.append(jnp.sum(a * ts, -1, keepdims=True))       # P1
             updates.append(jnp.sum(a * ts * tmu, -1, keepdims=True))  # Pv1
+        if use_z:
+            updates.append(jnp.sum(a * zsc, -1, keepdims=True))      # Pz
+            updates.append(jnp.sum(a * zsc * tmu, -1, keepdims=True))  # Pvz
         return tuple(jax.lax.dynamic_update_slice_in_dim(acc, upd, kk, axis=1)
                      for acc, upd in zip(carry, updates))
 
     zeros_fk = jnp.zeros_like(w)
-    n_acc = 2 * (int(use_p0) + int(use_p1))
-    accs = jax.lax.fori_loop(0, num_k, grad_channel, (zeros_fk,) * n_acc)
-    if use_p0 and use_p1:
-        P0, Pv0, P1, Pv1 = accs
-    elif use_p0:
-        (P0, Pv0), (P1, Pv1) = accs, (0.0, 0.0)
-    else:
-        (P0, Pv0), (P1, Pv1) = (0.0, 0.0), accs
+    n_acc = 2 * (int(use_1) + int(use_t) + int(use_z))
+    accs = list(jax.lax.fori_loop(0, num_k, grad_channel,
+                                  (zeros_fk,) * n_acc))
+    P0, Pv0 = (accs.pop(0), accs.pop(0)) if use_1 else (0.0, 0.0)
+    P1, Pv1 = (accs.pop(0), accs.pop(0)) if use_t else (0.0, 0.0)
+    Pz, Pvz = (accs.pop(0), accs.pop(0)) if use_z else (0.0, 0.0)
 
     # epilogue: combine fixed-grid and moving-grid (tmax) terms with the
     # family's per-channel constants — module docstring "Differentiating the
@@ -290,29 +337,59 @@ def _frontier_grad_kernel(w_ref, mu_ref, sg_ref, ex_ref,
     b_var = 2.0 * (var_raw
                    - dt * jnp.sum(gamma0 * Pv0 + gamma1 * Pv1, -1)) / tmx
     ind = (reach == amax).astype(jnp.float32)
-    dreach = dists.family_dreach(dist_id, w, mus, sgs, ex, z)
-    gvec = (dreach * ind / jnp.sum(ind, -1, keepdims=True)
-            * (amax > 1e-12).astype(jnp.float32))
-    dmu = -dtc * (alpha * P0 + beta * P1) + b_mu[:, None] * gvec
-    dvar = jnp.where((var_raw > 0.0)[:, None],
-                     -2.0 * dtc * (alpha * Pv0 + beta * Pv1)
-                     + b_var[:, None] * gvec, 0.0)
+    tie = (ind / jnp.sum(ind, -1, keepdims=True)
+           * (amax > 1e-12).astype(jnp.float32))
+    var_pos = (var_raw > 0.0)[:, None]
+
+    def contract(c1, ct, cz, dreach):
+        gvec = dreach * tie
+        dmu_th = (-dtc * (c1 * P0 + ct * P1 + cz * Pz)
+                  + b_mu[:, None] * gvec)
+        dvar_th = jnp.where(
+            var_pos,
+            -2.0 * dtc * (c1 * Pv0 + ct * Pv1 + cz * Pvz)
+            + b_var[:, None] * gvec, 0.0)
+        return dmu_th, dvar_th
+
+    dreach_w = dists.family_dreach(dist_id, w, mus, sgs, ex, z)
+    dmu, dvar = contract(alpha, beta, zeros_fk, dreach_w)
     dmu_out_ref[...] = dmu
     dvar_out_ref[...] = dvar
+    if not param_grads:
+        return
+    (dmuM_ref, dvarM_ref, dmuS_ref, dvarS_ref, dmuE_ref, dvarE_ref) = \
+        param_out_refs
+    c_mu, c_sigma, c_rho = dists.family_param_coeffs(dist_id, w, mus, sgs, ex)
+    dr_mu, dr_sigma, dr_rho = dists.family_dreach_params(
+        dist_id, w, mus, sgs, ex, z)
+    dmuM_ref[...], dvarM_ref[...] = contract(*c_mu, dr_mu)
+    dmuS_ref[...], dvarS_ref[...] = contract(*c_sigma, dr_sigma)
+    if dists.family_has_extra_grads(dist_id):
+        dmuE_ref[...], dvarE_ref[...] = contract(*c_rho, dr_rho)
+    else:
+        dmuE_ref[...] = zeros_fk
+        dvarE_ref[...] = zeros_fk
 
 
 @functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f",
-                                             "interpret", "dist_id"))
+                                             "interpret", "dist_id",
+                                             "param_grads"))
 def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
                              z: float = 10.0, block_f: int = 64,
                              interpret: bool = False,
-                             dist_id: str = "normal"):
+                             dist_id: str = "normal",
+                             param_grads: bool = False):
     """Fused ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W: (F, K).
 
     One launch returns the moments AND their analytic adjoints w.r.t. every
     split weight (matching ``ref.frontier_grid_with_grads_ref``) for the
-    family statically selected by ``dist_id``. F must be divisible by
-    block_f (ops.py pads with copies of row 0 otherwise).
+    family statically selected by ``dist_id``. With ``param_grads=True`` the
+    same single launch additionally emits the channel-statistic adjoints —
+    ``(dmu_dmus, dvar_dmus, dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)``,
+    all (F, K), ``d*_dex`` being extra row 0 (drift's rho; zeros for families
+    without differentiable extra) — the full-parameter mode the estimation
+    loop's custom VJP rides. F must be divisible by block_f (ops.py pads
+    with copies of row 0 otherwise).
     """
     F, K = W.shape
     block_f = min(block_f, F)
@@ -324,7 +401,9 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
     E = ex.shape[0]
 
     kernel = functools.partial(_frontier_grad_kernel, num_t=num_t, z=z,
-                               num_k=K, dist_id=dist_id)
+                               num_k=K, dist_id=dist_id,
+                               param_grads=param_grads)
+    n_fk_outs = 8 if param_grads else 2
     return pl.pallas_call(
         kernel,
         grid=(F // block_f,),
@@ -337,12 +416,9 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
         out_specs=[
             pl.BlockSpec((block_f,), lambda i: (i,)),
             pl.BlockSpec((block_f,), lambda i: (i,)),
-            pl.BlockSpec((block_f, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_f, K), lambda i: (i, 0)),
-        ],
+        ] + [pl.BlockSpec((block_f, K), lambda i: (i, 0))] * n_fk_outs,
         out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32),
-                   jax.ShapeDtypeStruct((F,), jnp.float32),
-                   jax.ShapeDtypeStruct((F, K), jnp.float32),
-                   jax.ShapeDtypeStruct((F, K), jnp.float32)],
+                   jax.ShapeDtypeStruct((F,), jnp.float32)]
+        + [jax.ShapeDtypeStruct((F, K), jnp.float32)] * n_fk_outs,
         interpret=interpret,
     )(W, mus2, sgs2, ex)

@@ -192,11 +192,12 @@ def rmsnorm(x, w, *, eps: float = 1e-6, impl: str = "xla"):
 
 def _resolve_block_f(F: int, K: int, num_t: int, impl: str,
                      block_f: Optional[int], fused: bool,
-                     dist_id: str = "normal") -> int:
+                     dist_id: str = "normal", params: bool = False) -> int:
     """Explicit block_f wins; otherwise consult the autotune cache/model."""
     if block_f is not None:
         return max(min(block_f, F), 1)
-    return _at.lookup(F, K, num_t, backend=impl, fused=fused, dist_id=dist_id)
+    return _at.lookup(F, K, num_t, backend=impl, fused=fused, dist_id=dist_id,
+                      params=params)
 
 
 def _resolve_family(family, K: int):
@@ -231,31 +232,38 @@ def _moments_fwd(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
     return mu[:F], var[:F]
 
 
-def _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
-    """Fused (mu, var, dmu_dW, dvar_dW) on aligned shapes (bf resolved)."""
+def _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id,
+                   param_grads: bool = False):
+    """Fused (mu, var, dmu_dW, dvar_dW[, param adjoints]) on aligned shapes.
+
+    ``param_grads`` switches both backends to the full-parameter launch: six
+    extra (F, K) outputs (mus/sigmas/extra-row-0 adjoints of both moments) —
+    still ONE kernel launch on the Pallas paths.
+    """
     F = W.shape[0]
     pad = (-F) % bf
     if impl == "xla":
         if F <= bf:
             return ref.frontier_grid_with_grads_ref(
-                W, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id, extra=extra)
+                W, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id,
+                extra=extra, param_grads=param_grads)
         if pad:
             W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
         blocks = W.reshape(-1, bf, W.shape[1])
-        mu, var, dmu, dvar = jax.lax.map(
+        outs = jax.lax.map(
             lambda wb: ref.frontier_grid_with_grads_ref(
                 wb, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id,
-                extra=extra),
+                extra=extra, param_grads=param_grads),
             blocks)
         K = W.shape[1]
-        return (mu.reshape(-1)[:F], var.reshape(-1)[:F],
-                dmu.reshape(-1, K)[:F], dvar.reshape(-1, K)[:F])
+        return tuple(o.reshape(-1)[:F] if o.ndim == 2
+                     else o.reshape(-1, K)[:F] for o in outs)
     if pad:
         W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
-    mu, var, dmu, dvar = _fg.frontier_grid_with_grads(
+    outs = _fg.frontier_grid_with_grads(
         W, mus, sigmas, extra, num_t=num_t, z=z, block_f=bf, dist_id=dist_id,
-        interpret=(impl == "pallas_interpret"))
-    return mu[:F], var[:F], dmu[:F], dvar[:F]
+        interpret=(impl == "pallas_interpret"), param_grads=param_grads)
+    return tuple(o[:F] for o in outs)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
@@ -265,20 +273,32 @@ def _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl, bfs, z, dist_id):
 
 def _frontier_moments_vjp_fwd(W, mus, sigmas, extra, num_t, impl, bfs, z,
                               dist_id):
-    # bfs = (forward block_f, fused block_f): the fused launch holds ~3x the
-    # accumulators, so a forward-tuned block can overflow the fused budget
-    mu, var, dmu, dvar = _moments_grads(W, mus, sigmas, extra, num_t, impl,
-                                        bfs[1], z, dist_id)
-    return (mu, var), (dmu, dvar, mus, sigmas, extra)
+    # bfs = (forward block_f, pgrad block_f): the full-parameter fused launch
+    # holds ~4x the accumulators, so a forward-tuned block can overflow its
+    # budget. The VJP's forward pass runs the param_grads kernel — one launch
+    # yields every residual the backward needs, W and channel-statistic
+    # adjoints alike (the closed estimation loop's differentiation surface).
+    outs = _moments_grads(W, mus, sigmas, extra, num_t, impl, bfs[1], z,
+                          dist_id, param_grads=True)
+    mu, var, dmu, dvar, dmu_m, dvar_m, dmu_s, dvar_s, dmu_e, dvar_e = outs
+    return (mu, var), (dmu, dvar, dmu_m, dvar_m, dmu_s, dvar_s,
+                       dmu_e, dvar_e, extra)
 
 
 def _frontier_moments_vjp_bwd(num_t, impl, bfs, z, dist_id, res, cts):
-    dmu, dvar, mus, sigmas, extra = res
+    (dmu, dvar, dmu_m, dvar_m, dmu_s, dvar_s, dmu_e, dvar_e, extra) = res
     g_mu, g_var = cts
     dW = g_mu[:, None] * dmu + g_var[:, None] * dvar
-    # mus/sigmas/extra are posterior point estimates — constants of the solve
-    # (stop-gradient semantics, see frontier_moments docstring)
-    return dW, jnp.zeros_like(mus), jnp.zeros_like(sigmas), jnp.zeros_like(extra)
+    # channel statistics are shared across candidate rows: sum the per-row
+    # adjoints against the output cotangents
+    d_mus = g_mu @ dmu_m + g_var @ dvar_m
+    d_sigmas = g_mu @ dmu_s + g_var @ dvar_s
+    # extra cotangent: row 0 carries the differentiable shape parameter
+    # (drift's rho); remaining rows (and all rows for the other families) are
+    # solve constants with zero cotangent by contract
+    d_extra = jnp.zeros_like(extra)
+    d_extra = d_extra.at[0].set(g_mu @ dmu_e + g_var @ dvar_e)
+    return dW, d_mus, d_sigmas, d_extra
 
 
 _frontier_moments_vjp.defvjp(_frontier_moments_vjp_fwd,
@@ -306,12 +326,17 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     instead of materializing the full (F, T, K) intermediate — that is what
     lets a K=1024 x F=4096 tick run at all.
 
-    Differentiable in W on every impl via a registered ``jax.custom_vjp``
-    that backprops through the analytic adjoint of the (family-parametric)
+    Differentiable on every impl via a registered ``jax.custom_vjp`` that
+    backprops through the analytic adjoint of the (family-parametric)
     survival integral (see ``frontier_grid.py``) instead of
-    autodiff-replaying the quadrature. ``mus``/``sigmas``/family parameters
-    are treated as constants of the solve (posterior point estimates): their
-    cotangents are zero by construction.
+    autodiff-replaying the quadrature — in the split weights ``W`` AND in
+    the channel statistics: ``mus``, ``sigmas`` and, for the drift family,
+    ``extra`` row 0 (per-channel ``rho``) all receive nonzero analytic
+    cotangents, which is what lets ``core.sensitivity`` chain the solve
+    through the NIG posterior parameters (the closed estimation loop of
+    arXiv:1511.00613). The empirical family's mixture parameters remain
+    solve constants (re-fit from data, never descended): their cotangents
+    are zero by contract.
     """
     _check(impl)
     W = jnp.asarray(W, jnp.float32)
@@ -320,15 +345,16 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     F, K = W.shape
     dist_id, extra = _resolve_family(family, K)
     # resolve BOTH launch shapes up front: the primal runs the forward
-    # kernel, but under jax.grad the VJP's forward pass runs the fused one,
-    # whose working set is ~3x larger (smaller safe block_f). An explicit
-    # block_f binds the forward launch verbatim; the fused launch it implies
-    # is still clamped by the budget model — the caller sized the block they
-    # asked for, not the 3x-bigger one differentiation swaps in.
+    # kernel, but under jax.grad the VJP's forward pass runs the fused
+    # full-parameter one, whose working set is ~4x larger (smaller safe
+    # block_f). An explicit block_f binds the forward launch verbatim; the
+    # fused launch it implies is still clamped by the budget model — the
+    # caller sized the block they asked for, not the 4x-bigger one
+    # differentiation swaps in.
     bf_fwd = _resolve_block_f(F, K, num_t, impl, block_f, fused=False,
                               dist_id=dist_id)
     bf_fused = _resolve_block_f(F, K, num_t, impl, None, fused=True,
-                                dist_id=dist_id)
+                                dist_id=dist_id, params=True)
     if block_f is not None:
         bf_fused = min(max(min(block_f, F), 1), bf_fused)
     return _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl,
@@ -338,13 +364,23 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
 def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
                                 impl: str = "xla",
                                 block_f: Optional[int] = None,
-                                z: float = 10.0, family="normal"):
+                                z: float = 10.0, family="normal",
+                                param_grads: bool = False):
     """Fused (mu, var, dmu_dW, dvar_dW) over candidate splits W: (F, K).
 
     One launch returns the moments and their analytic adjoints w.r.t. every
     split weight — what the PGD solver consumes directly each step (no
-    autodiff replay, no second launch). Family/padding/autotune glue matches
-    :func:`frontier_moments`.
+    autodiff replay, no second launch). ``param_grads=True`` widens the same
+    launch to the full-parameter adjoint 10-tuple
+
+        (mu, var, dmu_dW, dvar_dW, dmu_dmus, dvar_dmus,
+         dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)
+
+    (``d*_dex`` = extra row 0, drift's ``rho``; zeros for other families) —
+    the surface ``core.sensitivity`` and the posterior-sensitivity analysis
+    consume. Family/padding/autotune glue matches :func:`frontier_moments`;
+    the two gradient modes autotune independently (``grad`` vs ``pgrad``
+    cache keys — the parameter mode's working set is larger).
     """
     _check(impl)
     W = jnp.asarray(W, jnp.float32)
@@ -352,8 +388,9 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
     sigmas = jnp.asarray(sigmas, jnp.float32)
     dist_id, extra = _resolve_family(family, W.shape[1])
     bf = _resolve_block_f(W.shape[0], W.shape[1], num_t, impl, block_f,
-                          fused=True, dist_id=dist_id)
-    return _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id)
+                          fused=True, dist_id=dist_id, params=param_grads)
+    return _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id,
+                          param_grads=param_grads)
 
 
 def decode_attention(q, k_cache, v_cache, valid, *, sm_scale=None,

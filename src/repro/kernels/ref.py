@@ -71,7 +71,7 @@ def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0,
 
 def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
                                  z: float = 10.0, dist_id: str = "normal",
-                                 extra=None):
+                                 extra=None, param_grads: bool = False):
     """Fused oracle: ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W.
 
     Same forward contract as :func:`frontier_grid_ref` (family selected by
@@ -79,6 +79,20 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     every split weight, computed in the same pass — the semantics the fused
     Pallas kernel must match and the function the ``frontier_moments`` custom
     VJP rides.
+
+    With ``param_grads=True`` the adjoint basis widens to the full channel
+    statistics and the return is the 10-tuple
+
+        (mu, var, dmu_dW, dvar_dW, dmu_dmus, dvar_dmus,
+         dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)
+
+    where ``dmu_dmus[f, k] = d mu_f / d mu_k`` etc. and ``d*_dex`` is the
+    cotangent of ``extra`` **row 0** — drift's per-channel ``rho``; zero for
+    every other family (the empirical mixture's fitted parameters are solve
+    constants by contract, see ``distributions.family_has_extra_grads``).
+    This is the estimation-loop surface: the ``frontier_moments`` custom VJP
+    and ``core.sensitivity`` ride these outputs to differentiate the solve
+    through the posterior point estimates.
 
     The adjoint must agree with ``jax.grad`` through the quadrature graph, so
     it replicates autodiff's boundary conventions exactly:
@@ -93,13 +107,11 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
       when they set ``tmax``.
 
     The family enters through the affine decomposition
-    ``dC/dw = D(t) (alpha + beta t)`` / ``dC/dt = D(t) (gamma0 + gamma1 t)/t``
-    of ``core.distributions`` (see ``frontier_grid.py`` for the derivation):
-    the t-sums contract into at most four per-channel accumulators
-    (P0/P1/Pv0/Pv1), of which each family statically needs a subset.
-
-    Gradients are w.r.t. W only; mus/sigmas/extra are treated as constants of
-    the solve (the posterior point estimates), matching every caller in repro.
+    ``dC/dtheta = D(t) (a + b t + c z)`` over the per-family feature basis of
+    ``core.distributions.family_features`` (see ``frontier_grid.py`` for the
+    derivation): the t-sums contract into at most six per-channel
+    accumulators (P0/P1/Pz and their Pv* twins), of which each
+    (family, param mode) pair statically needs a subset.
     """
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
@@ -112,7 +124,7 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     tmax = jnp.maximum(amax, 1e-12)
     ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
 
-    cdf_raw, D, ok = dists.family_pdf_parts(
+    cdf_raw, D, ok, zsc = dists.family_adjoint_parts(
         dist_id, ts[:, :, None], W[:, None, :], mus, sigmas, extra)  # (F,T,K)
     cdf = jnp.where(ok, cdf_raw,
                     dists.point_mass_cdf(ts[:, :, None], means_eff[:, None, :]))
@@ -133,22 +145,24 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
             * (cdf_raw > _CDF_FLOOR) * ok)
     r = gate * D / Cc                                # (F, T, K)
     a = (wq[None, :, None] * F_t[:, :, None]) * r    # trapezoid-weighted
-    use_p0, use_p1 = dists.family_accumulators(dist_id)
+    use_1, use_t, use_z = dists.family_features(dist_id, params=param_grads)
     ones_t = jnp.ones_like(ts)
     # var accumulators combine the m2 and -2*mu*mu cotangents PER GRID POINT
     # (t_j - mu), exactly as autodiff's backward does — accumulating them
     # separately and subtracting after the reduction loses ~3 digits to
     # cancellation when var << mu^2
-    P0 = jnp.einsum("ftk,ft->fk", a, ones_t) if use_p0 else 0.0
-    Pv0 = jnp.einsum("ftk,ft->fk", a, ts - mu[:, None]) if use_p0 else 0.0
-    P1 = jnp.einsum("ftk,ft->fk", a, ts) if use_p1 else 0.0
-    Pv1 = jnp.einsum("ftk,ft->fk", a, ts * (ts - mu[:, None])) if use_p1 else 0.0
+    tmu = ts - mu[:, None]
+    P0 = jnp.einsum("ftk,ft->fk", a, ones_t) if use_1 else 0.0
+    Pv0 = jnp.einsum("ftk,ft->fk", a, tmu) if use_1 else 0.0
+    P1 = jnp.einsum("ftk,ft->fk", a, ts) if use_t else 0.0
+    Pv1 = jnp.einsum("ftk,ft->fk", a, ts * tmu) if use_t else 0.0
+    # the z feature rides inside the (F, T, K)-shaped a*z product (z varies
+    # per channel), so its accumulators contract without the shared-t einsum
+    Pz = jnp.sum(a * zsc, axis=1) if use_z else 0.0
+    Pvz = jnp.sum(a * zsc * tmu[:, :, None], axis=1) if use_z else 0.0
 
     alpha, beta, gamma0, gamma1 = dists.family_coeffs(
         dist_id, W, mus, sigmas, extra)              # (F, K) each
-    # fixed-grid terms: dmu/dw_k = -dt (alpha P0 + beta P1)_k
-    dmu_direct = -dt[:, None] * (alpha * P0 + beta * P1)
-    dvar_direct = -2.0 * dt[:, None] * (alpha * Pv0 + beta * Pv1)
 
     # grid terms: every z_jk moves with tmax, and dt scales with tmax, so
     # dmu/dtmax = mu/tmax - (dt/tmax) sum_k (gamma0 P0 + gamma1 P1)_k
@@ -156,16 +170,40 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     b_mu = (mu - dt * jnp.sum(gamma0 * P0 + gamma1 * P1, -1)) / tmax
     b_var = 2.0 * (var_raw
                    - dt * jnp.sum(gamma0 * Pv0 + gamma1 * Pv1, -1)) / tmax
-    # dtmax/dw_k = dreach_k on argmax channels (ties split evenly)
+    # dtmax/dtheta_k = dreach_k/dtheta on argmax channels (ties split evenly)
     ind = (reach == amax[:, None]).astype(jnp.float32)
-    dreach = dists.family_dreach(dist_id, W, mus, sigmas, extra, z)
-    gvec = (dreach * ind / jnp.sum(ind, -1, keepdims=True)
-            * (amax > 1e-12)[:, None])
+    tie = ind / jnp.sum(ind, -1, keepdims=True) * (amax > 1e-12)[:, None]
+    var_pos = (var_raw > 0.0)[:, None]
 
-    dmu = dmu_direct + b_mu[:, None] * gvec
-    dvar = jnp.where((var_raw > 0.0)[:, None],
-                     dvar_direct + b_var[:, None] * gvec, 0.0)
-    return mu, var, dmu, dvar
+    def contract(coeff_1, coeff_t, coeff_z, dreach):
+        """Fixed-grid + moving-grid adjoint for one parameter axis."""
+        gvec = dreach * tie
+        dmu_th = (-dt[:, None] * (coeff_1 * P0 + coeff_t * P1 + coeff_z * Pz)
+                  + b_mu[:, None] * gvec)
+        dvar_th = jnp.where(
+            var_pos,
+            -2.0 * dt[:, None] * (coeff_1 * Pv0 + coeff_t * Pv1
+                                  + coeff_z * Pvz)
+            + b_var[:, None] * gvec, 0.0)
+        return dmu_th, dvar_th
+
+    dreach_w = dists.family_dreach(dist_id, W, mus, sigmas, extra, z)
+    zero_fk = jnp.zeros_like(W * mus)
+    dmu, dvar = contract(alpha, beta, zero_fk, dreach_w)
+    if not param_grads:
+        return mu, var, dmu, dvar
+
+    c_mu, c_sigma, c_rho = dists.family_param_coeffs(
+        dist_id, W, mus, sigmas, extra)
+    dr_mu, dr_sigma, dr_rho = dists.family_dreach_params(
+        dist_id, W, mus, sigmas, extra, z)
+    dmu_m, dvar_m = contract(*c_mu, dr_mu)
+    dmu_s, dvar_s = contract(*c_sigma, dr_sigma)
+    if dists.family_has_extra_grads(dist_id):
+        dmu_e, dvar_e = contract(*c_rho, dr_rho)
+    else:
+        dmu_e, dvar_e = zero_fk, zero_fk
+    return (mu, var, dmu, dvar, dmu_m, dvar_m, dmu_s, dvar_s, dmu_e, dvar_e)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

@@ -5,9 +5,33 @@ completion time (seconds per microbatch / per MB / per request), converts the
 posterior point estimates into frontier weights via repro.core, and emits
 integer work assignments (microbatch counts, request shards).
 
+Closed-loop estimation (this is where the whole estimation stack meets the
+solver):
+
+* ``family="auto"`` — the completion-time model itself is selected online:
+  the balancer keeps a bounded (rate, work) history and periodically
+  BIC-scores NIG-Normal vs moment-matched lognormal vs the drift regression
+  vs a per-channel empirical GMM (``core.bayes.score_families``). A
+  challenger family must win ``hysteresis`` consecutive scoring passes
+  before the balancer switches — a switch is a model change and always
+  invalidates the cached solve.
+* ``adaptive_refresh=True`` — the refresh cadence is sized by posterior
+  sensitivity: after each fresh solve the balancer computes the delta-method
+  fragility of the predicted mean under estimation error
+  (``core.sensitivity``) and refreshes sooner while the solve is fragile
+  (young/posteriors moving) and stretches toward ``refresh_every`` as
+  estimates firm up.
+* ``risk_lam > 0`` — candidate splits are scored by the risk-adjusted
+  objective ``mu + lam var + risk_lam * fragility`` so the chosen split is
+  robust to estimation error, not just optimal at the point estimates.
+
 This is the object the training loop and the serving batcher talk to; it is
 deliberately free of any jax device state so it runs on the host scheduler
-thread and serializes into checkpoints (meta.json).
+thread and serializes into checkpoints (meta.json). ``state_dict`` /
+``from_state_dict`` round-trip the FULL estimation state — NIG posteriors,
+selected family (with fitted parameters), hysteresis counters, rate history,
+cached solve and refresh phase — so a restored balancer resumes identical
+ticks.
 """
 from __future__ import annotations
 
@@ -18,7 +42,8 @@ import numpy as np
 
 from ..core import (NIGState, get_family, nig_init, nig_point_estimates,
                     nig_update_batch, equal_split, inverse_mu_split,
-                    optimize_2ch, optimize_weights, predict_moments)
+                    optimize_2ch, optimize_weights, predict_moments,
+                    fit_selected_family, score_families)
 
 __all__ = ["integerize", "UncertaintyAwareBalancer"]
 
@@ -44,6 +69,8 @@ class UncertaintyAwareBalancer:
     lam     — mean-variance tradeoff on the frontier (0 = pure speed).
     policy  — "frontier" (the paper), "equal" (map-reduce baseline),
               "inverse_mu" (deterministic balance baseline).
+    family  — completion-time family for the solve: a name, a
+              ``ChannelFamily`` instance, or "auto" (online BIC selection).
     """
 
     num_channels: int
@@ -56,21 +83,65 @@ class UncertaintyAwareBalancer:
     impl: str = "xla"           # frontier_moments backend: xla | pallas[_interpret]
     num_t: int = 1024           # survival-integral resolution per candidate
     block_f: Optional[int] = None  # kernel launch shape; None = autotuned
-    family: object = "normal"   # completion-time family for the solve
+    family: object = "normal"   # completion-time family ("auto" = select online)
+    risk_lam: float = 0.0       # fragility weight in the candidate scoring
+    adaptive_refresh: bool = False  # size the refresh cadence by sensitivity
+    refresh_target_rel: float = 0.02  # tolerated relative predicted-mean drift
+    history_window: int = 128   # (rate, work) observations kept per channel
+    auto_every: int = 8         # BIC-score cadence, in observations
+    auto_min_obs: int = 12      # history needed before scoring starts
+    hysteresis: int = 3         # consecutive wins before a family switch
+    explore: float = 0.15       # auto-mode probe amplitude (see weights())
     _nig: NIGState = field(default=None, repr=False)
     _cached_w: np.ndarray = field(default=None, repr=False)
     _cached_family_key: object = field(default=None, repr=False)
     _obs_count: int = 0
+    _selected_family: object = field(default=None, repr=False)
+    _challenger: Optional[str] = field(default=None, repr=False)
+    _challenger_count: int = 0
+    _last_scores: object = field(default=None, repr=False)
+    _effective_refresh: Optional[int] = field(default=None, repr=False)
+    _last_fragility: Optional[float] = field(default=None, repr=False)
+    _hist_rates: list = field(default_factory=list, repr=False)
+    _hist_work: list = field(default_factory=list, repr=False)
+    _hist_mask: list = field(default_factory=list, repr=False)
 
     def __post_init__(self):
         if self._nig is None:
             self._nig = nig_init(self.num_channels, m0=self.prior_mean)
+        if self._selected_family is None:
+            self._selected_family = get_family(
+                None if self._is_auto else self.family)
+        if self._effective_refresh is None:
+            self._effective_refresh = max(self.refresh_every, 1)
+
+    @property
+    def _is_auto(self) -> bool:
+        return isinstance(self.family, str) and self.family == "auto"
+
+    @property
+    def selected_family(self):
+        """The ChannelFamily the next frontier solve will run under."""
+        return (self._selected_family if self._is_auto
+                else get_family(self.family))
+
+    @property
+    def family_scores(self):
+        """Last ``core.bayes.FamilyScores`` (None before the first pass)."""
+        return self._last_scores
+
+    @property
+    def effective_refresh(self) -> int:
+        """Current refresh cadence (== refresh_every unless adaptive)."""
+        return int(self._effective_refresh or max(self.refresh_every, 1))
 
     # ------------------------------------------------------------ feedback
     def observe(self, durations: Sequence[float], work: Sequence[float]):
         """Report per-channel durations for assigned work fractions.
 
-        work==0 entries (idle/failed channels) are masked out.
+        work==0 entries (idle/failed channels) are masked out. Feeds both the
+        NIG posteriors and, under ``family="auto"``, the bounded history the
+        BIC family selection scores.
         """
         import jax.numpy as jnp
         d = np.asarray(durations, np.float64)
@@ -80,6 +151,47 @@ class UncertaintyAwareBalancer:
         self._nig = nig_update_batch(self._nig, jnp.asarray(rates),
                                      jnp.asarray(mask))
         self._obs_count += 1
+        if self._is_auto:
+            # the (rate, work) window only feeds the BIC family selection —
+            # fixed-family balancers skip it (and keep checkpoints lean)
+            self._hist_rates.append(rates)
+            self._hist_work.append(w.astype(np.float32))
+            self._hist_mask.append(mask)
+            if len(self._hist_rates) > self.history_window:
+                del self._hist_rates[0], self._hist_work[0], \
+                    self._hist_mask[0]
+            if self._obs_count % max(self.auto_every, 1) == 0:
+                self._auto_select()
+
+    def _auto_select(self):
+        """One BIC scoring pass + hysteresis; switches invalidate the solve."""
+        if len(self._hist_rates) < self.auto_min_obs:
+            return
+        scores = score_families(np.stack(self._hist_rates),
+                                np.stack(self._hist_work),
+                                np.stack(self._hist_mask),
+                                min_obs=self.auto_min_obs)
+        if scores is None:
+            return
+        self._last_scores = scores
+        current = self._selected_family.dist_id
+        if scores.winner == current:
+            # the incumbent re-won: reset any challenger streak. Re-fit the
+            # parametric extras in place (drift rates / mixture components
+            # track the data) WITHOUT treating it as a switch — the family
+            # key change alone invalidates the cached solve when they move.
+            self._challenger, self._challenger_count = None, 0
+            if current in ("drift", "empirical"):
+                self._selected_family = fit_selected_family(scores)
+            return
+        if scores.winner != self._challenger:
+            self._challenger, self._challenger_count = scores.winner, 1
+        else:
+            self._challenger_count += 1
+        if self._challenger_count >= max(self.hysteresis, 1):
+            self._selected_family = fit_selected_family(scores)
+            self._challenger, self._challenger_count = None, 0
+            self._cached_w = None        # model change: re-solve immediately
 
     def estimates(self):
         mu, sigma = nig_point_estimates(self._nig)
@@ -87,14 +199,35 @@ class UncertaintyAwareBalancer:
 
     # ------------------------------------------------------------ decisions
     @staticmethod
-    def _family_key(fam) -> tuple:
-        """Hashable fingerprint of a family spec (cache-invalidation key)."""
+    def _family_key(fam) -> str:
+        """Canonical fingerprint of a family spec (cache-invalidation key).
+
+        A JSON string so it survives ``state_dict`` round-trips *verbatim*:
+        a cached solve made under a per-call family override (e.g. the
+        straggler policy's Drift) must still read as stale after a restore,
+        exactly as it would have in the original process.
+        """
+        import json
         fam = get_family(fam)
-        extra_items = tuple(sorted(
-            (k, tuple(np.asarray(v).ravel().tolist()) if not isinstance(v, str)
-             else v)
-            for k, v in fam.state_dict().items()))
-        return (fam.dist_id, extra_items)
+        items = {k: (np.asarray(v).ravel().tolist() if not isinstance(v, str)
+                     else v)
+                 for k, v in fam.state_dict().items()}
+        return json.dumps([fam.dist_id, items], sort_keys=True)
+
+    def _size_refresh(self, rel_fragility: float):
+        """Map relative fragility to a cadence in [1, refresh_every].
+
+        The solve drifts roughly in proportion to the estimation error, so
+        cadence ~ tolerated drift / current fragility: a solve whose
+        prediction is (say) 10% uncertain refreshes every tick, one whose
+        posteriors have firmed to 0.1% stretches to the configured maximum.
+        """
+        cap = max(self.refresh_every, 1)
+        if rel_fragility <= 0.0:
+            self._effective_refresh = cap
+            return
+        self._effective_refresh = int(np.clip(
+            round(self.refresh_target_rel / rel_fragility), 1, cap))
 
     def weights(self, family=None) -> np.ndarray:
         """Current split decision; ``family`` overrides the configured
@@ -102,7 +235,7 @@ class UncertaintyAwareBalancer:
         passing a Drift family with per-channel rates)."""
         mus, sigmas = self.estimates()
         k = self.num_channels
-        fam = self.family if family is None else family
+        fam = self.selected_family if family is None else family
         if self.policy == "equal":
             w = np.asarray(equal_split(k))
         elif self.policy == "inverse_mu":
@@ -110,18 +243,21 @@ class UncertaintyAwareBalancer:
         else:
             # frontier: cached between refreshes (the solve is the scheduler
             # tick cost — it must stay off the per-step critical path). A
-            # family change (straggler detected -> drift priced in) is a
-            # model change: it always invalidates the cached solve.
+            # family change (straggler detected -> drift priced in, or the
+            # auto-selector switching models) is a model change: it always
+            # invalidates the cached solve.
             fam_key = self._family_key(fam)
+            cadence = (self.effective_refresh if self.adaptive_refresh
+                       else max(self.refresh_every, 1))
             stale = (self._cached_w is None
                      or len(self._cached_w) != k
                      or fam_key != self._cached_family_key
-                     or self._obs_count % max(self.refresh_every, 1) == 0)
+                     or self._obs_count % cadence == 0)
             if not stale:
                 # fall through to the min_weight floor below: cached and
                 # fresh ticks must return identical post-processing
                 w = self._cached_w.copy()
-            elif k == 2:
+            elif k == 2 and self.risk_lam <= 0 and not self.adaptive_refresh:
                 w = optimize_2ch(mus[0], sigmas[0], mus[1], sigmas[1],
                                  lam=self.lam, impl=self.impl,
                                  family=fam).weights
@@ -134,15 +270,43 @@ class UncertaintyAwareBalancer:
                         and len(self._cached_w) == k else None)
                 # refresh tick rides the fused moments+gradient path: every
                 # PGD step inside is one analytic forward+grad launch
-                w = optimize_weights(mus, sigmas, lam=self.lam,
-                                     steps=self.pgd_steps,
-                                     restarts=restarts,
-                                     num_t=self.num_t, impl=self.impl,
-                                     warm_start=warm,
-                                     block_f=self.block_f,
-                                     family=fam).weights
+                out = optimize_weights(mus, sigmas, lam=self.lam,
+                                       steps=self.pgd_steps,
+                                       restarts=restarts,
+                                       num_t=self.num_t, impl=self.impl,
+                                       warm_start=warm,
+                                       block_f=self.block_f,
+                                       family=fam,
+                                       risk_lam=self.risk_lam,
+                                       posterior=(self._nig if self.risk_lam > 0
+                                                  or self.adaptive_refresh
+                                                  else None),
+                                       return_sensitivity=self.adaptive_refresh)
+                if self.adaptive_refresh:
+                    dec, report = out
+                    self._last_fragility = report.fragility
+                    self._size_refresh(report.relative_fragility)
+                else:
+                    dec = out
+                w = dec.weights
             self._cached_w = np.asarray(w, np.float64)
             self._cached_family_key = fam_key
+        if self._is_auto and self.explore > 0 and self.policy == "frontier":
+            # active identification: a converged (static) split makes
+            # within-work drift unidentifiable from a shifted normal — the
+            # drift regression needs per-channel spread in the work shares.
+            # Probe with a deterministic +-explore alternating pattern (each
+            # channel sees both levels on consecutive ticks, so the design
+            # matrix has spread e*w by construction). Under the iid families
+            # the rate is independent of w, so the probe adds no false
+            # signal; the cost is a bounded optimality gap while in auto
+            # mode — the standard identification/performance trade. Applied
+            # BEFORE the min_weight floor: the floor is a hard invariant the
+            # probe must never undercut.
+            sign = 1.0 - 2.0 * ((np.arange(k) + self._obs_count) % 2)
+            w = w * (1.0 + self.explore * sign)
+            w = np.maximum(w, 0.0)
+            w = w / max(w.sum(), 1e-12)
         if self.min_weight > 0:
             w = np.maximum(w, self.min_weight)
             w = w / w.sum()
@@ -156,7 +320,7 @@ class UncertaintyAwareBalancer:
                           family=None):
         mus, sigmas = self.estimates()
         w = self.weights() if weights is None else weights
-        fam = self.family if family is None else family
+        fam = self.selected_family if family is None else family
         return predict_moments(w, mus, sigmas, family=fam)
 
     # ------------------------------------------------------------ elasticity
@@ -173,7 +337,7 @@ class UncertaintyAwareBalancer:
             alpha=jnp.concatenate([old.alpha, new.alpha[-1:]]),
             beta=jnp.concatenate([old.beta, new.beta[-1:]]))
         self.num_channels += 1
-        self._cached_w = None
+        self._reset_after_resize()
 
     def remove_channel(self, idx: int):
         """Drop a failed/retired channel (elastic scale-down)."""
@@ -184,21 +348,98 @@ class UncertaintyAwareBalancer:
         self._nig = NIGState(m=o.m[sel], kappa=o.kappa[sel],
                              alpha=o.alpha[sel], beta=o.beta[sel])
         self.num_channels -= 1
+        self._reset_after_resize()
+
+    def _reset_after_resize(self):
+        """A fleet-shape change invalidates the solve, the per-channel
+        history (column counts no longer line up) and any auto-family
+        parametric fit sized to the old K."""
         self._cached_w = None
+        self._hist_rates, self._hist_work, self._hist_mask = [], [], []
+        self._challenger, self._challenger_count = None, 0
+        self._last_scores = None   # rho/gmm arrays are sized to the old K
+        if self._is_auto and self._selected_family.dist_id in ("drift",
+                                                               "empirical"):
+            self._selected_family = get_family("normal")
 
     # ------------------------------------------------------------ persistence
     def state_dict(self) -> dict:
-        return {"num_channels": self.num_channels, "lam": self.lam,
-                "policy": self.policy, "impl": self.impl, "num_t": self.num_t,
-                "family": get_family(self.family).state_dict(),
-                "nig": {k: np.asarray(v).tolist() for k, v in self._nig._asdict().items()}}
+        """Full estimation state: a restored balancer resumes identical
+        ticks (same solves on the same observations in the same phase)."""
+        return {
+            "num_channels": self.num_channels, "lam": self.lam,
+            "policy": self.policy, "impl": self.impl, "num_t": self.num_t,
+            "min_weight": self.min_weight,
+            "refresh_every": self.refresh_every,
+            "pgd_steps": self.pgd_steps,
+            "risk_lam": self.risk_lam,
+            "adaptive_refresh": self.adaptive_refresh,
+            "refresh_target_rel": self.refresh_target_rel,
+            "history_window": self.history_window,
+            "auto_every": self.auto_every,
+            "auto_min_obs": self.auto_min_obs,
+            "hysteresis": self.hysteresis,
+            "explore": self.explore,
+            "family": ("auto" if self._is_auto
+                       else get_family(self.family).state_dict()),
+            "selected_family": self._selected_family.state_dict(),
+            "challenger": self._challenger,
+            "challenger_count": self._challenger_count,
+            "obs_count": self._obs_count,
+            "effective_refresh": self._effective_refresh,
+            "cached_w": (None if self._cached_w is None
+                         else np.asarray(self._cached_w).tolist()),
+            "cached_family_key": self._cached_family_key,
+            "history": {
+                "rates": np.asarray(self._hist_rates, np.float64).tolist(),
+                "work": np.asarray(self._hist_work, np.float64).tolist(),
+                "mask": np.asarray(self._hist_mask, np.float64).tolist(),
+            },
+            "nig": {k: np.asarray(v).tolist()
+                    for k, v in self._nig._asdict().items()},
+        }
 
     @classmethod
     def from_state_dict(cls, d: dict) -> "UncertaintyAwareBalancer":
         import jax.numpy as jnp
-        b = cls(num_channels=d["num_channels"], lam=d["lam"], policy=d["policy"],
+        fam_spec = d.get("family", "normal")
+        fam = "auto" if fam_spec == "auto" else get_family(fam_spec)
+        b = cls(num_channels=d["num_channels"], lam=d["lam"],
+                policy=d["policy"],
                 impl=d.get("impl", "xla"), num_t=d.get("num_t", 1024),
-                family=get_family(d.get("family", "normal")))
+                min_weight=d.get("min_weight", 0.0),
+                refresh_every=d.get("refresh_every", 1),
+                pgd_steps=d.get("pgd_steps", 150),
+                risk_lam=d.get("risk_lam", 0.0),
+                adaptive_refresh=d.get("adaptive_refresh", False),
+                refresh_target_rel=d.get("refresh_target_rel", 0.02),
+                history_window=d.get("history_window", 128),
+                auto_every=d.get("auto_every", 8),
+                auto_min_obs=d.get("auto_min_obs", 12),
+                hysteresis=d.get("hysteresis", 3),
+                explore=d.get("explore", 0.15),
+                family=fam)
         b._nig = NIGState(**{k: jnp.asarray(v, jnp.float32)
                              for k, v in d["nig"].items()})
+        if "selected_family" in d:
+            b._selected_family = get_family(d["selected_family"])
+        b._challenger = d.get("challenger")
+        b._challenger_count = d.get("challenger_count", 0)
+        b._obs_count = d.get("obs_count", 0)
+        b._effective_refresh = d.get("effective_refresh",
+                                     max(b.refresh_every, 1))
+        if d.get("cached_w") is not None:
+            b._cached_w = np.asarray(d["cached_w"], np.float64)
+            key = d.get("cached_family_key")
+            # the key round-trips verbatim (it is a canonical JSON string);
+            # a legacy boolean marker falls back to recomputing from the
+            # selected family — conservative for override-cached solves
+            b._cached_family_key = (cls._family_key(b.selected_family)
+                                    if key is True else key)
+        hist = d.get("history")
+        if hist and len(hist.get("rates", [])):
+            b._hist_rates = [np.asarray(r, np.float32)
+                             for r in hist["rates"]]
+            b._hist_work = [np.asarray(r, np.float32) for r in hist["work"]]
+            b._hist_mask = [np.asarray(r, np.float32) for r in hist["mask"]]
         return b

@@ -60,21 +60,35 @@ class PartitionedBatcher:
     def __init__(self, groups: List[ReplicaGroup], lam: float = 0.05,
                  policy: str = "frontier", sim: Optional[ClusterSim] = None,
                  seed: int = 0, impl: str = "xla", num_t: int = 1024,
-                 refresh_every: int = 1, family="normal"):
+                 refresh_every: int = 1, family="normal",
+                 risk_lam: float = 0.0, adaptive_refresh: bool = False,
+                 block_f=None):
         self.groups = groups
         # forward the solver knobs so serving ticks run the kernel-backed
         # (and, with impl="pallas", compiled) fused solve path online;
         # ``family`` swaps the completion-time model the frontier solves
-        # under (e.g. "lognormal" for heavy-tailed WAN-style service times)
+        # under (e.g. "lognormal" for heavy-tailed WAN-style service times,
+        # or "auto" to let the balancer BIC-select the model from the
+        # observed rate history and switch it with hysteresis)
         self.balancer = UncertaintyAwareBalancer(len(groups), lam=lam,
                                                  policy=policy, impl=impl,
                                                  num_t=num_t,
                                                  refresh_every=refresh_every,
-                                                 family=family)
+                                                 family=family,
+                                                 risk_lam=risk_lam,
+                                                 adaptive_refresh=adaptive_refresh,
+                                                 block_f=block_f)
         self.sim = sim or ClusterSim.heterogeneous(len(groups), seed=seed)
+        self.last_tick: Optional[dict] = None
 
     def split(self, num_requests: int) -> np.ndarray:
         return integerize(self.balancer.weights(), num_requests)
+
+    @property
+    def selected_family(self) -> str:
+        """dist_id of the family the balancer is currently solving under
+        (moves over time when ``family="auto"``)."""
+        return self.balancer.selected_family.dist_id
 
     def run_batch(self, prompts: np.ndarray, max_new: int = 8,
                   execute: bool = False) -> Tuple[float, np.ndarray, list]:
@@ -83,10 +97,13 @@ class PartitionedBatcher:
         execute=True runs the actual models (tiny configs in examples);
         latency always comes from the simulator channels (this container has
         one CPU — the timing physics live in sim, as the paper's did in
-        background-process contention).
+        background-process contention). Per-tick telemetry — including the
+        family the solve ran under, which is the interesting signal in
+        ``family="auto"`` mode — lands in ``self.last_tick``.
         """
         R = prompts.shape[0]
         counts = self.split(R)
+        fam = self.selected_family
         responses = [None] * len(self.groups)
         if execute:
             off = 0
@@ -100,4 +117,10 @@ class PartitionedBatcher:
                 off += c
         join_t, durs = self.sim.run_step(counts.astype(np.float64) / max(R, 1))
         self.balancer.observe(durs, counts.astype(np.float64) / max(R, 1))
+        self.last_tick = {
+            "family": fam,
+            "join_latency": float(join_t),
+            "counts": counts,
+            "effective_refresh": self.balancer.effective_refresh,
+        }
         return join_t, counts, responses

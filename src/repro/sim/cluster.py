@@ -64,13 +64,26 @@ class Channel:
 
 @dataclass
 class ClusterSim:
+    """``load_factor`` is a fleet-wide multiplicative service-time regime
+    (1.0 = nominal): bursty-traffic benchmarks switch it mid-trace
+    (:meth:`set_load`) to model congestion regimes on top of the per-channel
+    stochastic rates — the mean AND the spread scale together, exactly what
+    a contended VM / saturated WAN does."""
+
     channels: list
     seed: int = 0
     step_count: int = 0
+    load_factor: float = 1.0
     rng: np.random.Generator = field(init=False)
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
+
+    def set_load(self, factor: float):
+        """Switch the fleet-wide congestion regime (regime-switching traces)."""
+        if factor <= 0:
+            raise ValueError(f"load factor must be positive, got {factor}")
+        self.load_factor = float(factor)
 
     @classmethod
     def heterogeneous(cls, n: int, mu_range=(10.0, 40.0), cov_range=(0.02, 0.3),
@@ -141,6 +154,8 @@ class ClusterSim:
                           for c in self.channels])
         if rho.any():
             durs = durs + 0.5 * rho * mu * w * w
+        if self.load_factor != 1.0:  # congestion regime: times scale fleet-wide
+            durs = durs * self.load_factor
         durs = np.where(active, np.maximum(durs, 1e-9), 0.0)
         for c in self.channels:  # slow drift (multi-tenant hotspots)
             if c.drift:

@@ -32,6 +32,7 @@ class TestMaxMoments:
         np.testing.assert_allclose(m, qm, rtol=1e-4)
         np.testing.assert_allclose(v, qv, rtol=1e-3)
 
+    @pytest.mark.mc_oracle
     def test_against_monte_carlo(self):
         means = jnp.array([30.0, 20.0, 25.0])
         stds = jnp.array([2.0, 6.0, 1.0])

@@ -11,7 +11,7 @@ Acceptance anchors:
   * frontier_moments / frontier_kch / UncertaintyAwareBalancer accept
     ``family=``;
   * the autotune cache key separates forward/fused/per-family variants and
-    survives the v2 key-schema bump;
+    survives the v2 -> v3 key-schema bumps;
   * safe_cdf / family point-mass conventions at w=0 are single-sourced and
     right-continuous.
 """
@@ -67,6 +67,7 @@ def _families(k, seed=0):
 class TestMonteCarloOracle:
     """Acceptance: quadrature (mu, var) vs numpy MC ground truth <= 1e-3."""
 
+    @pytest.mark.mc_oracle
     @pytest.mark.parametrize("dist_id", ["lognormal", "drift"])
     def test_matches_mc_oracle(self, dist_id):
         rng = np.random.default_rng(1)
@@ -336,7 +337,7 @@ class TestPointMassConventions:
 
 class TestAutotuneFamilyCache:
     """Satellite: cache keys must separate forward/fused/per-family variants
-    and survive the v2 key-schema bump."""
+    and survive the v2 -> v3 key-schema bumps."""
 
     def test_keys_do_not_collide(self, tmp_path):
         path = str(tmp_path / "cache.json")
@@ -381,7 +382,7 @@ class TestAutotuneFamilyCache:
         finally:
             autotune.clear_cache()
 
-    def test_sweep_round_trip_v2(self, tmp_path):
+    def test_sweep_round_trip_v3(self, tmp_path):
         path = str(tmp_path / "cache.json")
         autotune.clear_cache()
         try:
@@ -389,13 +390,58 @@ class TestAutotuneFamilyCache:
                                    repeats=1, candidates=(4, 8),
                                    cache_path=path, dist_id="lognormal")
             on_disk = json.load(open(path))
-            assert "v2:xla:F8:K3:T64:fused0:famlognormal" in on_disk
+            assert "v3:xla:F8:K3:T64:modefwd:famlognormal" in on_disk
             autotune.clear_cache()
             assert autotune.lookup(8, 3, 64, backend="xla",
                                    dist_id="lognormal",
                                    cache_path=path) == entry["block_f"]
         finally:
             autotune.clear_cache()
+
+    def test_v2_keys_migrate_with_mode_mapping(self, tmp_path):
+        """A v2 JSON cache keeps serving its swept winners after the v3
+        (mode-aware) bump: fused0 -> fwd, fused1 -> grad — and the new pgrad
+        mode never inherits a v2 entry (its working set is larger; a stale
+        fused block could overflow it)."""
+        path = str(tmp_path / "cache.json")
+        v2 = {"v2:xla:F8:K3:T64:fused0:famdrift": {"block_f": 4,
+                                                   "source": "sweep"},
+              "v2:xla:F8:K3:T64:fused1:famdrift": {"block_f": 2,
+                                                   "source": "sweep"}}
+        with open(path, "w") as f:
+            json.dump(v2, f)
+        autotune.clear_cache()
+        try:
+            assert autotune.lookup(8, 3, 64, backend="xla", fused=False,
+                                   dist_id="drift", cache_path=path) == 4
+            assert autotune.lookup(8, 3, 64, backend="xla", fused=True,
+                                   dist_id="drift", cache_path=path) == 2
+            bf_pgrad = autotune.lookup(8, 3, 64, backend="xla", fused=True,
+                                       dist_id="drift", params=True,
+                                       cache_path=path)
+            assert bf_pgrad == autotune.pick_block_f(
+                8, 3, 64, backend="xla", fused=True, dist_id="drift",
+                params=True)
+        finally:
+            autotune.clear_cache()
+
+    def test_pgrad_mode_needs_no_more_room_than_budget(self):
+        """The full-parameter launch's working set exceeds the W-grad one, so
+        the model's pgrad pick can only shrink — and must still fit VMEM."""
+        b_grad = autotune.vmem_bytes(64, 1024, 256, fused=True,
+                                     dist_id="lognormal")
+        b_pgrad = autotune.vmem_bytes(64, 1024, 256, fused=True,
+                                      dist_id="lognormal", params=True)
+        assert b_pgrad > b_grad
+        bf_g = autotune.pick_block_f(4096, 1024, 256, backend="pallas",
+                                     fused=True, dist_id="lognormal")
+        bf_p = autotune.pick_block_f(4096, 1024, 256, backend="pallas",
+                                     fused=True, dist_id="lognormal",
+                                     params=True)
+        assert bf_p <= bf_g
+        assert autotune.vmem_bytes(bf_p, 1024, 256, fused=True,
+                                   dist_id="lognormal", params=True) \
+            <= int(16 * 1024 * 1024 * 0.75)
 
     def test_drift_needs_smaller_fused_blocks(self):
         """Drift's four accumulators shrink the model's safe pick vs the

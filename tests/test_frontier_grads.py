@@ -121,15 +121,24 @@ class TestGradParity:
             fd = (f(wp) - f(wm)) / (2 * eps)
             np.testing.assert_allclose(g[i], fd, rtol=2e-2)
 
-    def test_mus_sigmas_are_solve_constants(self):
-        """Documented stop-gradient semantics: channel-stat cotangents are 0."""
+    def test_mus_sigmas_carry_real_cotangents(self):
+        """The closed estimation loop: channel-statistic cotangents are no
+        longer stop-grads — jax.grad of frontier_moments w.r.t. mus/sigmas
+        matches autodiff through the quadrature graph (the full battery,
+        families x impls x edges, lives in tests/test_sensitivity.py)."""
         mus, sigmas = _problem(4, seed=5)
         W = _candidates(3, 4)
         gm = jax.grad(lambda m: jnp.sum(
-            ops.frontier_moments(W, m, sigmas, num_t=128)[0]))(mus)
+            ops.frontier_moments(W, m, sigmas, num_t=512)[0]))(mus)
         gs = jax.grad(lambda s: jnp.sum(
-            ops.frontier_moments(W, mus, s, num_t=128)[1]))(sigmas)
-        assert not np.any(np.asarray(gm)) and not np.any(np.asarray(gs))
+            ops.frontier_moments(W, mus, s, num_t=512)[1]))(sigmas)
+        assert np.any(np.asarray(gm)) and np.any(np.asarray(gs))
+        am = jax.grad(lambda m: jnp.sum(
+            ref.frontier_grid_ref(W, m, sigmas, num_t=512)[0]))(mus)
+        as_ = jax.grad(lambda s: jnp.sum(
+            ref.frontier_grid_ref(W, mus, s, num_t=512)[1]))(sigmas)
+        assert _rel(gm, am) <= 1e-4
+        assert _rel(gs, as_) <= 1e-4
 
 
 class TestFusedKernel:
@@ -176,7 +185,7 @@ class TestAutotuneCache:
                                candidates=(4, 8), cache_path=path)
         assert entry["source"] == "sweep" and entry["block_f"] in (4, 8)
         on_disk = json.load(open(path))
-        key = "v2:xla:F8:K3:T64:fused0:famnormal"
+        key = "v3:xla:F8:K3:T64:modefwd:famnormal"
         assert on_disk[key]["block_f"] == entry["block_f"]
         autotune.clear_cache()
         assert autotune.lookup(8, 3, 64, backend="xla",
