@@ -1,0 +1,88 @@
+"""The paper's second scenario as a workflow DAG: a large file split over
+parallel network channels (heavy-tailed lognormal transfer times — the WAN
+regime), then reassembled/verified — a 2-stage split -> join StageDAG.
+
+Stage "transfer": K parallel network paths, each with its own per-MB
+(mu, sigma); the stage's completion is the slowest shard (the paper's join).
+Stage "assemble": a single integrity-check/reassembly channel released only
+when every shard has landed (the DAG edge).
+
+The joint solver optimizes the shard split for the END-TO-END makespan and
+the printout compares against the single-channel baseline (all bytes down
+the fastest path) and the equal split — the paper's Figs 5/6 story with the
+lognormal family and the composition layered on.
+
+Run:  PYTHONPATH=src python examples/file_transfer.py --trials 4000
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=4000,
+                    help="Monte-Carlo trials validating the composed moments")
+    ap.add_argument("--channels", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.sim import WorkflowSim
+    from repro.workflow import Stage, StageDAG, evaluate_dag, solve_dag
+
+    # per-MB transfer stats (seconds): one fast-but-jittery trans-Pacific
+    # path, progressively steadier overlay routes — the paper's measured
+    # heavy-tail regime, hence the lognormal family
+    k = args.channels
+    mus = np.linspace(16.0, 30.0, k)
+    sigmas = np.asarray([7.0] + [2.2] * (k - 1))[:k]
+    transfer = Stage("transfer", mus, sigmas, family="lognormal")
+    # reassembly + checksum: one local channel, fast and steady
+    assemble = Stage("assemble", np.asarray([3.0]), np.asarray([0.3]),
+                     family="lognormal")
+    dag = StageDAG([transfer, assemble], [("transfer", "assemble")])
+
+    dec = solve_dag(dag, lam_var=0.05, steps=150, restarts=2, num_t=1024)
+    w = dec.weights["transfer"]
+
+    # baselines: all bytes down the single fastest path / equal shards
+    single = np.zeros(k)
+    single[int(np.argmin(mus))] = 1.0
+    base = evaluate_dag(dag, {"transfer": single, "assemble": np.ones(1)})
+    equal = evaluate_dag(dag, {"transfer": np.full(k, 1.0 / k),
+                               "assemble": np.ones(1)})
+
+    print(f"paths: mu={mus.round(1).tolist()} "
+          f"sigma={sigmas.round(1).tolist()} (s per file, lognormal)")
+    print(f"optimized shard split: {np.round(w, 3).tolist()}")
+    rows = [("single fastest path", base), ("equal shards", equal),
+            ("joint DAG solve", dec)]
+    for name, d in rows:
+        print(f"  {name:22s} E[T]={d.makespan_mu:7.3f}s  "
+              f"Var[T]={d.makespan_var:7.3f}")
+    assert dec.makespan_mu < base.makespan_mu, "split must beat one channel"
+    assert dec.makespan_mu <= equal.makespan_mu + 1e-6
+
+    # Monte-Carlo validation of the composed prediction (release = shard
+    # max, assemble rides after — the discrete-event ground truth)
+    sim = WorkflowSim.from_dag(dag, seed=7)
+    rng = np.random.default_rng(11)
+    ts = [sim.run_dag_step(dag, dec.weights, rng=rng)[0]
+          for _ in range(args.trials)]
+    ts = np.asarray(ts)
+    rel = abs(ts.mean() - dec.makespan_mu) / dec.makespan_mu
+    print(f"MC check ({args.trials} trials): empirical E[T]={ts.mean():.3f}s "
+          f"Var={ts.var():.3f} (predicted {dec.makespan_mu:.3f}/"
+          f"{dec.makespan_var:.3f}, rel mu err {rel:.1%})")
+    speedup = base.makespan_mu / dec.makespan_mu
+    print(f"speedup vs single channel: {speedup:.2f}x "
+          f"(variance {base.makespan_var / max(dec.makespan_var, 1e-9):.1f}x"
+          f" lower)" if dec.makespan_var < base.makespan_var else
+          f"speedup vs single channel: {speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--execute", action="store_true",
                     help="actually run generation on tiny models")
+    # PR 4 estimation-loop knobs, exposed end-to-end: the balancer behind
+    # the batcher accepts these; the example now lets you drive them
+    ap.add_argument("--family", default="normal",
+                    choices=("normal", "lognormal", "drift", "auto"),
+                    help="completion-time family (auto = BIC-select online)")
+    ap.add_argument("--risk-lam", type=float, default=0.0,
+                    help="estimation-fragility weight in candidate scoring")
+    ap.add_argument("--adaptive-refresh", action="store_true",
+                    help="sensitivity-sized re-solve cadence")
+    ap.add_argument("--refresh-every", type=int, default=1,
+                    help="re-solve cadence (cap when adaptive)")
     args = ap.parse_args()
 
     import jax
@@ -41,7 +52,11 @@ def main():
     results = {}
     for policy in ("equal", "frontier"):
         sim = ClusterSim([Channel(24.0, 1.6), Channel(18.0, 4.8)], seed=11)
-        batcher = PartitionedBatcher(groups, lam=0.08, policy=policy, sim=sim)
+        batcher = PartitionedBatcher(groups, lam=0.08, policy=policy, sim=sim,
+                                     family=args.family,
+                                     risk_lam=args.risk_lam,
+                                     adaptive_refresh=args.adaptive_refresh,
+                                     refresh_every=args.refresh_every)
         rng = np.random.default_rng(0)
         lat = []
         for i in range(args.batches):
@@ -52,8 +67,10 @@ def main():
                 execute=args.execute and policy == "frontier" and i < 2)
             lat.append(t)
             if i % 20 == 0:
+                tick = batcher.last_tick
                 print(f"[{policy}] batch {i:3d}: split={counts.tolist()} "
-                      f"join={t:.2f}s")
+                      f"join={t:.2f}s family={tick['family']} "
+                      f"refresh={tick['effective_refresh']}")
         lat = np.asarray(lat[10:])
         results[policy] = lat
         print(f"[{policy}] mean={lat.mean():.3f}s var={lat.var():.4f} "

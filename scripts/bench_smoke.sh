@@ -15,6 +15,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.serve_trace --json --smoke
 
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.dag_scale --json --smoke
+
 python - <<'PY'
 import json
 
@@ -40,4 +43,17 @@ assert {"calm", "burst"} <= set(s["regimes"]), s["regimes"]
 print(f"serve trace smoke OK: {s['ticks']} ticks, "
       f"families {s['per_family_ticks']}, "
       f"latency mean {s['latency']['mean']:.3f}s p99 {s['latency']['p99']:.3f}s")
+
+g = json.load(open("BENCH_dag_scale_smoke.json"))
+assert g["bench"] == "dag_scale" and g["stages"] > 0
+# the joint solve must route every stage's moments through ONE stacked
+# launch per family (the workflow subsystem's acceptance contract) even at
+# smoke scale; the improvement margin is only asserted at full scale
+assert g["single_batched_path"], g["family_groups"]
+names = {e["name"] for e in g["entries"]}
+assert {"joint_solve_xla", "greedy_solve_xla"} <= names, names
+print(f"dag scale smoke OK: {g['stages']} stages x K={g['channels']}, "
+      f"family groups {g['family_groups']}, "
+      f"joint vs greedy {g['improvement_pct']}% "
+      f"(realized {g['realized_improvement_pct']}%)")
 PY

@@ -34,15 +34,17 @@ import json
 
 # single source: the schema each benchmark promises is declared next to its
 # writer and imported here — no hand-copied key lists to drift
-from benchmarks import cluster_scale, serve_trace
+from benchmarks import cluster_scale, dag_scale, serve_trace
 
 SCHEMAS = {
     "cluster_scale": cluster_scale.SCHEMA_KEYS,
     "serve_trace": serve_trace.SCHEMA_KEYS,
+    "dag_scale": dag_scale.SCHEMA_KEYS,
 }
 ENTRY_KEYS = {
     "cluster_scale": cluster_scale.ENTRY_KEYS,
     "serve_trace": serve_trace.ENTRY_KEYS,
+    "dag_scale": dag_scale.ENTRY_KEYS,
 }
 
 paths = sorted(glob.glob("BENCH_*.json"))

@@ -803,14 +803,21 @@ def resolve_family(family, k: int) -> Tuple[str, np.ndarray]:
     Accepts a family name, a ChannelFamily instance, a state_dict, or an
     already-lowered ``(dist_id, extra)`` pair — the latter passes traced
     ``extra`` arrays straight through, which is what jitted solvers use to
-    avoid retracing when only the family parameters move.
+    avoid retracing when only the family parameters move. A pre-lowered
+    ``extra`` may also be the per-row (E, F, K) stack (each candidate row
+    its own fleet — the workflow solver's stage axis).
     """
     if isinstance(family, tuple) and len(family) == 2:
         dist_id, extra = family
         _check_dist(dist_id)
-        if tuple(extra.shape) != (extra_rows(dist_id), k):
+        shape = tuple(extra.shape)
+        ok2 = shape == (extra_rows(dist_id), k)
+        ok3 = (len(shape) == 3 and shape[0] == extra_rows(dist_id)
+               and shape[2] == k)
+        if not (ok2 or ok3):
             raise ValueError(f"extra for {dist_id!r} must be "
-                             f"({extra_rows(dist_id)}, {k}), got {extra.shape}")
+                             f"({extra_rows(dist_id)}, {k}) or "
+                             f"({extra_rows(dist_id)}, F, {k}), got {shape}")
         return dist_id, extra
     fam = get_family(family)
     return fam.dist_id, fam.extra(k)

@@ -75,9 +75,14 @@ def _mode(fused: bool, params: bool) -> str:
 
 
 def _key(F: int, K: int, num_t: int, backend: str, fused: bool,
-         dist_id: str = "normal", params: bool = False) -> str:
+         dist_id: str = "normal", params: bool = False,
+         stacked: bool = False) -> str:
+    # the stacked (per-row statistics) layout holds 2+E more (bf, K) input
+    # tiles per program; its suffix is additive so every existing v3 key
+    # stays valid verbatim — no migration needed
+    suffix = ":stk" if stacked else ""
     return (f"{_KEY_VERSION}:{backend}:F{F}:K{K}:T{num_t}"
-            f":mode{_mode(fused, params)}:fam{dist_id}")
+            f":mode{_mode(fused, params)}:fam{dist_id}{suffix}")
 
 
 _V2_RE = re.compile(r"^v2:(?P<body>.*):fused(?P<fused>[01]):fam(?P<fam>\w+)$")
@@ -120,7 +125,8 @@ def _mix_tiles(dist_id: str) -> int:
 
 
 def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
-               dist_id: str = "normal", params: bool = False) -> int:
+               dist_id: str = "normal", params: bool = False,
+               stacked: bool = False) -> int:
     """Working-set model of one kernel program, in bytes (f32).
 
     Forward: W/means/stds (bf, K) tiles + ts/logF/surv/tsurv (bf, T) tiles.
@@ -132,10 +138,16 @@ def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
     the family is part of the autotune key. Full-parameter mode (``params``)
     widens the basis again (lognormal's z feature: up to three accumulator
     pairs, six live (bf, K) accumulators) and adds the six channel-statistic
-    gradient output tiles — the ``pgrad`` key mode.
+    gradient output tiles — the ``pgrad`` key mode. The ``stacked``
+    (per-row statistics) layout grows the mus/sigmas tiles from (1, K) to
+    (bf, K) and the extra tile to (E, bf, K): 1 + E more (bf, K)-equivalents
+    per program (one of the two stat tiles was already counted).
     """
     acc = 2 * _grad_acc_pairs(dist_id, params)  # accumulators + grad outputs
     per_fk = (6 + acc + (6 if params else 0)) if fused else 3
+    if stacked:
+        from repro.core.distributions import extra_rows
+        per_fk += 1 + extra_rows(dist_id)
     per_ft = (6 if fused else 4) + _mix_tiles(dist_id)
     return 4 * block_f * (per_fk * num_k + per_ft * num_t)
 
@@ -144,27 +156,31 @@ def _xla_block_bytes(block_f: int, num_k: int, num_t: int, fused: bool,
                      dist_id: str = "normal", params: bool = False) -> int:
     # the pure-jnp path materializes (bf, T, K) zscore/cdf/phi intermediates;
     # the mixture family adds per-component copies of them, the z-feature
-    # accumulators of full-parameter mode one more
+    # accumulators of full-parameter mode one more. The stacked layout's
+    # extra stat rows are (bf, K) — noise against these and not modeled.
     live = (5 if fused else 3) + _mix_tiles(dist_id) + (1 if params else 0)
     return 4 * block_f * num_t * num_k * live
 
 
 def _fits(block_f: int, K: int, num_t: int, backend: str, fused: bool,
-          dist_id: str = "normal", params: bool = False) -> bool:
+          dist_id: str = "normal", params: bool = False,
+          stacked: bool = False) -> bool:
     if backend == "xla":
         return (_xla_block_bytes(block_f, K, num_t, fused, dist_id, params)
                 <= _XLA_BLOCK_BUDGET_BYTES)
-    return (vmem_bytes(block_f, K, num_t, fused, dist_id, params)
+    return (vmem_bytes(block_f, K, num_t, fused, dist_id, params, stacked)
             <= _VMEM_BUDGET_BYTES)
 
 
 def pick_block_f(F: int, K: int, num_t: int, backend: str = "xla",
                  fused: bool = False,
                  candidates: Sequence[int] = BLOCK_F_CANDIDATES,
-                 dist_id: str = "normal", params: bool = False) -> int:
+                 dist_id: str = "normal", params: bool = False,
+                 stacked: bool = False) -> int:
     """Largest candidate block_f that fits the backend's budget model."""
     feasible = [bf for bf in candidates
-                if _fits(bf, K, num_t, backend, fused, dist_id, params)]
+                if _fits(bf, K, num_t, backend, fused, dist_id, params,
+                         stacked)]
     pick = max(feasible) if feasible else min(candidates)
     return max(min(pick, F), 1)
 
@@ -187,22 +203,25 @@ def _load_json(cache_path: str) -> None:
 
 def lookup(F: int, K: int, num_t: int, backend: str = "xla",
            fused: bool = False, cache_path: Optional[str] = None,
-           dist_id: str = "normal", params: bool = False) -> int:
+           dist_id: str = "normal", params: bool = False,
+           stacked: bool = False) -> int:
     """block_f for a launch shape: in-process cache -> JSON cache -> model.
 
     This is what ``ops.frontier_moments`` consults when ``block_f`` is not
     explicitly passed. Never runs a timed sweep itself (deterministic and
     trace-safe); :func:`sweep` feeds better-than-model entries into the same
     caches. ``params`` selects the full-parameter-adjoint (``pgrad``) launch
-    mode the estimation loop's custom VJP uses.
+    mode the estimation loop's custom VJP uses; ``stacked`` the per-row
+    statistics layout (its own key suffix — a block tuned for broadcast
+    stats must not be handed to the larger stacked working set).
     """
     _load_json(cache_path or default_cache_path())
-    key = _key(F, K, num_t, backend, fused, dist_id, params)
+    key = _key(F, K, num_t, backend, fused, dist_id, params, stacked)
     hit = _CACHE.get(key)
     if hit is not None:
         return max(min(int(hit["block_f"]), F), 1)
     bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id,
-                      params=params)
+                      params=params, stacked=stacked)
     _CACHE[key] = {"block_f": bf, "source": "model"}
     return bf
 

@@ -158,15 +158,17 @@ def _check_block(F: int, block_f: int) -> None:
 
 
 def _slice_k(arr, kk):
-    return jax.lax.dynamic_slice_in_dim(arr, kk, 1, axis=1)
+    # channels always live on the LAST axis: (bf, K) weight/stat tiles,
+    # (E, K) shared extras and (E, bf, K) per-row extras all slice the same
+    return jax.lax.dynamic_slice_in_dim(arr, kk, 1, axis=arr.ndim - 1)
 
 
 def _frontier_kernel(w_ref, mu_ref, sg_ref, ex_ref, mu_out_ref, var_out_ref, *,
                      num_t: int, z: float, num_k: int, dist_id: str):
     w = w_ref[...]            # (bf, K)
-    mus = mu_ref[...]         # (1, K)
-    sgs = sg_ref[...]         # (1, K)
-    ex = ex_ref[...]          # (E, K)
+    mus = mu_ref[...]         # (1, K) shared | (bf, K) per-row
+    sgs = sg_ref[...]         # (1, K) shared | (bf, K) per-row
+    ex = ex_ref[...]          # (E, K) shared | (E, bf, K) per-row
     means_eff, stds_eff = dists.family_effective_moments(dist_id, w, mus, sgs, ex)
 
     tmax = jnp.maximum(jnp.max(means_eff + z * stds_eff, axis=-1,
@@ -192,14 +194,29 @@ def _frontier_kernel(w_ref, mu_ref, sg_ref, ex_ref, mu_out_ref, var_out_ref, *,
     var_out_ref[...] = jnp.maximum(m2 - mu * mu, 0.0)
 
 
-def _family_extra(dist_id: str, extra, K: int):
+def _family_extra(dist_id: str, extra, K: int, F=None):
+    """Validated (E, K) extra, or (E, F, K) when statistics are per-row."""
+    E = dists.extra_rows(dist_id)
     if extra is None:
-        extra = jnp.zeros((dists.extra_rows(dist_id), K), jnp.float32)
+        extra = jnp.zeros((E, K) if F is None else (E, F, K), jnp.float32)
     extra = jnp.asarray(extra, jnp.float32)
-    if extra.shape != (dists.extra_rows(dist_id), K):
-        raise ValueError(f"extra for {dist_id!r} must be "
-                         f"({dists.extra_rows(dist_id)}, {K}), got {extra.shape}")
+    want = (E, K) if F is None else (E, F, K)
+    if extra.shape != want:
+        raise ValueError(f"extra for {dist_id!r} must be {want}, "
+                         f"got {extra.shape}")
     return extra
+
+
+def _stat_specs(F: int, K: int, E: int, block_f: int, per_row: bool):
+    """BlockSpecs for (mus, sigmas, extra): shared stats broadcast one tile
+    to every program; per-row stats tile along F exactly like W."""
+    if per_row:
+        return [pl.BlockSpec((block_f, K), lambda i: (i, 0)),
+                pl.BlockSpec((block_f, K), lambda i: (i, 0)),
+                pl.BlockSpec((E, block_f, K), lambda i: (0, i, 0))]
+    return [pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((E, K), lambda i: (0, 0))]
 
 
 @functools.partial(jax.jit, static_argnames=("num_t", "z", "block_f",
@@ -211,16 +228,23 @@ def frontier_grid(W, mus, sigmas, extra=None, *, num_t: int = 1024,
 
     ``dist_id`` statically selects the completion-time family; ``extra`` is
     its (E, K) per-channel shape-parameter array (zeros when the family has
-    none). F must be divisible by block_f (ops.py pads with copies of row 0
+    none). ``mus``/``sigmas`` may also be (F, K) — per-row channel
+    statistics, the stage-stacked layout where every candidate row carries
+    its own fleet (``extra`` then (E, F, K)); the stat tiles ride the same
+    F-blocking as W instead of broadcasting one tile to every program. F
+    must be divisible by block_f (ops.py pads with copies of row 0
     otherwise).
     """
     F, K = W.shape
     block_f = min(block_f, F)
     _check_block(F, block_f)
     W = W.astype(jnp.float32)
-    mus2 = jnp.asarray(mus, jnp.float32)[None, :]
-    sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
-    ex = _family_extra(dist_id, extra, K)
+    mus = jnp.asarray(mus, jnp.float32)
+    per_row = mus.ndim == 2
+    mus2 = mus if per_row else mus[None, :]
+    sgs2 = jnp.asarray(sigmas, jnp.float32)
+    sgs2 = sgs2 if per_row else sgs2[None, :]
+    ex = _family_extra(dist_id, extra, K, F if per_row else None)
     E = ex.shape[0]
 
     kernel = functools.partial(_frontier_kernel, num_t=num_t, z=z, num_k=K,
@@ -230,10 +254,7 @@ def frontier_grid(W, mus, sigmas, extra=None, *, num_t: int = 1024,
         grid=(F // block_f,),
         in_specs=[
             pl.BlockSpec((block_f, K), lambda i: (i, 0)),
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((E, K), lambda i: (0, 0)),
-        ],
+        ] + _stat_specs(F, K, E, block_f, per_row),
         out_specs=[
             pl.BlockSpec((block_f,), lambda i: (i,)),
             pl.BlockSpec((block_f,), lambda i: (i,)),
@@ -263,9 +284,9 @@ def _frontier_grad_kernel(w_ref, mu_ref, sg_ref, ex_ref,
     epilogue arithmetic and output tiles, not a third K-loop.
     """
     w = w_ref[...]            # (bf, K)
-    mus = mu_ref[...]         # (1, K)
-    sgs = sg_ref[...]         # (1, K)
-    ex = ex_ref[...]          # (E, K)
+    mus = mu_ref[...]         # (1, K) shared | (bf, K) per-row
+    sgs = sg_ref[...]         # (1, K) shared | (bf, K) per-row
+    ex = ex_ref[...]          # (E, K) shared | (E, bf, K) per-row
     means_eff, stds_eff = dists.family_effective_moments(dist_id, w, mus, sgs, ex)
     reach = means_eff + z * stds_eff
 
@@ -388,16 +409,22 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
     ``(dmu_dmus, dvar_dmus, dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)``,
     all (F, K), ``d*_dex`` being extra row 0 (drift's rho; zeros for families
     without differentiable extra) — the full-parameter mode the estimation
-    loop's custom VJP rides. F must be divisible by block_f (ops.py pads
-    with copies of row 0 otherwise).
+    loop's custom VJP rides. ``mus``/``sigmas`` may be (F, K) per-row
+    statistics (``extra`` then (E, F, K)) exactly as in
+    :func:`frontier_grid`; the adjoint outputs are per-row either way, so
+    only the input tiling changes. F must be divisible by block_f (ops.py
+    pads with copies of row 0 otherwise).
     """
     F, K = W.shape
     block_f = min(block_f, F)
     _check_block(F, block_f)
     W = W.astype(jnp.float32)
-    mus2 = jnp.asarray(mus, jnp.float32)[None, :]
-    sgs2 = jnp.asarray(sigmas, jnp.float32)[None, :]
-    ex = _family_extra(dist_id, extra, K)
+    mus = jnp.asarray(mus, jnp.float32)
+    per_row = mus.ndim == 2
+    mus2 = mus if per_row else mus[None, :]
+    sgs2 = jnp.asarray(sigmas, jnp.float32)
+    sgs2 = sgs2 if per_row else sgs2[None, :]
+    ex = _family_extra(dist_id, extra, K, F if per_row else None)
     E = ex.shape[0]
 
     kernel = functools.partial(_frontier_grad_kernel, num_t=num_t, z=z,
@@ -409,10 +436,7 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
         grid=(F // block_f,),
         in_specs=[
             pl.BlockSpec((block_f, K), lambda i: (i, 0)),
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((E, K), lambda i: (0, 0)),
-        ],
+        ] + _stat_specs(F, K, E, block_f, per_row),
         out_specs=[
             pl.BlockSpec((block_f,), lambda i: (i,)),
             pl.BlockSpec((block_f,), lambda i: (i,)),

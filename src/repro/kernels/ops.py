@@ -192,20 +192,62 @@ def rmsnorm(x, w, *, eps: float = 1e-6, impl: str = "xla"):
 
 def _resolve_block_f(F: int, K: int, num_t: int, impl: str,
                      block_f: Optional[int], fused: bool,
-                     dist_id: str = "normal", params: bool = False) -> int:
+                     dist_id: str = "normal", params: bool = False,
+                     stacked: bool = False) -> int:
     """Explicit block_f wins; otherwise consult the autotune cache/model."""
     if block_f is not None:
         return max(min(block_f, F), 1)
     return _at.lookup(F, K, num_t, backend=impl, fused=fused, dist_id=dist_id,
-                      params=params)
+                      params=params, stacked=stacked)
 
 
 def _resolve_family(family, K: int):
-    """Lower a family spec to (static dist_id, traced (E, K) extra array)."""
+    """Lower a family spec to (static dist_id, traced extra array).
+
+    ``extra`` is (E, K) for a shared fleet, or (E, F, K) when the caller
+    pre-lowered a per-row stack (the workflow solver's stage axis)."""
     from repro.core.distributions import resolve_family
 
     dist_id, extra = resolve_family(family, K)
     return dist_id, jnp.asarray(extra, jnp.float32)
+
+
+def _stack_extra(extra, F: int):
+    """Lift a shared (E, K) extra to the per-row (E, F, K) layout."""
+    if extra.ndim == 3:
+        return extra
+    return jnp.broadcast_to(extra[:, None, :],
+                            (extra.shape[0], F, extra.shape[1]))
+
+
+def _pad_rows(pad, W, mus, sigmas, extra):
+    """Pad the candidate axis with copies of row 0 (sliced off after).
+
+    Per-row statistics (mus.ndim == 2) ride the same padding so padded rows
+    stay self-consistent (they recompute row 0's stage under row 0's fleet).
+    """
+    W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
+    if mus.ndim == 2:
+        mus = jnp.concatenate([mus, jnp.tile(mus[:1], (pad, 1))], 0)
+        sigmas = jnp.concatenate([sigmas, jnp.tile(sigmas[:1], (pad, 1))], 0)
+        extra = jnp.concatenate(
+            [extra, jnp.tile(extra[:, :1], (1, pad, 1))], 1)
+    return W, mus, sigmas, extra
+
+
+def _row_blocks(bf, W, mus, sigmas, extra):
+    """Reshape aligned rows into lax.map blocks + a per-block ref thunk."""
+    K = W.shape[1]
+    if mus.ndim == 2:
+        # stats chunk alongside W; extra goes (E, F, K) -> (nb, bf, E, K)
+        xs = (W.reshape(-1, bf, K), mus.reshape(-1, bf, K),
+              sigmas.reshape(-1, bf, K),
+              jnp.moveaxis(extra, 0, 1).reshape(-1, bf, extra.shape[0], K))
+        unpack = lambda b: (b[0], b[1], b[2], jnp.moveaxis(b[3], 1, 0))
+    else:
+        xs = (W.reshape(-1, bf, K),)
+        unpack = lambda b: (b[0], mus, sigmas, extra)
+    return xs, unpack
 
 
 def _moments_fwd(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
@@ -217,15 +259,18 @@ def _moments_fwd(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id):
             return ref.frontier_grid_ref(W, mus, sigmas, num_t=num_t, z=z,
                                          dist_id=dist_id, extra=extra)
         if pad:
-            W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
-        blocks = W.reshape(-1, bf, W.shape[1])
-        mu, var = jax.lax.map(
-            lambda wb: ref.frontier_grid_ref(wb, mus, sigmas, num_t=num_t,
-                                             z=z, dist_id=dist_id, extra=extra),
-            blocks)
+            W, mus, sigmas, extra = _pad_rows(pad, W, mus, sigmas, extra)
+        xs, unpack = _row_blocks(bf, W, mus, sigmas, extra)
+
+        def block(b):
+            wb, mb, sb, eb = unpack(b)
+            return ref.frontier_grid_ref(wb, mb, sb, num_t=num_t, z=z,
+                                         dist_id=dist_id, extra=eb)
+
+        mu, var = jax.lax.map(block, xs)
         return mu.reshape(-1)[:F], var.reshape(-1)[:F]
     if pad:
-        W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
+        W, mus, sigmas, extra = _pad_rows(pad, W, mus, sigmas, extra)
     mu, var = _fg.frontier_grid(W, mus, sigmas, extra, num_t=num_t, z=z,
                                 block_f=bf, dist_id=dist_id,
                                 interpret=(impl == "pallas_interpret"))
@@ -248,18 +293,21 @@ def _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id,
                 W, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id,
                 extra=extra, param_grads=param_grads)
         if pad:
-            W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
-        blocks = W.reshape(-1, bf, W.shape[1])
-        outs = jax.lax.map(
-            lambda wb: ref.frontier_grid_with_grads_ref(
-                wb, mus, sigmas, num_t=num_t, z=z, dist_id=dist_id,
-                extra=extra, param_grads=param_grads),
-            blocks)
+            W, mus, sigmas, extra = _pad_rows(pad, W, mus, sigmas, extra)
+        xs, unpack = _row_blocks(bf, W, mus, sigmas, extra)
+
+        def block(b):
+            wb, mb, sb, eb = unpack(b)
+            return ref.frontier_grid_with_grads_ref(
+                wb, mb, sb, num_t=num_t, z=z, dist_id=dist_id,
+                extra=eb, param_grads=param_grads)
+
+        outs = jax.lax.map(block, xs)
         K = W.shape[1]
         return tuple(o.reshape(-1)[:F] if o.ndim == 2
                      else o.reshape(-1, K)[:F] for o in outs)
     if pad:
-        W = jnp.concatenate([W, jnp.tile(W[:1], (pad, 1))], 0)
+        W, mus, sigmas, extra = _pad_rows(pad, W, mus, sigmas, extra)
     outs = _fg.frontier_grid_with_grads(
         W, mus, sigmas, extra, num_t=num_t, z=z, block_f=bf, dist_id=dist_id,
         interpret=(impl == "pallas_interpret"), param_grads=param_grads)
@@ -289,6 +337,15 @@ def _frontier_moments_vjp_bwd(num_t, impl, bfs, z, dist_id, res, cts):
     (dmu, dvar, dmu_m, dvar_m, dmu_s, dvar_s, dmu_e, dvar_e, extra) = res
     g_mu, g_var = cts
     dW = g_mu[:, None] * dmu + g_var[:, None] * dvar
+    if extra.ndim == 3:
+        # per-row statistics (the stage-stacked layout): every row owns its
+        # fleet, so the cotangents stay per-row — no cross-row reduction
+        d_mus = g_mu[:, None] * dmu_m + g_var[:, None] * dvar_m
+        d_sigmas = g_mu[:, None] * dmu_s + g_var[:, None] * dvar_s
+        d_extra = jnp.zeros_like(extra)
+        d_extra = d_extra.at[0].set(g_mu[:, None] * dmu_e
+                                    + g_var[:, None] * dvar_e)
+        return dW, d_mus, d_sigmas, d_extra
     # channel statistics are shared across candidate rows: sum the per-row
     # adjoints against the output cotangents
     d_mus = g_mu @ dmu_m + g_var @ dvar_m
@@ -337,6 +394,15 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     arXiv:1511.00613). The empirical family's mixture parameters remain
     solve constants (re-fit from data, never descended): their cotangents
     are zero by contract.
+
+    Stage-stacked layout: ``mus``/``sigmas`` may also be (F, K) — each
+    candidate row carries its OWN channel fleet (and the family's ``extra``
+    may be (E, F, K) per-row). This is what lets the workflow subsystem
+    evaluate every stage of a DAG — different fleets, one family — as rows
+    of a single launch instead of a per-stage Python loop over kernel
+    launches. A shared (E, K) ``extra`` combined with per-row mus/sigmas is
+    broadcast to the per-row layout here. The VJP keeps the per-row
+    cotangent structure (no cross-row reduction for per-row statistics).
     """
     _check(impl)
     W = jnp.asarray(W, jnp.float32)
@@ -344,6 +410,9 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     sigmas = jnp.asarray(sigmas, jnp.float32)
     F, K = W.shape
     dist_id, extra = _resolve_family(family, K)
+    stacked = mus.ndim == 2
+    if stacked:
+        extra = _stack_extra(extra, F)
     # resolve BOTH launch shapes up front: the primal runs the forward
     # kernel, but under jax.grad the VJP's forward pass runs the fused
     # full-parameter one, whose working set is ~4x larger (smaller safe
@@ -352,9 +421,9 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     # caller sized the block they asked for, not the 4x-bigger one
     # differentiation swaps in.
     bf_fwd = _resolve_block_f(F, K, num_t, impl, block_f, fused=False,
-                              dist_id=dist_id)
+                              dist_id=dist_id, stacked=stacked)
     bf_fused = _resolve_block_f(F, K, num_t, impl, None, fused=True,
-                                dist_id=dist_id, params=True)
+                                dist_id=dist_id, params=True, stacked=stacked)
     if block_f is not None:
         bf_fused = min(max(min(block_f, F), 1), bf_fused)
     return _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl,
@@ -378,7 +447,9 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
 
     (``d*_dex`` = extra row 0, drift's ``rho``; zeros for other families) —
     the surface ``core.sensitivity`` and the posterior-sensitivity analysis
-    consume. Family/padding/autotune glue matches :func:`frontier_moments`;
+    consume. Family/padding/autotune glue matches :func:`frontier_moments`,
+    including the stage-stacked per-row statistics layout (``mus``/``sigmas``
+    (F, K), ``extra`` (E, F, K)) the workflow solver's joint PGD consumes;
     the two gradient modes autotune independently (``grad`` vs ``pgrad``
     cache keys — the parameter mode's working set is larger).
     """
@@ -387,8 +458,12 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
     dist_id, extra = _resolve_family(family, W.shape[1])
+    stacked = mus.ndim == 2
+    if stacked:
+        extra = _stack_extra(extra, W.shape[0])
     bf = _resolve_block_f(W.shape[0], W.shape[1], num_t, impl, block_f,
-                          fused=True, dist_id=dist_id, params=param_grads)
+                          fused=True, dist_id=dist_id, params=param_grads,
+                          stacked=stacked)
     return _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id,
                           param_grads=param_grads)
 

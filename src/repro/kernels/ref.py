@@ -35,17 +35,34 @@ def _family_args(dist_id, extra, K):
     return jnp.asarray(extra, jnp.float32)
 
 
+def _stat_bcast(mus, sigmas, extra):
+    """Broadcast shapes for the (F, T, K) grid calls.
+
+    Shared statistics (``mus``/``sigmas`` (K,), ``extra`` (E, K)) broadcast
+    against the (F, T, K) grid as-is. Per-row statistics — the stage-stacked
+    layout where row f carries its own channel fleet: ``mus``/``sigmas``
+    (F, K), ``extra`` (E, F, K) — need an explicit time axis inserted so the
+    row axis lines up with F rather than T.
+    """
+    if mus.ndim == 2:
+        return mus[:, None, :], sigmas[:, None, :], extra[:, :, None, :]
+    return mus, sigmas, extra
+
+
 def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0,
                       dist_id: str = "normal", extra=None):
     """(mu, var) of the joint max-completion time for each candidate split.
 
-    W: (F, K) rows on the simplex; mus/sigmas: (K,); the per-channel
-    completion-time distribution is the family named by static ``dist_id``
-    with per-channel shape parameters ``extra`` ((E, K), see
-    ``core.distributions``). Per-candidate integration grid
-    [0, max_i(mean_i(w) + z*std_i(w))], num_t pts, on the family's effective
-    moments. Mirrors repro.core.maxstat.max_moments_quad but with a per-row
-    grid so the whole batch is one fused computation (the kernel's contract).
+    W: (F, K) rows on the simplex; mus/sigmas: (K,) shared across rows, or
+    (F, K) per-row (the stage-stacked layout: every candidate row carries its
+    own channel fleet — what lets one launch serve a whole workflow DAG); the
+    per-channel completion-time distribution is the family named by static
+    ``dist_id`` with per-channel shape parameters ``extra`` ((E, K), or
+    (E, F, K) per-row, see ``core.distributions``). Per-candidate integration
+    grid [0, max_i(mean_i(w) + z*std_i(w))], num_t pts, on the family's
+    effective moments. Mirrors repro.core.maxstat.max_moments_quad but with a
+    per-row grid so the whole batch is one fused computation (the kernel's
+    contract).
     """
     W = jnp.asarray(W, jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
@@ -56,8 +73,9 @@ def frontier_grid_ref(W, mus, sigmas, num_t: int = 1024, z: float = 10.0,
     tmax = jnp.maximum(jnp.max(means_eff + z * stds_eff, axis=-1), 1e-12)
     ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
 
+    mus_b, sgs_b, ex_b = _stat_bcast(mus, sigmas, extra)
     cdf = dists.family_cdf(dist_id, ts[:, :, None], W[:, None, :],
-                           mus, sigmas, extra)                   # (F, T, K)
+                           mus_b, sgs_b, ex_b)                   # (F, T, K)
     logF = jnp.sum(jnp.log(jnp.clip(cdf, _CDF_FLOOR, 1.0)), axis=-1)  # (F, T)
     surv = 1.0 - jnp.exp(logF)
 
@@ -75,10 +93,13 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     """Fused oracle: ``(mu, var, dmu_dW, dvar_dW)`` for candidate splits W.
 
     Same forward contract as :func:`frontier_grid_ref` (family selected by
-    static ``dist_id``), plus the analytic adjoints of both moments w.r.t.
-    every split weight, computed in the same pass — the semantics the fused
-    Pallas kernel must match and the function the ``frontier_moments`` custom
-    VJP rides.
+    static ``dist_id``; ``mus``/``sigmas``/``extra`` may be shared across
+    rows or per-row exactly as there), plus the analytic adjoints of both
+    moments w.r.t. every split weight, computed in the same pass — the
+    semantics the fused Pallas kernel must match and the function the
+    ``frontier_moments`` custom VJP rides. Per-row statistics change nothing
+    in the adjoint math: every contraction is already per-row, the shared
+    case was just broadcasting one fleet over all rows.
 
     With ``param_grads=True`` the adjoint basis widens to the full channel
     statistics and the return is the 10-tuple
@@ -124,8 +145,9 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
     tmax = jnp.maximum(amax, 1e-12)
     ts = tmax[:, None] * jnp.linspace(0.0, 1.0, num_t)[None, :]  # (F, T)
 
+    mus_b, sgs_b, ex_b = _stat_bcast(mus, sigmas, extra)
     cdf_raw, D, ok, zsc = dists.family_adjoint_parts(
-        dist_id, ts[:, :, None], W[:, None, :], mus, sigmas, extra)  # (F,T,K)
+        dist_id, ts[:, :, None], W[:, None, :], mus_b, sgs_b, ex_b)  # (F,T,K)
     cdf = jnp.where(ok, cdf_raw,
                     dists.point_mass_cdf(ts[:, :, None], means_eff[:, None, :]))
     Cc = jnp.clip(cdf, _CDF_FLOOR, 1.0)

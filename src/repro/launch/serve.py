@@ -25,6 +25,22 @@ def main() -> None:
                     choices=("frontier", "equal", "inverse_mu"))
     ap.add_argument("--execute", action="store_true",
                     help="run real tiny-model generation per group")
+    # closed-estimation-loop knobs (PR 4), threaded end-to-end into the
+    # batcher's balancer: online family selection, risk-adjusted candidate
+    # scoring, sensitivity-sized refresh cadence
+    ap.add_argument("--family", default="normal",
+                    choices=("normal", "lognormal", "drift", "auto"),
+                    help="completion-time family for the frontier solve "
+                         "(auto = online BIC selection with hysteresis)")
+    ap.add_argument("--risk-lam", type=float, default=0.0,
+                    help="fragility weight: candidates scored mu + lam var "
+                         "+ risk_lam * estimation-fragility")
+    ap.add_argument("--adaptive-refresh", action="store_true",
+                    help="size the re-solve cadence by posterior "
+                         "sensitivity instead of a fixed refresh_every")
+    ap.add_argument("--refresh-every", type=int, default=1,
+                    help="re-solve cadence cap (the adaptive mode "
+                         "stretches toward this as estimates firm up)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,7 +53,10 @@ def main() -> None:
             g.engine = ServeEngine(m, cfg)
             g.params = m.init(jax.random.PRNGKey(0))
     sim = ClusterSim([Channel(mu=20.0, sigma=2.0), Channel(mu=14.0, sigma=5.0)])
-    b = PartitionedBatcher(groups, policy=args.policy, sim=sim)
+    b = PartitionedBatcher(groups, policy=args.policy, sim=sim,
+                           family=args.family, risk_lam=args.risk_lam,
+                           adaptive_refresh=args.adaptive_refresh,
+                           refresh_every=args.refresh_every)
     lat = []
     rng = np.random.default_rng(0)
     for i in range(args.batches):
@@ -47,9 +66,13 @@ def main() -> None:
                                    execute=args.execute)
         lat.append(t)
         if i % 10 == 0:
-            print(f"batch {i:3d} split={counts.tolist()} join={t:.2f}s")
+            tick = b.last_tick
+            print(f"batch {i:3d} split={counts.tolist()} join={t:.2f}s "
+                  f"family={tick['family']} "
+                  f"refresh={tick['effective_refresh']}")
     lat = np.asarray(lat)
-    print(f"policy={args.policy}: mean join {lat.mean():.3f}s  "
+    print(f"policy={args.policy} family={args.family} "
+          f"risk_lam={args.risk_lam}: mean join {lat.mean():.3f}s  "
           f"var {lat.var():.4f}  p99 {np.percentile(lat, 99):.3f}s")
 
 

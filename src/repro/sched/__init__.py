@@ -1,5 +1,7 @@
 """Scheduler layer: the paper's partitioner wired into the runtime."""
-from .balancer import UncertaintyAwareBalancer, integerize
+from .balancer import (UncertaintyAwareBalancer, WorkflowBalancer,
+                       integerize)
 from .straggler import StragglerPolicy
 
-__all__ = ["UncertaintyAwareBalancer", "integerize", "StragglerPolicy"]
+__all__ = ["UncertaintyAwareBalancer", "WorkflowBalancer", "integerize",
+           "StragglerPolicy"]

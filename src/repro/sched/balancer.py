@@ -45,7 +45,23 @@ from ..core import (NIGState, get_family, nig_init, nig_point_estimates,
                     optimize_2ch, optimize_weights, predict_moments,
                     fit_selected_family, score_families)
 
-__all__ = ["integerize", "UncertaintyAwareBalancer"]
+__all__ = ["integerize", "UncertaintyAwareBalancer", "WorkflowBalancer"]
+
+
+def _cadence_from_fragility(rel_fragility: float, cap: int,
+                            target_rel: float) -> int:
+    """Map relative solve fragility to a refresh cadence in [1, cap].
+
+    The solve drifts roughly in proportion to the estimation error, so
+    cadence ~ tolerated drift / current fragility: a solve whose prediction
+    is (say) 10% uncertain refreshes every tick, one whose posteriors have
+    firmed to 0.1% stretches to the configured maximum. Shared by the
+    single-workload and workflow balancers — one sizing rule.
+    """
+    cap = max(cap, 1)
+    if rel_fragility <= 0.0:
+        return cap
+    return int(np.clip(round(target_rel / rel_fragility), 1, cap))
 
 
 def integerize(weights: np.ndarray, total: int) -> np.ndarray:
@@ -215,19 +231,9 @@ class UncertaintyAwareBalancer:
         return json.dumps([fam.dist_id, items], sort_keys=True)
 
     def _size_refresh(self, rel_fragility: float):
-        """Map relative fragility to a cadence in [1, refresh_every].
-
-        The solve drifts roughly in proportion to the estimation error, so
-        cadence ~ tolerated drift / current fragility: a solve whose
-        prediction is (say) 10% uncertain refreshes every tick, one whose
-        posteriors have firmed to 0.1% stretches to the configured maximum.
-        """
-        cap = max(self.refresh_every, 1)
-        if rel_fragility <= 0.0:
-            self._effective_refresh = cap
-            return
-        self._effective_refresh = int(np.clip(
-            round(self.refresh_target_rel / rel_fragility), 1, cap))
+        """Adaptive cadence: see :func:`_cadence_from_fragility`."""
+        self._effective_refresh = _cadence_from_fragility(
+            rel_fragility, self.refresh_every, self.refresh_target_rel)
 
     def weights(self, family=None) -> np.ndarray:
         """Current split decision; ``family`` overrides the configured
@@ -443,3 +449,152 @@ class UncertaintyAwareBalancer:
             b._hist_work = [np.asarray(r, np.float32) for r in hist["work"]]
             b._hist_mask = [np.asarray(r, np.float32) for r in hist["mask"]]
         return b
+
+
+@dataclass
+class WorkflowBalancer:
+    """Joint DAG partitioner: the paper's loop lifted to a stage graph.
+
+    Holds one estimation head per stage — a policy-less
+    :class:`UncertaintyAwareBalancer` reused purely for its NIG posteriors
+    and (with ``family="auto"``) the online BIC family selection — and
+    re-solves ALL stage splits jointly through ``workflow.solve.solve_dag``
+    per refresh tick, warm-started from the previous solve. Every moment
+    evaluation inside a tick is one stacked kernel launch per family present
+    in the graph, never a per-stage loop.
+
+    ``dag`` supplies the graph structure and per-stage fleet sizes; its
+    stage statistics are treated as priors — the live solve always runs on
+    the posterior point estimates (and each stage's currently selected
+    family). Cache semantics mirror the single-stage balancer: a family
+    switch on ANY stage, a structure change, or the refresh cadence expiring
+    invalidates the cached solve; ``adaptive_refresh`` sizes the cadence by
+    the composed makespan fragility (delta-method through the DAG).
+    """
+
+    dag: object                      # workflow.StageDAG
+    lam_var: float = 0.0             # makespan variance weight
+    family: object = "auto"          # per-stage family mode (see balancer)
+    refresh_every: int = 1
+    pgd_steps: int = 60
+    restarts: int = 1
+    impl: str = "xla"
+    num_t: int = 512
+    block_f: Optional[int] = None
+    risk_lam: float = 0.0
+    adaptive_refresh: bool = False
+    refresh_target_rel: float = 0.02
+    prior_mean: float = 1.0
+    min_weight: float = 0.0
+    _est: dict = field(default=None, repr=False)
+    _cached: object = field(default=None, repr=False)
+    _cached_key: object = field(default=None, repr=False)
+    _obs_count: int = 0
+    _effective_refresh: Optional[int] = field(default=None, repr=False)
+    _last_decision: object = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self._est is None:
+            # per-stage estimation heads: NIG posteriors + auto family
+            # selection; their solve path (weights()) is never used, so the
+            # exploration probe is off
+            self._est = {
+                s.name: UncertaintyAwareBalancer(
+                    num_channels=s.k, family=self.family,
+                    prior_mean=self.prior_mean, explore=0.0)
+                for s in self.dag.stages}
+        if self._effective_refresh is None:
+            self._effective_refresh = max(self.refresh_every, 1)
+
+    @property
+    def effective_refresh(self) -> int:
+        return int(self._effective_refresh or max(self.refresh_every, 1))
+
+    @property
+    def last_decision(self):
+        """The DAGDecision of the most recent fresh solve (None before)."""
+        return self._last_decision
+
+    def selected_families(self) -> dict:
+        """dist_id per stage the next joint solve will run under."""
+        return {n: e.selected_family.dist_id for n, e in self._est.items()}
+
+    # ------------------------------------------------------------ feedback
+    def observe(self, durations: dict, work: dict):
+        """Per-stage feedback: {stage: per-channel durations / work shares}.
+
+        Stages absent from a tick (not released yet in a pipelined trace)
+        are simply skipped; each present stage feeds its own posterior and
+        family-selection history.
+        """
+        for name, durs in durations.items():
+            self._est[name].observe(durs, work[name])
+        self._obs_count += 1
+
+    # ------------------------------------------------------------ decisions
+    def _live_dag(self):
+        mus, sigmas, fams = {}, {}, {}
+        for s in self.dag.stages:
+            est = self._est[s.name]
+            mus[s.name], sigmas[s.name] = est.estimates()
+            fams[s.name] = est.selected_family
+        return self.dag.with_stats(mus, sigmas, fams)
+
+    def _solve_key(self) -> str:
+        fams = [UncertaintyAwareBalancer._family_key(
+            self._est[s.name].selected_family) for s in self.dag.stages]
+        return "|".join(fams)
+
+    def weights(self) -> dict:
+        """Current per-stage splits; re-solves jointly when stale."""
+        key = self._solve_key()
+        cadence = (self.effective_refresh if self.adaptive_refresh
+                   else max(self.refresh_every, 1))
+        stale = (self._cached is None or key != self._cached_key
+                 or self._obs_count % cadence == 0)
+        if stale:
+            from ..workflow.solve import solve_dag  # lazy: layering
+
+            live = self._live_dag()
+            posteriors = None
+            if self.risk_lam > 0 or self.adaptive_refresh:
+                posteriors = {s.name: self._est[s.name]._nig
+                              for s in self.dag.stages}
+            warm = (self._cached if self._cached is not None else None)
+            dec = solve_dag(live, lam_var=self.lam_var,
+                            steps=self.pgd_steps, restarts=self.restarts,
+                            num_t=self.num_t, impl=self.impl,
+                            block_f=self.block_f, warm_start=warm,
+                            risk_lam=self.risk_lam, posteriors=posteriors)
+            self._last_decision = dec
+            if self.adaptive_refresh and dec.relative_fragility is not None:
+                self._effective_refresh = _cadence_from_fragility(
+                    dec.relative_fragility, self.refresh_every,
+                    self.refresh_target_rel)
+            self._cached = {n: np.asarray(w, np.float64)
+                            for n, w in dec.weights.items()}
+            self._cached_key = key
+        out = {}
+        for n, w in self._cached.items():
+            w = w.copy()
+            if self.min_weight > 0:
+                w = np.maximum(w, self.min_weight)
+                w = w / w.sum()
+            out[n] = w
+        return out
+
+    def assign(self, total_units) -> dict:
+        """Integer work assignment per stage; ``total_units`` is an int
+        (every stage moves the same batch) or a {stage: int} dict."""
+        ws = self.weights()
+        if not isinstance(total_units, dict):
+            total_units = {n: int(total_units) for n in ws}
+        return {n: integerize(w, total_units[n]) for n, w in ws.items()}
+
+    def predicted_moments(self):
+        """Composed (makespan mu, var) at the current splits."""
+        from ..workflow.solve import evaluate_dag  # lazy: layering
+
+        dec = evaluate_dag(self._live_dag(), self.weights(),
+                           num_t=max(self.num_t, 2048), impl=self.impl)
+        return dec.makespan_mu, dec.makespan_var

@@ -1,4 +1,6 @@
 """Serving substrate: engine + the paper-partitioned request batcher."""
-from .engine import PartitionedBatcher, ReplicaGroup, ServeEngine
+from .engine import (PartitionedBatcher, PipelineBatcher, ReplicaGroup,
+                     ServeEngine)
 
-__all__ = ["PartitionedBatcher", "ReplicaGroup", "ServeEngine"]
+__all__ = ["PartitionedBatcher", "PipelineBatcher", "ReplicaGroup",
+           "ServeEngine"]

@@ -14,7 +14,7 @@ from ..configs.base import ModelConfig
 from ..sched.balancer import UncertaintyAwareBalancer, integerize
 from ..sim.cluster import ClusterSim
 
-__all__ = ["ServeEngine", "PartitionedBatcher"]
+__all__ = ["ServeEngine", "PartitionedBatcher", "PipelineBatcher"]
 
 
 class ServeEngine:
@@ -124,3 +124,70 @@ class PartitionedBatcher:
             "effective_refresh": self.balancer.effective_refresh,
         }
         return join_t, counts, responses
+
+
+class PipelineBatcher:
+    """A serving pipeline of :class:`PartitionedBatcher` stages over a
+    fork-join graph — the workflow subsystem's request-routing twin.
+
+    Each stage is a full PartitionedBatcher (its own replica groups, its own
+    online balancer — per-stage ``family="auto"`` / ``risk_lam`` /
+    ``adaptive_refresh`` all apply stage-locally). A batch enters at the
+    source stages and a stage starts only when every upstream stage has
+    returned (release = max over predecessor completions), so the end-to-end
+    latency composes exactly like ``StageDAG.compose_moments`` predicts —
+    series sums, joins max.
+
+    ``stages``: {name: PartitionedBatcher} or an ordered sequence of
+    (name, batcher) pairs / bare batchers (auto-named ``stage0..``);
+    ``edges``: precedence pairs — omitted means a linear pipeline in the
+    given order. Structure is validated by the workflow DAG machinery
+    (cycles, unknown names, bounded depth) at construction.
+    """
+
+    def __init__(self, stages, edges=None):
+        from ..workflow.dag import StageDAG, linear_edges
+
+        if isinstance(stages, dict):
+            named = list(stages.items())
+        else:
+            named = [(s if isinstance(s, tuple) else (f"stage{i}", s))
+                     for i, s in enumerate(stages)]
+        self.names = [n for n, _ in named]
+        self.batchers = dict(named)
+        self.graph = StageDAG.from_names(
+            self.names, linear_edges(self.names) if edges is None else edges)
+        self.last_tick: Optional[dict] = None
+
+    @property
+    def selected_families(self) -> dict:
+        return {n: b.selected_family for n, b in self.batchers.items()}
+
+    def run_batch(self, prompts: np.ndarray, max_new: int = 8,
+                  execute: bool = False):
+        """Route one batch through the whole pipeline.
+
+        Returns ``(end_latency, counts_by_stage, completions_by_stage)``.
+        Each stage re-partitions the SAME request batch across its own
+        replica groups and observes its own durations; the pipeline only
+        adds the precedence composition on top.
+        """
+        completions: dict = {}
+        counts_by_stage: dict = {}
+        stage_ticks: dict = {}
+        for name in self.graph.topo_order:
+            release = max((completions[u]
+                           for u in self.graph.predecessors(name)),
+                          default=0.0)
+            join_t, counts, _ = self.batchers[name].run_batch(
+                prompts, max_new=max_new, execute=execute)
+            completions[name] = release + join_t
+            counts_by_stage[name] = counts
+            stage_ticks[name] = self.batchers[name].last_tick
+        end = max(completions[n] for n in self.graph.sinks)
+        self.last_tick = {
+            "end_latency": float(end),
+            "completions": dict(completions),
+            "stages": stage_ticks,
+        }
+        return end, counts_by_stage, completions

@@ -1,4 +1,4 @@
 """Cluster simulator: stochastic channels for paper-experiment reproduction."""
-from .cluster import Channel, ClusterSim
+from .cluster import Channel, ClusterSim, WorkflowSim
 
-__all__ = ["Channel", "ClusterSim"]
+__all__ = ["Channel", "ClusterSim", "WorkflowSim"]

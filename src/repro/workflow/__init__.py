@@ -1,0 +1,25 @@
+"""repro.workflow — stage-DAG workflows over uncertain channel fleets.
+
+The paper's single split-join generalized to fork-join graphs: every stage
+is a workload with its own channel fleet and completion-time family, moments
+compose along the graph (series sums, Clark joins), and ALL stage splits are
+optimized jointly for the end-to-end makespan through one stacked kernel
+path (``workflow.solve``). The scheduler-facing twin is
+``sched.WorkflowBalancer`` (live re-solves with online per-stage
+estimation); simulation ground truth is ``sim.WorkflowSim``.
+"""
+from .dag import (DAGValidationError, Stage, StageDAG, compose_structure,
+                  linear_edges)
+from .solve import DAGDecision, evaluate_dag, solve_dag, solve_dag_greedy
+
+__all__ = [
+    "DAGValidationError",
+    "Stage",
+    "StageDAG",
+    "compose_structure",
+    "linear_edges",
+    "DAGDecision",
+    "evaluate_dag",
+    "solve_dag",
+    "solve_dag_greedy",
+]

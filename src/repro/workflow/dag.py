@@ -1,0 +1,353 @@
+"""Stage-DAG workflow specs: fork-join graphs of partitionable workloads.
+
+The paper partitions ONE workload across K uncertain channels and joins once.
+Real workflows are DAGs of such stages: every node is a workload with its own
+channel fleet (its own ``(mus, sigmas)`` statistics and completion-time
+``ChannelFamily``), every edge a precedence constraint, and the workflow
+completion time composes along the graph. This module holds the spec +
+validation + moment composition; ``workflow.solve`` optimizes all stage
+splits jointly through it.
+
+Composition rules (and where they are exact vs approximate)
+-----------------------------------------------------------
+
+Let ``D_v`` be stage v's own join time under its split ``w_v`` — the paper's
+``max_i T_i(w_i)`` within the stage, with moments ``(mu_v, var_v)`` from the
+survival-integral machinery (``ops.frontier_moments``). Stage v starts when
+every predecessor has finished and its completion time is
+
+    C_v = R_v + D_v,      R_v = max_{u in preds(v)} C_u      (R_v = 0 at
+                                                              sources)
+
+and the workflow makespan is ``M = max_{v in sinks} C_v``. Two rules cover
+the whole graph:
+
+* **series** (single predecessor): ``C_v = C_u + D_v`` with ``D_v``
+  independent of everything upstream, so the moments ADD —
+  ``E[C_v] = E[C_u] + mu_v`` and ``Var[C_v] = Var[C_u] + var_v``. Exact.
+* **join** (several predecessors): ``R_v = max_u C_u``. We moment-match every
+  ``C_u`` to a Gaussian and fold pairwise with Clark's (1961) exact
+  two-Gaussian max (``core.maxstat.clark_max_moments_2``), re-matching the
+  running max after each fold — the same sequential-Clark scheme
+  ``core.maxstat.clark_max_moments_seq`` uses within a stage.
+
+Approximation error at joins comes from two places:
+
+1. **Non-normality**: the max of Gaussians is not Gaussian (it is
+   right-skewed), so the sequential fold's re-matching loses the third
+   moment. The error is O(overlap) — small when branch means are separated
+   by more than a couple of their sds, largest for near-identical branches —
+   and is bounded against a Monte-Carlo oracle in the tests
+   (``tests/test_workflow.py::TestComposeMC``).
+2. **Shared ancestors**: two branches below a common fork both inherit the
+   fork's completion time, so their ``C_u`` are positively correlated while
+   the fold treats them as independent. For a max, positive correlation can
+   only LOWER ``E[max]`` relative to independence (the comonotone limit is
+   ``max`` of identical variables), so the independence assumption biases the
+   composed mean conservatively upward by at most the shared-ancestor
+   variance contribution.
+
+Two sanity invariants always hold in the approximation, matching the exact
+quantities: Jensen's bound ``E[max_u C_u] >= max_u E[C_u]`` (Clark's formula
+satisfies it term by term), and monotonicity of the makespan in every stage
+mean. Everything here is pure jnp and differentiable — the joint solver
+backprops the makespan through this composition onto every stage's split
+weights (the kernel adjoints) with autodiff only over these O(S) Clark
+folds.
+
+Validation follows the partition-service conventions of workflow engines
+(cycle detection with an explicit cycle path in the error, bounded depth):
+a spec error raises :class:`DAGValidationError` at construction, never at
+solve time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributions import get_family, resolve_family
+from ..core.maxstat import clark_max_moments_2
+
+__all__ = ["DAGValidationError", "Stage", "StageDAG", "compose_structure",
+           "linear_edges"]
+
+MAX_DEPTH_DEFAULT = 64
+
+
+class DAGValidationError(ValueError):
+    """A workflow spec failed validation (cycle, depth, unknown node, ...)."""
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One workload node: a fleet of K channels with per-unit statistics.
+
+    ``mus``/``sigmas`` are per-unit-work completion statistics exactly as in
+    the single-workload solvers; ``family`` the stage's completion-time
+    ``ChannelFamily`` (name or instance). Stages in one DAG may have
+    different K and different families.
+    """
+
+    name: str
+    mus: np.ndarray
+    sigmas: np.ndarray
+    family: object = "normal"
+
+    def __post_init__(self):
+        object.__setattr__(self, "mus", np.asarray(self.mus, np.float64))
+        object.__setattr__(self, "sigmas",
+                          np.asarray(self.sigmas, np.float64))
+        if self.mus.ndim != 1 or self.mus.shape != self.sigmas.shape:
+            raise DAGValidationError(
+                f"stage {self.name!r}: mus/sigmas must be matching 1-D "
+                f"arrays, got {self.mus.shape} vs {self.sigmas.shape}")
+        if self.mus.shape[0] < 1:
+            raise DAGValidationError(f"stage {self.name!r} has no channels")
+        if not np.all(self.mus > 0):
+            raise DAGValidationError(
+                f"stage {self.name!r}: channel means must be positive")
+        get_family(self.family)  # fail fast on an unknown family spec
+
+    @property
+    def k(self) -> int:
+        return self.mus.shape[0]
+
+    @property
+    def dist_id(self) -> str:
+        return resolve_family(self.family, self.k)[0]
+
+
+def linear_edges(names: Sequence[str]) -> List[Tuple[str, str]]:
+    """Edges of a simple pipeline: each stage precedes the next."""
+    return [(a, b) for a, b in zip(names[:-1], names[1:])]
+
+
+class StageDAG:
+    """Validated stage graph + differentiable moment composition.
+
+    ``stages`` order is the canonical stage index used by every (S,)-shaped
+    array in the solver. ``edges`` are (upstream, downstream) name pairs.
+    Construction validates: unique names, known endpoints, no self-loops or
+    duplicate edges, acyclicity (the error names a cycle path), and a depth
+    bound (longest chain of stages <= ``max_depth`` — runaway specs fail
+    fast, the same guard workflow partition services apply before
+    compilation).
+    """
+
+    def __init__(self, stages: Sequence[Stage],
+                 edges: Iterable[Tuple[str, str]] = (),
+                 max_depth: int = MAX_DEPTH_DEFAULT):
+        stages = tuple(stages)
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise DAGValidationError(f"duplicate stage names: {dupes}")
+        self.stages: Tuple[Stage, ...] = stages
+        self.names: Tuple[str, ...] = tuple(names)
+        self.index: Dict[str, int] = {n: i for i, n in enumerate(names)}
+        self.edges: Tuple[Tuple[str, str], ...] = self._check_edges(edges)
+        self._preds: Dict[str, List[str]] = {n: [] for n in names}
+        self._succs: Dict[str, List[str]] = {n: [] for n in names}
+        for u, v in self.edges:
+            self._preds[v].append(u)
+            self._succs[u].append(v)
+        self.topo_order: Tuple[str, ...] = self._toposort()
+        self.depth: int = self._longest_chain()
+        if self.depth > max_depth:
+            raise DAGValidationError(
+                f"workflow depth {self.depth} exceeds the bound {max_depth} "
+                f"(raise max_depth explicitly if this is intentional)")
+
+    # ------------------------------------------------------------ validation
+    def _check_edges(self, edges) -> Tuple[Tuple[str, str], ...]:
+        seen, out = set(), []
+        for e in edges:
+            u, v = e
+            for n in (u, v):
+                if n not in self.index:
+                    raise DAGValidationError(
+                        f"edge ({u!r}, {v!r}) references unknown stage {n!r}")
+            if u == v:
+                raise DAGValidationError(f"self-loop on stage {u!r}")
+            if (u, v) in seen:
+                raise DAGValidationError(f"duplicate edge ({u!r}, {v!r})")
+            seen.add((u, v))
+            out.append((u, v))
+        return tuple(out)
+
+    def _toposort(self) -> Tuple[str, ...]:
+        """Kahn's algorithm, deterministic (stage-declaration order breaks
+        ties). On a cycle, raises with an explicit cycle path found by DFS."""
+        indeg = {n: len(self._preds[n]) for n in self.names}
+        ready = [n for n in self.names if indeg[n] == 0]
+        order: List[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for m in self._succs[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+        if len(order) != len(self.names):
+            raise DAGValidationError(
+                "cycle detected: " + " -> ".join(self._find_cycle()))
+        return tuple(order)
+
+    def _find_cycle(self) -> List[str]:
+        """DFS cycle extraction for the error message (a cycle exists)."""
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in self.names}
+        stack: List[str] = []
+
+        def dfs(n):
+            color[n] = GRAY
+            stack.append(n)
+            for m in self._succs[n]:
+                if color[m] == GRAY:
+                    return stack[stack.index(m):] + [m]
+                if color[m] == WHITE:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            stack.pop()
+            color[n] = BLACK
+            return None
+
+        for n in self.names:
+            if color[n] == WHITE:
+                cyc = dfs(n)
+                if cyc:
+                    return cyc
+        return ["<unreachable>"]  # pragma: no cover - caller guarantees cycle
+
+    def _longest_chain(self) -> int:
+        depth = {n: 1 for n in self.names}
+        for n in self.topo_order:
+            for m in self._succs[n]:
+                depth[m] = max(depth[m], depth[n] + 1)
+        return max(depth.values()) if depth else 0
+
+    @classmethod
+    def from_names(cls, names: Sequence[str],
+                   edges: Iterable[Tuple[str, str]] = (),
+                   max_depth: int = MAX_DEPTH_DEFAULT) -> "StageDAG":
+        """Structure-only DAG (unit placeholder statistics): validation,
+        topological order and precedence for callers that bring their own
+        per-stage execution (e.g. ``serve.PipelineBatcher``, whose stages
+        learn statistics online)."""
+        stages = [Stage(n, np.ones(1), np.full(1, 0.1)) for n in names]
+        return cls(stages, edges, max_depth=max_depth)
+
+    # ------------------------------------------------------------ structure
+    def predecessors(self, name: str) -> Tuple[str, ...]:
+        return tuple(self._preds[name])
+
+    def successors(self, name: str) -> Tuple[str, ...]:
+        return tuple(self._succs[name])
+
+    @property
+    def sources(self) -> Tuple[str, ...]:
+        return tuple(n for n in self.names if not self._preds[n])
+
+    @property
+    def sinks(self) -> Tuple[str, ...]:
+        return tuple(n for n in self.names if not self._succs[n])
+
+    @property
+    def structure(self):
+        """Hashable composition structure: ``(topo, preds, sinks)`` as stage
+        indices. This is the jit static key for the joint solver — two DAGs
+        with the same structure (rebuilt per balancer tick with fresh
+        statistics) share one compiled solve."""
+        topo = tuple(self.index[n] for n in self.topo_order)
+        preds = tuple(tuple(self.index[u] for u in self._preds[n])
+                      for n in self.names)
+        sinks = tuple(self.index[n] for n in self.sinks)
+        return topo, preds, sinks
+
+    def with_stats(self, mus_by_stage: Dict[str, np.ndarray],
+                   sigmas_by_stage: Dict[str, np.ndarray],
+                   family_by_stage: Dict[str, object] = None) -> "StageDAG":
+        """Same graph, fresh statistics (the balancer's per-tick rebuild)."""
+        family_by_stage = family_by_stage or {}
+        stages = [Stage(name=s.name,
+                        mus=mus_by_stage.get(s.name, s.mus),
+                        sigmas=sigmas_by_stage.get(s.name, s.sigmas),
+                        family=family_by_stage.get(s.name, s.family))
+                  for s in self.stages]
+        return StageDAG(stages, self.edges, max_depth=self.depth)
+
+    # ------------------------------------------------------------ composition
+    def compose_moments(self, stage_mu, stage_var, return_nodes: bool = False):
+        """(makespan mu, var) from per-stage duration moments (stage-index
+        ordered (S,) arrays). Differentiable; see the module docstring for
+        the series/join rules and their approximation error."""
+        return compose_structure(self.structure, stage_mu, stage_var,
+                                 return_nodes=return_nodes)
+
+    def critical_path(self) -> List[str]:
+        """Expected-value critical path (stage means only; diagnostics).
+
+        The longest source->sink chain by summed stage means — the
+        deterministic skeleton the joint solve's gradients concentrate on
+        (join folds pass the makespan cotangent mostly to the dominant
+        branch).
+        """
+        means = {s.name: float(np.mean(s.mus)) for s in self.stages}
+        best = {n: (means[n], [n]) for n in self.names}
+        for n in self.topo_order:
+            for m in self._succs[n]:
+                cand = best[n][0] + means[m]
+                if cand > best[m][0]:
+                    best[m] = (cand, best[n][1] + [m])
+        sink = max(self.sinks, key=lambda n: best[n][0])
+        return best[sink][1]
+
+
+def _fold_max(items):
+    """Sequential Clark fold of [(mu, var), ...] (moment-matched max)."""
+    m, v = items[0]
+    for m2, v2 in items[1:]:
+        m, v = clark_max_moments_2(m, jnp.sqrt(jnp.maximum(v, 1e-18)),
+                                   m2, jnp.sqrt(jnp.maximum(v2, 1e-18)))
+    return m, v
+
+
+def compose_structure(structure, stage_mu, stage_var,
+                      return_nodes: bool = False):
+    """Pure-function composition over a hashable ``StageDAG.structure``.
+
+    ``stage_mu``/``stage_var``: (S,) per-stage duration moments (any leading
+    batch handled by vmap at the call site). Returns ``(mu, var)`` of the
+    makespan, plus the per-node completion moments when ``return_nodes``.
+    Series edges add moments; joins fold by Clark; the sink max is one more
+    fold. O(edges) Clark folds — tiny next to one kernel launch, so autodiff
+    through this is the cheap part of the joint solve's backward pass.
+    """
+    topo, preds, sinks = structure
+    stage_mu = jnp.asarray(stage_mu)
+    stage_var = jnp.asarray(stage_var)
+    n = stage_mu.shape[-1]
+    comp_mu: List[object] = [None] * n
+    comp_var: List[object] = [None] * n
+    for i in topo:
+        ps = preds[i]
+        if not ps:
+            rel_mu, rel_var = 0.0, 0.0
+        elif len(ps) == 1:
+            rel_mu, rel_var = comp_mu[ps[0]], comp_var[ps[0]]
+        else:
+            rel_mu, rel_var = _fold_max([(comp_mu[p], comp_var[p])
+                                         for p in ps])
+        comp_mu[i] = rel_mu + stage_mu[i]
+        comp_var[i] = rel_var + stage_var[i]
+    if len(sinks) == 1:
+        mk_mu, mk_var = comp_mu[sinks[0]], comp_var[sinks[0]]
+    else:
+        mk_mu, mk_var = _fold_max([(comp_mu[s], comp_var[s]) for s in sinks])
+    if return_nodes:
+        return (mk_mu, mk_var), (jnp.stack(comp_mu), jnp.stack(comp_var))
+    return mk_mu, mk_var

@@ -1,0 +1,461 @@
+"""Joint optimization of every stage split in a StageDAG.
+
+The greedy baseline solves each stage alone (fastest expected stage time)
+and composes whatever comes out. That is exactly what the paper shows to be
+insufficient WITHIN a stage — variance matters at a join — lifted one level:
+a stage feeding a join should trade a little expected time for variance,
+because the join's ``E[max]`` pays for every branch's spread, and the only
+way to see that is to optimize the end-to-end makespan through the
+composition.
+
+This solver does that with one batched kernel path:
+
+1. **Stack**: every stage's iterate is one row of a ``(R*S, K_max)`` weight
+   matrix (R = multi-starts, S = stages; stage fleets zero-padded to
+   ``K_max`` — a ``w=0`` channel is a point mass that drops out of the
+   survival product, so padding is exact, and a mask keeps padded weights at
+   zero through the projection). Stages are grouped by completion-time
+   family (``dist_id`` is a static kernel specialization); within a group
+   every stage's statistics ride the per-row (stacked) layout of
+   ``ops.frontier_moments_with_grads``, so ONE fused launch per family —
+   not per stage — returns every stage's moments and analytic adjoints.
+   An all-one-family DAG (the benchmark) is literally a single launch per
+   PGD step.
+2. **Compose**: the per-stage ``(mu_s, var_s)`` flow through
+   ``dag.compose_moments`` (series sums + Clark joins) to the makespan;
+   autodiff runs only over these O(S) Clark folds — the expensive
+   d(moments)/dW part is the fused kernel adjoints (PR 2/4), chained by
+   hand: ``dL/dW_s = dL/dmu_s * dmu_s/dW_s + dL/dvar_s * dvar_s/dW_s``.
+3. **Descend**: projected gradient on the concatenation of all stage
+   simplices (masked Held projection per stage block), cosine step decay,
+   multi-start, warm-startable from a previous solve (the balancer's tick
+   path).
+
+Objective: ``makespan_mu + lam_var * makespan_var``; with ``risk_lam > 0``
+and per-stage NIG posteriors, finalists additionally pay the delta-method
+fragility of the predicted makespan under estimation error — the
+``core.sensitivity`` machinery chained through the composition (the stage
+parameter adjoints come from the same stacked full-parameter launch).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bayes import nig_estimate_ses
+from ..core.distributions import resolve_family
+from ..core.partitioner import optimize_weights
+from ..kernels import autotune, ops
+from .dag import StageDAG, compose_structure
+
+__all__ = ["DAGDecision", "solve_dag", "solve_dag_greedy", "evaluate_dag"]
+
+
+@dataclass(frozen=True)
+class DAGDecision:
+    """All stage splits plus the predicted end-to-end moments."""
+
+    weights: Dict[str, np.ndarray]  # per-stage simplex weights (K_s,)
+    makespan_mu: float
+    makespan_var: float
+    stage_mu: np.ndarray            # (S,) per-stage duration means
+    stage_var: np.ndarray           # (S,)
+    method: str
+    family_groups: int = 1          # kernel launches per moment evaluation
+    fragility: Optional[float] = None
+
+    @property
+    def relative_fragility(self) -> Optional[float]:
+        if self.fragility is None:
+            return None
+        return float(self.fragility / max(self.makespan_mu, 1e-12))
+
+
+# --------------------------------------------------------------------- stack
+@dataclass(frozen=True)
+class _Group:
+    """Stages sharing one dist_id: one stacked launch serves them all."""
+
+    dist_id: str
+    idx: Tuple[int, ...]            # stage indices (canonical stage order)
+    mus: np.ndarray                 # (n, Kmax) zero-padded
+    sigmas: np.ndarray              # (n, Kmax)
+    extra: np.ndarray               # (E, n, Kmax)
+
+
+def _stage_groups(dag: StageDAG) -> Tuple[List[_Group], np.ndarray, int]:
+    """Group stages by family; returns (groups, mask (S, Kmax), Kmax)."""
+    kmax = max(s.k for s in dag.stages)
+    S = len(dag.stages)
+    mask = np.zeros((S, kmax), np.float32)
+    by_dist: Dict[str, List[int]] = {}
+    lowered = []
+    for i, s in enumerate(dag.stages):
+        dist_id, extra = resolve_family(s.family, s.k)
+        lowered.append((dist_id, np.asarray(extra, np.float32)))
+        by_dist.setdefault(dist_id, []).append(i)
+        mask[i, :s.k] = 1.0
+    groups = []
+    for dist_id, idx in by_dist.items():
+        n = len(idx)
+        E = lowered[idx[0]][1].shape[0]
+        mus = np.zeros((n, kmax), np.float32)
+        sgs = np.zeros((n, kmax), np.float32)
+        ex = np.zeros((E, n, kmax), np.float32)
+        for j, i in enumerate(idx):
+            s = dag.stages[i]
+            mus[j, :s.k] = s.mus
+            sgs[j, :s.k] = s.sigmas
+            ex[:, j, :s.k] = lowered[i][1]
+        groups.append(_Group(dist_id, tuple(idx), mus, sgs, ex))
+    return groups, mask, kmax
+
+
+def _project_simplex_masked(v, mask):
+    """Held projection onto the simplex of the ACTIVE (mask=1) channels.
+
+    Inactive entries (a stage's zero-padding up to K_max) are pinned far
+    below every active value so they never enter the threshold computation
+    and land exactly on zero after the clamp.
+    """
+    k = v.shape[-1]
+    vm = jnp.where(mask > 0, v, -1e9)
+    u = jnp.sort(vm)[::-1]
+    css = jnp.cumsum(u) - 1.0
+    idx = jnp.arange(1, k + 1, dtype=v.dtype)
+    cond = u - css / idx > 0
+    rho = jnp.max(jnp.where(cond, jnp.arange(k), -1))
+    theta = css[rho] / (rho + 1.0)
+    return jnp.maximum(vm - theta, 0.0)
+
+
+def _stage_moments_grads(W, dist_ids, idxs, stats, num_t, impl, bfs):
+    """Per-stage (mu, var, dmu_dW, dvar_dW) — one stacked launch per family.
+
+    W: (R, S, Kmax). Rows of group g are the R x n_g stage iterates; the
+    group's per-stage statistics tile over starts in the same (r, j) order.
+    """
+    R, S, kmax = W.shape
+    smu = jnp.zeros((R, S))
+    svar = jnp.zeros((R, S))
+    dmu = jnp.zeros((R, S, kmax))
+    dvar = jnp.zeros((R, S, kmax))
+    for g, dist_id in enumerate(dist_ids):
+        idx = jnp.asarray(idxs[g])
+        mus_g, sgs_g, ex_g = stats[g]
+        n = mus_g.shape[0]
+        rows = W[:, idx, :].reshape(R * n, kmax)
+        m, v, dm, dv = ops.frontier_moments_with_grads(
+            rows, jnp.tile(mus_g, (R, 1)), jnp.tile(sgs_g, (R, 1)),
+            num_t=num_t, impl=impl, block_f=bfs[g],
+            family=(dist_id, jnp.tile(ex_g, (1, R, 1))))
+        smu = smu.at[:, idx].set(m.reshape(R, n))
+        svar = svar.at[:, idx].set(v.reshape(R, n))
+        dmu = dmu.at[:, idx, :].set(dm.reshape(R, n, kmax))
+        dvar = dvar.at[:, idx, :].set(dv.reshape(R, n, kmax))
+    return smu, svar, dmu, dvar
+
+
+@partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs",
+                                   "presolve_steps", "steps", "num_t",
+                                   "impl", "bfs"))
+def _pgd_dag(structure, dist_ids, idxs, stats, masks, W0, lam_var,
+             presolve_steps: int, steps: int, num_t: int, impl: str, bfs,
+             lr: float = 0.05):
+    """Two-phase joint PGD; every phase is the same stacked launch per step.
+
+    Phase 1 (presolve) descends each stage's LOCAL expected join time — the
+    graph-blind objective, all stages at once — so every stage reaches its
+    own frontier before the graph enters; phase 2 descends the composed
+    makespan (fused kernel adjoints chained with the composition's
+    cotangents), which redistributes the mean/variance trade toward the
+    joins. Returns ``(W_presolve, W_final)``: both snapshots join the final
+    candidate pool so the refine can explore without ever losing the
+    presolve solution.
+    """
+    proj = jax.vmap(jax.vmap(_project_simplex_masked))
+    masks_b = jnp.broadcast_to(masks, W0.shape)
+
+    def loss_one(smu_r, svar_r):
+        mk_mu, mk_var = compose_structure(structure, smu_r, svar_r)
+        return mk_mu + lam_var * mk_var
+
+    grad_compose = jax.vmap(jax.grad(loss_one, argnums=(0, 1)))
+
+    def body(composed, n_steps, i, W):
+        smu, svar, dmu, dvar = _stage_moments_grads(
+            W, dist_ids, idxs, stats, num_t, impl, bfs)
+        if composed:
+            g_mu, g_var = grad_compose(smu, svar)      # (R, S) each
+            G = g_mu[..., None] * dmu + g_var[..., None] * dvar
+        else:
+            G = dmu                                    # stage-local mean
+        G = G / (jnp.linalg.norm(G, axis=-1, keepdims=True) + 1e-12)
+        step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / n_steps))
+        return proj(W - step * G, masks_b)
+
+    W1 = jax.lax.fori_loop(0, presolve_steps,
+                           partial(body, False, presolve_steps), W0)
+    Wf = jax.lax.fori_loop(0, steps, partial(body, True, steps), W1)
+    return W1, Wf
+
+
+@partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs", "num_t",
+                                   "impl", "bfs"))
+def _score_dag(structure, dist_ids, idxs, stats, W, num_t: int, impl: str,
+               bfs):
+    """Composed (makespan mu, var) and stage moments for finalists W."""
+    R, S, kmax = W.shape
+    smu = jnp.zeros((R, S))
+    svar = jnp.zeros((R, S))
+    for g, dist_id in enumerate(dist_ids):
+        idx = jnp.asarray(idxs[g])
+        mus_g, sgs_g, ex_g = stats[g]
+        n = mus_g.shape[0]
+        rows = W[:, idx, :].reshape(R * n, kmax)
+        m, v = ops.frontier_moments(
+            rows, jnp.tile(mus_g, (R, 1)), jnp.tile(sgs_g, (R, 1)),
+            num_t=num_t, impl=impl, block_f=bfs[g],
+            family=(dist_id, jnp.tile(ex_g, (1, R, 1))))
+        smu = smu.at[:, idx].set(m.reshape(R, n))
+        svar = svar.at[:, idx].set(v.reshape(R, n))
+    mk = jax.vmap(lambda m, v: jnp.stack(
+        compose_structure(structure, m, v)))(smu, svar)
+    return mk[:, 0], mk[:, 1], smu, svar
+
+
+def _se_stacks(dag: StageDAG, groups, posteriors, kmax: int):
+    """Per-group (se_mu, se_sigma) stacks, zero-padded like the stats."""
+    ses = {}
+    for name, nig in posteriors.items():
+        se_mu, se_sg = nig_estimate_ses(nig)
+        ses[name] = (np.asarray(se_mu, np.float64),
+                     np.asarray(se_sg, np.float64))
+    out = []
+    for g in groups:
+        n = len(g.idx)
+        se_m = np.zeros((n, kmax))
+        se_s = np.zeros((n, kmax))
+        for j, i in enumerate(g.idx):
+            s = dag.stages[i]
+            if s.name in ses:
+                se_m[j, :s.k], se_s[j, :s.k] = ses[s.name]
+        out.append((se_m, se_s))
+    return out
+
+
+def _dag_fragility(structure, groups, stats, se_stacks, W, smu, svar,
+                   num_t, impl, bfs):
+    """Delta-method sd of the predicted makespan mean under estimation error.
+
+    ``estimation_fragility`` chained through the composition: the stacked
+    full-parameter launch gives every stage's d(mu_s, var_s)/d(mus, sigmas);
+    the composition's cotangents d(mk_mu)/d(mu_s, var_s) come from autodiff
+    over the Clark folds; stage posteriors are independent, so the variance
+    contributions add across stages AND channels.
+    """
+    R, S, kmax = W.shape
+    gmk = jax.vmap(jax.grad(
+        lambda m, v: compose_structure(structure, m, v)[0],
+        argnums=(0, 1)))(smu, svar)
+    g_mu, g_var = (np.asarray(g, np.float64) for g in gmk)   # (R, S)
+    frag2 = np.zeros(R)
+    for g, grp in enumerate(groups):
+        idx = np.asarray(grp.idx)
+        n = len(grp.idx)
+        mus_g, sgs_g, ex_g = stats[g]
+        rows = np.asarray(W[:, idx, :]).reshape(R * n, kmax)
+        outs = ops.frontier_moments_with_grads(
+            rows, np.tile(np.asarray(mus_g), (R, 1)),
+            np.tile(np.asarray(sgs_g), (R, 1)),
+            num_t=num_t, impl=impl, block_f=bfs[g],
+            family=(grp.dist_id, jnp.tile(jnp.asarray(ex_g), (1, R, 1))),
+            param_grads=True)
+        dmu_m, dvar_m = (np.asarray(outs[4], np.float64).reshape(R, n, kmax),
+                         np.asarray(outs[5], np.float64).reshape(R, n, kmax))
+        dmu_s, dvar_s = (np.asarray(outs[6], np.float64).reshape(R, n, kmax),
+                         np.asarray(outs[7], np.float64).reshape(R, n, kmax))
+        se_m, se_s = se_stacks[g]
+        cm = g_mu[:, idx, None] * dmu_m + g_var[:, idx, None] * dvar_m
+        cs = g_mu[:, idx, None] * dmu_s + g_var[:, idx, None] * dvar_s
+        frag2 += ((cm * se_m) ** 2).sum(axis=(1, 2)) \
+            + ((cs * se_s) ** 2).sum(axis=(1, 2))
+    return np.sqrt(frag2)
+
+
+# --------------------------------------------------------------------- solve
+def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
+            warm_start, key) -> np.ndarray:
+    """(R, S, Kmax) start stack: equal, inverse-mu, warm, Dirichlet."""
+    S = len(dag.stages)
+    act = mask.astype(np.float64)
+    eq = act / act.sum(axis=1, keepdims=True)
+    inv = np.zeros_like(eq)
+    for i, s in enumerate(dag.stages):
+        w = 1.0 / np.asarray(s.mus)
+        inv[i, :s.k] = w / w.sum()
+    starts = [eq, inv]
+    if warm_start is not None:
+        wm = np.zeros((S, kmax))
+        for i, s in enumerate(dag.stages):
+            w = np.maximum(np.asarray(warm_start[s.name], np.float64), 0.0)
+            wm[i, :s.k] = w / max(w.sum(), 1e-12)
+        starts.insert(0, wm)
+    if restarts > 0:
+        rng = np.random.default_rng(
+            0 if key is None else int(np.asarray(
+                jax.random.key_data(key)).ravel()[-1]))
+        for _ in range(restarts):
+            e = rng.exponential(size=(S, kmax)) * act
+            starts.append(e / np.maximum(e.sum(axis=1, keepdims=True),
+                                         1e-12))
+    return np.stack(starts).astype(np.float32)
+
+
+def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
+              restarts: int = 2, num_t: int = 1024, impl: str = "xla",
+              block_f: Optional[int] = None,
+              key: Optional[jax.Array] = None,
+              warm_start: Optional[Dict[str, np.ndarray]] = None,
+              risk_lam: float = 0.0,
+              posteriors: Optional[Dict[str, object]] = None,
+              presolve_steps: Optional[int] = None,
+              eval_num_t: Optional[int] = None) -> DAGDecision:
+    """Jointly optimize every stage's split for the end-to-end makespan.
+
+    Objective: ``makespan_mu + lam_var * makespan_var`` composed through the
+    DAG (series sums, Clark joins), descended by masked projected gradient
+    over the concatenated stage simplices in two phases — a stage-local
+    presolve (every stage to its own frontier) then the composed refine
+    (the graph redistributes the mean/variance trade toward the joins).
+    Every moment/gradient evaluation runs through ONE stacked
+    ``ops.frontier_moments*`` launch per completion-time family present in
+    the DAG — stages are rows, never a Python loop over kernel launches.
+
+    The final pick scores the union of {starts, presolve snapshot, refined
+    iterates} at evaluation resolution (``eval_num_t``, default
+    max(num_t, 2048)), so the refine can only improve on the presolve and a
+    warm start is never lost to an overshooting step.
+
+    ``warm_start``: per-stage weights of a previous solve (the balancer's
+    refresh ticks). ``risk_lam > 0`` with per-stage ``posteriors``
+    ({stage name: NIGState}) scores finalists risk-adjusted by the
+    composed estimation fragility; the fragility of the winning candidate
+    is reported on the decision whenever posteriors are given (the
+    balancer's adaptive refresh sizes its cadence by it).
+    """
+    groups, mask, kmax = _stage_groups(dag)
+    dist_ids = tuple(g.dist_id for g in groups)
+    idxs = tuple(g.idx for g in groups)
+    stats = tuple((jnp.asarray(g.mus), jnp.asarray(g.sigmas),
+                   jnp.asarray(g.extra)) for g in groups)
+    W0 = jnp.asarray(_starts(dag, mask, kmax, restarts, warm_start, key))
+    R = W0.shape[0]
+    bfs = tuple(
+        autotune.lookup(R * len(g.idx), kmax, num_t, backend=impl,
+                        fused=True, dist_id=g.dist_id, stacked=True)
+        if block_f is None else max(min(block_f, R * len(g.idx)), 1)
+        for g in groups)
+
+    W1, Wf = _pgd_dag(dag.structure, dist_ids, idxs, stats,
+                      jnp.asarray(mask), W0, jnp.float32(lam_var),
+                      presolve_steps if presolve_steps is not None else steps,
+                      steps, num_t, impl, bfs)
+    cands = jnp.concatenate([W0, W1, Wf], axis=0)
+    et = eval_num_t or max(num_t, 2048)
+
+    # every launch mode resolves its OWN block shape: the fused pgrad
+    # working set is ~4x the grad one and the eval pass runs a larger grid —
+    # reusing the PGD-tuned block would bypass the budget model on both
+    def _bf(g, rows, nt, fused, params):
+        if block_f is not None:
+            return max(min(block_f, rows), 1)
+        return autotune.lookup(rows, kmax, nt, backend=impl, fused=fused,
+                               dist_id=g.dist_id, params=params,
+                               stacked=True)
+
+    ncand = int(cands.shape[0])
+    bfs_eval = tuple(_bf(g, ncand * len(g.idx), et, False, False)
+                     for g in groups)
+    mk_mu, mk_var, smu, svar = _score_dag(dag.structure, dist_ids, idxs,
+                                          stats, cands, et, impl, bfs_eval)
+    score = np.asarray(mk_mu, np.float64) + lam_var * np.asarray(
+        mk_var, np.float64)
+    method = "pgd-dag-joint"
+    frag = None
+    if posteriors is not None:
+        se_stacks = _se_stacks(dag, groups, posteriors, kmax)
+        bfs_frag = tuple(_bf(g, ncand * len(g.idx), num_t, True, True)
+                         for g in groups)
+        frag = _dag_fragility(dag.structure, groups, stats, se_stacks,
+                              cands, smu, svar, num_t, impl, bfs_frag)
+        if risk_lam > 0.0:
+            score = score + risk_lam * frag
+            method = "pgd-dag-joint-risk"
+    best = int(np.argmin(score))
+    Wb = np.asarray(cands[best], np.float64)
+    weights = {s.name: Wb[i, :s.k] for i, s in enumerate(dag.stages)}
+    return DAGDecision(
+        weights=weights,
+        makespan_mu=float(mk_mu[best]), makespan_var=float(mk_var[best]),
+        stage_mu=np.asarray(smu[best], np.float64),
+        stage_var=np.asarray(svar[best], np.float64),
+        method=method, family_groups=len(groups),
+        fragility=(float(frag[best]) if frag is not None else None))
+
+
+def evaluate_dag(dag: StageDAG, weights: Dict[str, np.ndarray],
+                 num_t: int = 2048, impl: str = "xla") -> DAGDecision:
+    """Composed moments of an arbitrary per-stage split (shared evaluator:
+    joint and greedy decisions are compared on the SAME quadrature)."""
+    groups, mask, kmax = _stage_groups(dag)
+    dist_ids = tuple(g.dist_id for g in groups)
+    idxs = tuple(g.idx for g in groups)
+    stats = tuple((jnp.asarray(g.mus), jnp.asarray(g.sigmas),
+                   jnp.asarray(g.extra)) for g in groups)
+    S = len(dag.stages)
+    W = np.zeros((1, S, kmax), np.float32)
+    for i, s in enumerate(dag.stages):
+        w = np.maximum(np.asarray(weights[s.name], np.float64), 0.0)
+        W[0, i, :s.k] = w / max(w.sum(), 1e-12)
+    bfs = tuple(autotune.lookup(len(g.idx), kmax, num_t, backend=impl,
+                                fused=False, dist_id=g.dist_id, stacked=True)
+                for g in groups)
+    mk_mu, mk_var, smu, svar = _score_dag(dag.structure, dist_ids, idxs,
+                                          stats, jnp.asarray(W), num_t,
+                                          impl, bfs)
+    return DAGDecision(
+        weights={s.name: np.asarray(W[0, i, :s.k], np.float64)
+                 for i, s in enumerate(dag.stages)},
+        makespan_mu=float(mk_mu[0]), makespan_var=float(mk_var[0]),
+        stage_mu=np.asarray(smu[0], np.float64),
+        stage_var=np.asarray(svar[0], np.float64),
+        method="evaluate", family_groups=len(groups))
+
+
+def solve_dag_greedy(dag: StageDAG, lam: float = 0.0, steps: int = 120,
+                     restarts: int = 2, num_t: int = 1024,
+                     impl: str = "xla",
+                     eval_num_t: Optional[int] = None) -> DAGDecision:
+    """Stage-by-stage baseline: each stage solved alone (``mu + lam var`` on
+    its OWN join time), blind to where it sits in the graph — a per-stage
+    Python loop over independent solves, the thing the joint solver
+    replaces. Composed moments evaluated with the shared evaluator."""
+    weights = {}
+    for s in dag.stages:
+        dec = optimize_weights(s.mus, s.sigmas, lam=lam, steps=steps,
+                               restarts=restarts, num_t=num_t, impl=impl,
+                               family=s.family)
+        weights[s.name] = dec.weights
+    out = evaluate_dag(dag, weights, num_t=eval_num_t or max(num_t, 2048),
+                       impl=impl)
+    return DAGDecision(
+        weights=out.weights, makespan_mu=out.makespan_mu,
+        makespan_var=out.makespan_var, stage_mu=out.stage_mu,
+        stage_var=out.stage_var, method="greedy-per-stage",
+        family_groups=out.family_groups)
