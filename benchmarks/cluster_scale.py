@@ -46,7 +46,7 @@ import time
 
 import numpy as np
 
-from .common import emit, save_table, timeit, timeit_stats
+from .common import emit, save_table, timeit_stats
 
 TICK_K = 1024      # channels per rebalance tick (fleet size)
 TICK_F = 4096      # candidate splits per tick

@@ -102,8 +102,6 @@ def _mc_makespan(dag, weights, trials, seed=0):
 
 
 def run(smoke=False) -> dict:
-    import jax
-
     from repro.workflow import solve_dag, solve_dag_greedy
     from repro.workflow.solve import _stage_groups
 

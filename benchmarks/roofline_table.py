@@ -8,7 +8,7 @@ import glob
 import json
 import os
 
-from .common import RESULTS_DIR, emit, save_table
+from .common import emit, save_table
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 

@@ -1,15 +1,25 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + the reduced-scale benchmark smoke.
+# CI entry point: lint tier + tier-1 test suite + the reduced-scale
+# benchmark smoke.
 #
 # Tiers:
-#   (default) --fast : deselect `slow` AND `mc_oracle` tests — the
-#                      Monte-Carlo ground-truth comparisons burn minutes of
-#                      sampling and guard math that the FD/autodiff parity
-#                      tests also cover; run them when the quadrature or a
-#                      family's sampling changes.
+#   (default) --fast : deselect `slow`, `mc_oracle` AND `sanitizer` tests —
+#                      the Monte-Carlo ground-truth comparisons burn minutes
+#                      of sampling and guard math that the FD/autodiff parity
+#                      tests also cover; the checkify-backed sanitizer tests
+#                      retrace the solvers. Run them when the quadrature, a
+#                      family's sampling, or the sanitizer tier changes.
 #   --full           : everything the ROADMAP tier-1 command runs
-#                      (`PYTHONPATH=src python -m pytest -x -q`).
+#                      (`PYTHONPATH=src python -m pytest -x -q`), PLUS a
+#                      second tier-1 fast pass under REPRO_SANITIZE=1 so the
+#                      runtime invariant checks ride every frontier path
+#                      before the benchmarks run.
 # Extra args go to pytest verbatim, e.g.  scripts/ci.sh -k families
+#
+# The lint tier always runs first: scripts/lint.py (the repo's own AST
+# rules — see docs/INVARIANTS.md) must exit clean, and ruff (config in
+# pyproject.toml) runs when installed — the container image doesn't ship
+# it, so its absence is not a failure.
 #
 # After the tests, the bench smoke runs, and every repo-root BENCH_*.json is
 # checked: it must parse and carry the schema keys its benchmark promises —
@@ -17,14 +27,29 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MARKER=(-m "not slow and not mc_oracle")
+MARKER=(-m "not slow and not mc_oracle and not sanitizer")
+SANITIZE_PASS=0
 case "${1:-}" in
-    --full) MARKER=(); shift ;;
+    --full) MARKER=(); SANITIZE_PASS=1; shift ;;
     --fast) shift ;;
 esac
 
+echo "== lint tier =="
+python scripts/lint.py
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks scripts
+else
+    echo "ruff not installed; skipping (scripts/lint.py is the gate)"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q "${MARKER[@]}" "$@"
+
+if [ "$SANITIZE_PASS" = 1 ]; then
+    echo "== sanitizer tier: tier-1 fast under REPRO_SANITIZE=1 =="
+    REPRO_SANITIZE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -x -q -m "not slow and not mc_oracle" "$@"
+fi
 
 scripts/bench_smoke.sh
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Repo lint entry point: runs the repro.analysis invariant linter.
+
+Thin wrapper so CI and developers can say ``python scripts/lint.py`` from the
+repo root without setting PYTHONPATH; all behavior (flags, exit codes) is
+``python -m repro.analysis`` — see docs/INVARIANTS.md for the rule catalogue.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    os.chdir(_ROOT)
+    argv = sys.argv[1:] or ["src", "tests", "benchmarks", "scripts"]
+    sys.exit(main(argv))

@@ -1,0 +1,36 @@
+"""Static analysis + runtime sanitizer tier for the frontier stack.
+
+Two enforcement layers for conventions the rest of ``repro`` relies on but
+Python cannot express in types:
+
+* **Lint-time** (:mod:`repro.analysis.framework` + :mod:`repro.analysis.rules`):
+  AST rules with ``RPA0xx`` codes checking family threading, custom-VJP
+  fwd/bwd contracts, jit static-argument discipline, Pallas VMEM/BlockSpec
+  budgets (reusing the :mod:`repro.kernels.autotune` working-set model), and
+  deprecated-import bans. Run via ``python -m repro.analysis src tests
+  benchmarks`` or ``scripts/lint.py``. Suppress a deliberate exception with
+  ``# repro: allow[RPA0xx] justification``.
+
+* **Run-time** (:mod:`repro.analysis.sanitize`): ``jax.experimental.checkify``
+  backed NaN/Inf and domain-invariant checks (simplex weights, variances >= 0,
+  valid Clark-fold inputs) threaded through ``ops.frontier_moments``, the PGD
+  solver, and ``workflow.solve``; enabled by ``REPRO_SANITIZE=1`` and
+  exercised by the ``sanitizer`` CI tier.
+
+Every invariant either layer enforces is catalogued in ``docs/INVARIANTS.md``
+with its rule code, rationale, and the PR that introduced the convention.
+"""
+from .framework import (  # noqa: F401
+    Finding,
+    FileContext,
+    Project,
+    all_rules,
+    build_project,
+    collect_files,
+    format_json,
+    format_text,
+    register,
+    rule_codes,
+    run_paths,
+    run_project,
+)

@@ -1,0 +1,357 @@
+"""Rule registry, findings, pragmas and reporters for ``repro.analysis``.
+
+The framework is deliberately small: a *rule* is a class with a ``CODES``
+mapping (``{"RPA0xx": "one-line description"}``) and a ``run(project)``
+generator yielding :class:`Finding`s; registration is the :func:`register`
+decorator. A :class:`Project` is the parsed view of every ``*.py`` file under
+the linted paths (one :class:`FileContext` per file: source, line table,
+``ast`` tree, pragma map), built once and shared by all rules so each file is
+read and parsed exactly once per lint run.
+
+Suppression is per-line and per-code: a finding at ``(path, line)`` is
+dropped when that line — or the contiguous comment block directly above it,
+for statements whose flagged line has no room for a trailing comment —
+carries an allowlist pragma::
+
+    some_flagged_code()  # repro: allow[RPA001] one-line justification
+    # repro: allow[RPA020,RPA021] pragma-above form, multiple codes
+
+Pragmas must name the exact code (no wildcards): an allowlist entry is a
+*documented exception* to a specific invariant, and the justification text
+after the bracket is part of the contract (see docs/INVARIANTS.md).
+
+Shared AST helpers used by several rules (decorator matching, parameter
+extraction, dotted-name resolution) live here too so the rule modules stay
+single-purpose.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "FileContext",
+    "Project",
+    "register",
+    "all_rules",
+    "rule_codes",
+    "collect_files",
+    "build_project",
+    "run_project",
+    "run_paths",
+    "format_text",
+    "format_json",
+    "call_name",
+    "decorator_entries",
+    "jit_static_argnames",
+    "param_names",
+    "positional_params",
+]
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a file/line, identified by its RPA code."""
+
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileContext:
+    """Parsed view of one source file: tree, line table, pragma map."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.allow: Dict[int, set] = {}
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _PRAGMA_RE.search(text)
+            if m:
+                self.allow[lineno] = {c.strip() for c in m.group(1).split(",")
+                                      if c.strip()}
+
+    def allowed(self, line: int, code: str) -> bool:
+        """True when an allow pragma names ``code`` on the line itself or in
+        the contiguous comment block directly above it (multi-line
+        justifications are encouraged)."""
+        if code in self.allow.get(line, ()):
+            return True
+        ln = line - 1
+        while 1 <= ln <= len(self.lines) \
+                and self.lines[ln - 1].lstrip().startswith("#"):
+            if code in self.allow.get(ln, ()):
+                return True
+            ln -= 1
+        return False
+
+    def finding(self, node_or_line, code: str, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(path=self.path, line=int(line), code=code,
+                       message=message)
+
+
+class Project:
+    """All files of one lint run, plus cross-file indexes rules may share."""
+
+    def __init__(self, contexts: Sequence[FileContext]):
+        self.files: Tuple[FileContext, ...] = tuple(contexts)
+        self._family_aware: Optional[Dict[str, ast.arguments]] = None
+
+    def family_aware_callables(self) -> Dict[str, ast.arguments]:
+        """Bare name -> arguments for every def with a family/dist_id param.
+
+        The cross-file index the family-threading rule resolves calls
+        against: a callee that *can* accept a family is one the caller must
+        forward its family to. Keyed by bare (unqualified) name because call
+        sites spell ``ops.frontier_moments`` / ``frontier_moments`` /
+        ``self.solve`` interchangeably; first definition wins on collisions,
+        which is adequate at lint precision.
+        """
+        if self._family_aware is None:
+            index: Dict[str, ast.arguments] = {}
+            for ctx in self.files:
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        names = param_names(node.args)
+                        if "family" in names or "dist_id" in names:
+                            index.setdefault(node.name, node.args)
+            self._family_aware = index
+        return self._family_aware
+
+
+_REGISTRY: List[type] = []
+
+
+def register(cls: type) -> type:
+    """Class decorator adding a rule to the global registry."""
+    _REGISTRY.append(cls)
+    return cls
+
+
+def _ensure_rules_loaded() -> None:
+    # importing the rules package runs every @register decorator exactly once
+    from . import rules  # noqa: F401
+
+
+def all_rules() -> list:
+    """Fresh instances of every registered rule, registration order."""
+    _ensure_rules_loaded()
+    return [cls() for cls in _REGISTRY]
+
+
+def rule_codes() -> Dict[str, str]:
+    """Every known code -> one-line description (the --list-rules table)."""
+    out: Dict[str, str] = {}
+    for rule in all_rules():
+        out.update(rule.CODES)
+    return dict(sorted(out.items()))
+
+
+# ---------------------------------------------------------------------------
+# project construction / run loop
+# ---------------------------------------------------------------------------
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted list of ``*.py`` paths."""
+    out: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            out.append(path)
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__" and not d.startswith(".")]
+            out.extend(os.path.join(dirpath, f) for f in filenames
+                       if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def build_project(paths: Sequence[str]) -> Tuple[Project, List[Finding]]:
+    """Parse every file under ``paths``; unparseable files become findings.
+
+    A syntax error is reported as ``RPA000`` rather than crashing the run:
+    the linter gates CI, and a broken file is exactly what it must report.
+    """
+    contexts: List[FileContext] = []
+    errors: List[Finding] = []
+    for path in collect_files(paths):
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            contexts.append(FileContext(path, source))
+        except (OSError, SyntaxError, ValueError) as e:
+            line = getattr(e, "lineno", 1) or 1
+            errors.append(Finding(path=path, line=int(line), code="RPA000",
+                                  message=f"unparseable file: {e}"))
+    return Project(contexts), errors
+
+
+def run_project(project: Project,
+                select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every registered rule over ``project``; pragma-filtered, sorted."""
+    selected = set(select) if select else None
+    by_path = {ctx.path: ctx for ctx in project.files}
+    findings: List[Finding] = []
+    for rule in all_rules():
+        if selected is not None and not selected & set(rule.CODES):
+            continue
+        for finding in rule.run(project):
+            if selected is not None and finding.code not in selected:
+                continue
+            ctx = by_path.get(finding.path)
+            if ctx is not None and ctx.allowed(finding.line, finding.code):
+                continue
+            findings.append(finding)
+    return sorted(findings)
+
+
+def run_paths(paths: Sequence[str],
+              select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Parse ``paths`` and run the full rule set (the CLI's core)."""
+    project, errors = build_project(paths)
+    return sorted(errors + run_project(project, select=select))
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+
+def format_text(findings: Sequence[Finding]) -> str:
+    lines = [f.format() for f in findings]
+    n = len(findings)
+    lines.append(f"{n} finding{'s' if n != 1 else ''}")
+    return "\n".join(lines)
+
+
+def format_json(findings: Sequence[Finding]) -> str:
+    return json.dumps({"findings": [f.to_dict() for f in findings],
+                       "count": len(findings)}, indent=1, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Bare callee name of a call: ``ops.frontier_moments(...)`` ->
+    ``frontier_moments``; ``f(...)`` -> ``f``; anything else -> None."""
+    func = node.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Full dotted spelling of a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def decorator_entries(node) -> Iterator[Tuple[str, Optional[ast.Call]]]:
+    """Yield ``(dotted_name, call_node_or_None)`` per decorator.
+
+    ``@jax.jit`` yields ``("jax.jit", None)``;
+    ``@functools.partial(jax.jit, static_argnames=...)`` yields
+    ``("functools.partial", call)`` AND ``("jax.jit", call)`` so callers can
+    match the transform regardless of the partial wrapping.
+    """
+    for dec in getattr(node, "decorator_list", []):
+        if isinstance(dec, ast.Call):
+            name = dotted_name(dec.func)
+            if name is not None:
+                yield name, dec
+            if name is not None and name.split(".")[-1] == "partial" and dec.args:
+                inner = dotted_name(dec.args[0])
+                if inner is not None:
+                    yield inner, dec
+        else:
+            name = dotted_name(dec)
+            if name is not None:
+                yield name, None
+
+
+_JIT_NAMES = {"jit", "pjit"}
+
+
+def jit_static_argnames(node) -> Optional[set]:
+    """None when ``node`` is not jit-decorated, else its static_argnames set.
+
+    Handles ``@jax.jit``, ``@jit``, and the ``partial(jax.jit, ...)`` forms;
+    ``static_argnames`` may be a string or a tuple/list of string constants.
+    Non-constant entries are ignored (unverifiable statically).
+    """
+    for name, call in decorator_entries(node):
+        if name.split(".")[-1] not in _JIT_NAMES:
+            continue
+        static: set = set()
+        if call is not None:
+            for kw in call.keywords:
+                if kw.arg != "static_argnames":
+                    continue
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    static.add(v.value)
+                elif isinstance(v, (ast.Tuple, ast.List)):
+                    static |= {e.value for e in v.elts
+                               if isinstance(e, ast.Constant)
+                               and isinstance(e.value, str)}
+        return static
+    return None
+
+
+def param_names(args: ast.arguments) -> List[str]:
+    """Every parameter name of a signature, in declaration order."""
+    params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        params.append(args.vararg.arg)
+    if args.kwarg:
+        params.append(args.kwarg.arg)
+    return params
+
+
+def positional_params(args: ast.arguments) -> List[str]:
+    """Parameters reachable positionally (posonly + regular), in order."""
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def keyword_or_positional(call: ast.Call, args: ast.arguments,
+                          names: Iterable[str]) -> bool:
+    """True when the call passes any of ``names`` to the callee signature
+    ``args`` — as a keyword, positionally by index, or via ``**kwargs``."""
+    wanted = set(names)
+    for kw in call.keywords:
+        if kw.arg is None:  # **kwargs splat: assume forwarded
+            return True
+        if kw.arg in wanted:
+            return True
+    pos = positional_params(args)
+    n_given = len(call.args)
+    for i, p in enumerate(pos):
+        if p in wanted and i < n_given:
+            return True
+    return False

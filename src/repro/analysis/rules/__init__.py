@@ -1,0 +1,15 @@
+"""Rule modules for the repro invariant linter.
+
+Importing this package registers every rule with the framework registry
+(:func:`repro.analysis.framework.register`). One module per invariant group:
+
+* :mod:`.family`     — RPA001/RPA002: family-threading completeness
+* :mod:`.vjp`        — RPA010-RPA012: custom-VJP fwd/bwd contract
+* :mod:`.staticargs` — RPA020-RPA022: jit static-argument / tracer discipline
+* :mod:`.vmem`       — RPA030-RPA032: Pallas VMEM/BlockSpec budget audit
+* :mod:`.contracts`  — RPA040/RPA050: documented zero cotangents, deprecated
+  imports
+
+See docs/INVARIANTS.md for the catalogue with rationale and history.
+"""
+from . import contracts, family, staticargs, vjp, vmem  # noqa: F401

@@ -1,0 +1,99 @@
+"""Static-argument / tracer-leak discipline for jitted functions (RPA020-22).
+
+Inside ``jax.jit``, Python-level control flow runs at TRACE time: branching
+on a traced argument raises a ConcretizationTypeError at best, silently bakes
+in one branch at worst (when the value happens to be concrete during tracing
+but varies at runtime). The kernels package threads ``dist_id`` /
+``param_grads`` / ``block_f`` through grid math and family dispatch, so
+every one of those names must be declared in ``static_argnames``:
+
+* **RPA020** — a parameter of a jit-decorated function appears in a Python
+  ``if``/``while``/conditional-expression test but not in
+  ``static_argnames``.
+* **RPA021** — assignment to ``self.<attr>`` inside a jit-decorated function:
+  the attribute escapes the trace holding a tracer, poisoning later calls
+  (the classic leaked-tracer failure).
+* **RPA022** — ``static_argnames`` names a parameter the function does not
+  have: a stale entry from a renamed signature, silently ignored by older
+  JAX and an error in newer — either way a lie about the launch contract.
+
+Detection covers ``@jax.jit``, ``@jit`` and the
+``functools.partial(jax.jit, static_argnames=...)`` spelling used throughout
+this repo (which is also how the Pallas wrappers are jitted).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import (
+    Finding,
+    Project,
+    jit_static_argnames,
+    param_names,
+    register,
+)
+
+
+def _test_exprs(fn) -> Iterator[ast.AST]:
+    """Condition expressions of if/while/ternary in ``fn`` (nested defs kept:
+    they are traced as part of the same jit)."""
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            yield node.test
+
+
+@register
+class StaticArgsRule:
+    CODES = {
+        "RPA020": "jit parameter used in Python control flow but not static",
+        "RPA021": "attribute assignment inside jitted function leaks tracers",
+        "RPA022": "static_argnames entry is not a parameter of the function",
+    }
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for ctx in project.files:
+            for fn in ast.walk(ctx.tree):
+                if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                static = jit_static_argnames(fn)
+                if static is None:
+                    continue
+                params = set(param_names(fn.args))
+
+                for name in sorted(static - params):
+                    yield ctx.finding(
+                        fn, "RPA022",
+                        f"static_argnames entry '{name}' is not a parameter "
+                        f"of jitted '{fn.name}'")
+
+                flagged = set()
+                for test in _test_exprs(fn):
+                    for node in ast.walk(test):
+                        if (isinstance(node, ast.Name)
+                                and node.id in params
+                                and node.id not in static
+                                and node.id not in flagged):
+                            flagged.add(node.id)
+                            yield ctx.finding(
+                                node, "RPA020",
+                                f"'{node.id}' drives Python control flow in "
+                                f"jitted '{fn.name}' but is not in "
+                                f"static_argnames — add it or hoist the "
+                                f"branch out of the trace")
+
+                for node in ast.walk(fn):
+                    targets = []
+                    if isinstance(node, ast.Assign):
+                        targets = node.targets
+                    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                        targets = [node.target]
+                    for t in targets:
+                        if (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id == "self"):
+                            yield ctx.finding(
+                                node, "RPA021",
+                                f"assignment to self.{t.attr} inside jitted "
+                                f"'{fn.name}' — traced values escaping the "
+                                f"trace become leaked tracers")

@@ -1,0 +1,182 @@
+"""Custom-VJP contract checker (RPA010-RPA012).
+
+The frontier stack's differentiation surface is a hand-written
+``jax.custom_vjp`` (PR 4's full-parameter adjoint): JAX checks almost none of
+its internal consistency at registration time, and an arity mismatch between
+the primal's differentiable arguments and the backward's cotangent tuple
+surfaces as a shape error deep inside a jit — or not at all when a residual
+silently stops being read. Three structural checks:
+
+* **RPA010** — a function declared with ``@jax.custom_vjp`` (bare or via
+  ``functools.partial(jax.custom_vjp, nondiff_argnums=...)``) that never has
+  ``.defvjp(fwd, bwd)`` called on it: the primal silently behaves as an
+  ordinary function and autodiff replays the quadrature.
+* **RPA011** — the backward's returned cotangent tuple length differs from
+  the primal's differentiable-argument count
+  (``len(positional params) - len(nondiff_argnums)``).
+* **RPA012** — residual mismatch: the backward unpacks a different number of
+  residuals than the forward packs, or an unpacked residual name is never
+  read afterwards (stale state the forward is still paying to save).
+
+All resolution is same-module by name — exactly how the kernels package
+declares its VJPs — so the rule is precise where it matters and silent on
+exotic cross-module registrations.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..framework import (
+    Finding,
+    FileContext,
+    Project,
+    decorator_entries,
+    positional_params,
+    register,
+)
+
+
+def _custom_vjp_info(node) -> Optional[Tuple[ast.AST, List[int]]]:
+    """(decorator node, nondiff_argnums) when ``node`` is a custom_vjp primal."""
+    for name, call in decorator_entries(node):
+        if name.split(".")[-1] != "custom_vjp":
+            continue
+        nondiff: List[int] = []
+        if call is not None:
+            for kw in call.keywords:
+                if kw.arg == "nondiff_argnums":
+                    v = kw.value
+                    if isinstance(v, (ast.Tuple, ast.List)):
+                        nondiff = [e.value for e in v.elts
+                                   if isinstance(e, ast.Constant)
+                                   and isinstance(e.value, int)]
+                    elif isinstance(v, ast.Constant) and isinstance(v.value, int):
+                        nondiff = [v.value]
+        return call if call is not None else node, nondiff
+    return None
+
+
+def _returned_tuples(fn) -> List[ast.Tuple]:
+    """Return-statement tuples of ``fn`` itself (nested defs excluded)."""
+    out: List[ast.Tuple] = []
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Tuple):
+            out.append(node.value)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _fwd_residual_count(fwd) -> Optional[int]:
+    """Arity of the residual tuple in ``return out, (r0, r1, ...)``."""
+    for tup in _returned_tuples(fwd):
+        if len(tup.elts) == 2 and isinstance(tup.elts[1], ast.Tuple):
+            return len(tup.elts[1].elts)
+    return None
+
+
+@register
+class CustomVjpContractRule:
+    CODES = {
+        "RPA010": "custom_vjp primal never registered via defvjp(fwd, bwd)",
+        "RPA011": "bwd cotangent tuple arity != primal diff-arg count",
+        "RPA012": "fwd/bwd residual mismatch or residual unpacked but unused",
+    }
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for ctx in project.files:
+            yield from self._check_file(ctx)
+
+    def _check_file(self, ctx: FileContext) -> Iterator[Finding]:
+        defs: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        defvjps: Dict[str, Tuple[str, str]] = {}
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "defvjp"
+                    and isinstance(node.func.value, ast.Name)
+                    and len(node.args) >= 2
+                    and all(isinstance(a, ast.Name) for a in node.args[:2])):
+                defvjps[node.func.value.id] = (node.args[0].id,
+                                               node.args[1].id)
+
+        for name, fn in defs.items():
+            info = _custom_vjp_info(fn)
+            if info is None:
+                continue
+            _, nondiff = info
+            if name not in defvjps:
+                yield ctx.finding(
+                    fn, "RPA010",
+                    f"custom_vjp '{name}' has no defvjp(fwd, bwd) "
+                    f"registration — autodiff will replay the primal")
+                continue
+            diff_count = len(positional_params(fn.args)) - len(nondiff)
+            fwd_name, bwd_name = defvjps[name]
+            fwd, bwd = defs.get(fwd_name), defs.get(bwd_name)
+            if bwd is not None:
+                yield from self._check_bwd(ctx, name, bwd, diff_count,
+                                           fwd=fwd)
+
+    def _check_bwd(self, ctx, primal_name, bwd, diff_count,
+                   fwd=None) -> Iterator[Finding]:
+        for tup in _returned_tuples(bwd):
+            if len(tup.elts) != diff_count:
+                yield ctx.finding(
+                    tup, "RPA011",
+                    f"bwd '{bwd.name}' returns {len(tup.elts)} cotangents "
+                    f"but custom_vjp '{primal_name}' has {diff_count} "
+                    f"differentiable arguments")
+
+        pos = positional_params(bwd.args)
+        if len(pos) < 2:
+            return
+        res_param = pos[-2]
+        unpack = self._residual_unpack(bwd, res_param)
+        if unpack is None:
+            return
+        node, res_names = unpack
+        packed = _fwd_residual_count(fwd) if fwd is not None else None
+        if packed is not None and packed != len(res_names):
+            yield ctx.finding(
+                node, "RPA012",
+                f"bwd '{bwd.name}' unpacks {len(res_names)} residuals but "
+                f"fwd packs {packed}")
+        used = self._names_loaded(bwd, exclude=node)
+        for nm in res_names:
+            if not nm.startswith("_") and nm not in used:
+                yield ctx.finding(
+                    node, "RPA012",
+                    f"residual '{nm}' unpacked in bwd '{bwd.name}' but never "
+                    f"used — fwd is saving state nobody reads")
+
+    @staticmethod
+    def _residual_unpack(bwd, res_param):
+        """(assign node, names) for ``a, b, ... = res``; None when absent."""
+        for node in ast.walk(bwd):
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == res_param
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Tuple)
+                    and all(isinstance(e, ast.Name)
+                            for e in node.targets[0].elts)):
+                return node, [e.id for e in node.targets[0].elts]
+        return None
+
+    @staticmethod
+    def _names_loaded(bwd, exclude) -> set:
+        used = set()
+        for node in ast.walk(bwd):
+            if node is exclude:
+                continue
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                used.add(node.id)
+        return used

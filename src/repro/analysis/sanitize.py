@@ -1,0 +1,178 @@
+"""Runtime sanitizer tier: NaN/Inf and domain-invariant checks, off by default.
+
+Set ``REPRO_SANITIZE=1`` and every frontier entry point grows teeth:
+
+* **Eager boundary checks** on concrete inputs (outside any trace):
+  ``ops.frontier_moments`` / ``frontier_moments_with_grads`` validate that
+  weights, statistics and family extras are finite, weights are nonnegative
+  with row mass <= 1, and variances are nonnegative; the Clark-fold /
+  quadrature oracles in ``core.maxstat`` validate their fold inputs and that
+  the integration grid is monotone (tmax > 0). Violations raise
+  :class:`SanitizeError` at the call site that introduced them — instead of
+  a NaN surfacing three layers later as a mysteriously flat frontier.
+* **In-trace checks** via ``jax.experimental.checkify``: the PGD solvers
+  (``core.partitioner._pgd_multi``, ``workflow.solve._pgd_dag``) take a
+  static ``sanitize`` flag that plants ``checkify.check`` calls inside the
+  ``fori_loop`` bodies (iterate and gradient finiteness, simplex mass).
+  Their public callers wrap the jitted solver in ``checkify.checkify`` via
+  :func:`run_checked` — in-trace checks REQUIRE that functionalization; an
+  unwrapped ``checkify.check`` inside jit is a trace-time error, which is
+  why the flag defaults to False and flips only on the ``run_checked`` path.
+
+The ``sanitizer`` CI tier (``scripts/ci.sh --full``) runs tier-1 fast under
+``REPRO_SANITIZE=1``; checks cost one extra O(input) pass per boundary and
+a retrace of the solvers, so the default tier keeps them off. See
+docs/INVARIANTS.md for the invariant catalogue these checks enforce at
+runtime (the lint rules enforce the static half).
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import checkify
+
+__all__ = [
+    "ENV_VAR",
+    "SanitizeError",
+    "enabled",
+    "all_concrete",
+    "assert_finite",
+    "assert_nonneg",
+    "assert_weight_rows",
+    "assert_monotone_grid",
+    "check_frontier_inputs",
+    "check_fold_inputs",
+    "check_finite",
+    "check_weight_rows",
+    "run_checked",
+]
+
+ENV_VAR = "REPRO_SANITIZE"
+
+# slack for float32 round-off: PGD projections land within ulps of the
+# simplex, and finite-difference probes in tests nudge one weight by up to
+# 1e-3 — the tolerance must sit clearly above that nudge, not equal to it
+_MASS_ATOL = 5e-3
+_NEG_ATOL = 1e-5
+
+
+class SanitizeError(ValueError):
+    """A sanitizer invariant failed on concrete (non-traced) values."""
+
+
+def enabled() -> bool:
+    """True when the sanitizer tier is switched on for this process."""
+    return os.environ.get(ENV_VAR, "") == "1"
+
+
+def all_concrete(*arrays) -> bool:
+    """True when no argument is a JAX tracer (eager checks are legal)."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+# --------------------------------------------------------------------- eager
+def assert_finite(name: str, *arrays) -> None:
+    """Every element of every array is finite (no NaN/Inf)."""
+    for a in arrays:
+        a = np.asarray(a)
+        if not np.all(np.isfinite(a)):
+            bad = int(np.size(a) - np.sum(np.isfinite(a)))
+            raise SanitizeError(
+                f"sanitize: {name} contains {bad} non-finite value(s) "
+                f"(shape {a.shape})")
+
+
+def assert_nonneg(name: str, a, atol: float = _NEG_ATOL) -> None:
+    """Elements >= -atol (variances, sigmas, weights)."""
+    a = np.asarray(a)
+    lo = float(a.min()) if a.size else 0.0
+    if lo < -atol:
+        raise SanitizeError(
+            f"sanitize: {name} must be nonnegative, min is {lo:.3e}")
+
+
+def assert_weight_rows(W, atol: float = _MASS_ATOL) -> None:
+    """Candidate-split rows: finite, nonnegative, row mass <= 1 + atol.
+
+    Row mass < 1 is legal (sub-splits and zero-padded stage rows assign the
+    remainder nowhere); mass meaningfully above 1 means the caller skipped
+    the simplex projection and every downstream moment is silently scaled.
+    """
+    assert_finite("W", W)
+    assert_nonneg("W", W)
+    sums = np.asarray(W).sum(axis=-1)
+    hi = float(sums.max()) if sums.size else 0.0
+    if hi > 1.0 + atol:
+        raise SanitizeError(
+            f"sanitize: split weights leave the simplex — max row mass "
+            f"{hi:.6f} > 1 (off-simplex W scales every downstream moment)")
+
+
+def assert_monotone_grid(name: str, ts) -> None:
+    """Integration grid strictly increasing (a non-monotone CDF grid flips
+    the sign of the survival quadrature)."""
+    ts = np.asarray(ts)
+    if ts.ndim and ts.shape[-1] > 1 and not np.all(np.diff(ts, axis=-1) > 0):
+        raise SanitizeError(
+            f"sanitize: {name} integration grid is not strictly increasing "
+            f"(tmax <= 0 or non-finite reach)")
+
+
+# repro: allow[RPA001] family-agnostic: finiteness/positivity hold for every family
+def check_frontier_inputs(W, mus, sigmas, extra=None) -> None:
+    """Boundary validation for the frontier entry points (eager tier).
+
+    No-op unless the sanitizer is enabled AND every input is concrete —
+    inside a trace the in-trace checkify tier owns these invariants.
+    """
+    arrays = (W, mus, sigmas) if extra is None else (W, mus, sigmas, extra)
+    if not (enabled() and all_concrete(*arrays)):
+        return
+    assert_weight_rows(W)
+    assert_finite("mus", mus)
+    assert_finite("sigmas", sigmas)
+    assert_nonneg("sigmas", sigmas)
+    if extra is not None:
+        assert_finite("family extra", extra)
+
+
+def check_fold_inputs(means, stds) -> None:
+    """Clark-fold / quadrature oracle boundary validation (eager tier)."""
+    if not (enabled() and all_concrete(means, stds)):
+        return
+    assert_finite("fold means", means)
+    assert_finite("fold stds", stds)
+    assert_nonneg("fold stds", stds)
+
+
+# ------------------------------------------------------------------ in-trace
+def check_finite(x, name: str) -> None:
+    """checkify.check that ``x`` is all-finite. ONLY under run_checked."""
+    checkify.check(jnp.all(jnp.isfinite(x)),
+                   f"sanitize: {name} became non-finite inside the solve")
+
+
+def check_weight_rows(W, name: str, atol: float = _MASS_ATOL) -> None:
+    """checkify.check of the simplex invariant. ONLY under run_checked."""
+    checkify.check(jnp.all(jnp.isfinite(W)),
+                   f"sanitize: {name} became non-finite inside the solve")
+    checkify.check(jnp.min(W) >= -_NEG_ATOL,
+                   f"sanitize: {name} left the nonnegative orthant")
+    checkify.check(jnp.max(jnp.sum(W, axis=-1)) <= 1.0 + atol,
+                   f"sanitize: {name} row mass exceeded the simplex")
+
+
+def run_checked(fn, *args, **kwargs):
+    """Run ``fn`` under checkify and raise its first failed check.
+
+    The solvers' static ``sanitize=True`` flag is only legal on this path:
+    it functionalizes the in-trace ``checkify.check`` calls that would
+    otherwise be a trace-time error under plain jit.
+    """
+    err, out = checkify.checkify(fn)(*args, **kwargs)
+    err.throw()
+    return out

@@ -9,7 +9,7 @@ scan cleanly.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 __all__ = ["LayerSpec", "ModelConfig", "ShapeSpec", "SHAPES", "round_up"]

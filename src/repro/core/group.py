@@ -14,10 +14,11 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
+from .distributions import resolve_family
 from .partitioner import PartitionDecision, optimize_weights, predict_moments
 
 __all__ = ["GroupChoice", "select_channels", "select_channels_exhaustive"]
@@ -30,6 +31,8 @@ class GroupChoice:
     objective: float
 
 
+# repro: allow[RPA001] family-agnostic ranking heuristic; the exact stage
+# re-scores every prefix with the caller's family through optimize_weights
 def _score(mus: np.ndarray, sigmas: np.ndarray) -> np.ndarray:
     """Cheap ranking: fast channels first, variance-penalized.
 
@@ -38,51 +41,70 @@ def _score(mus: np.ndarray, sigmas: np.ndarray) -> np.ndarray:
     return 1.0 / mus - 0.5 * sigmas / (mus * mus)
 
 
+def _subset_decision(idx: np.ndarray, mus: np.ndarray, sigmas: np.ndarray,
+                     dist_id: str, extra, lam: float,
+                     pgd_steps: int) -> PartitionDecision:
+    """Solve (or close-form) the split over one candidate subset, keeping the
+    family's per-channel extras aligned with the subset."""
+    sub_family = (dist_id, extra[:, idx])
+    if len(idx) == 1:
+        if dist_id == "normal":
+            # max over one normal channel IS the channel: exact, no quadrature
+            return PartitionDecision(weights=np.ones(1), mu=float(mus[idx[0]]),
+                                     var=float(sigmas[idx[0]] ** 2),
+                                     method="single")
+        m, v = predict_moments(np.ones(1), mus[idx], sigmas[idx],
+                               family=sub_family)
+        return PartitionDecision(weights=np.ones(1), mu=m, var=v,
+                                 method="single")
+    return optimize_weights(mus[idx], sigmas[idx], lam=lam, steps=pgd_steps,
+                            family=sub_family)
+
+
 def select_channels(mus: Sequence[float], sigmas: Sequence[float], lam: float = 0.0,
                     join_cost: float = 0.0, max_k: Optional[int] = None,
-                    pgd_steps: int = 120) -> GroupChoice:
+                    pgd_steps: int = 120, family="normal") -> GroupChoice:
     """Greedy nested-prefix selection of how many (and which) channels to use.
 
     join_cost models the per-channel overhead of joining outputs (the paper's
     "pieced together" step); it makes the objective non-monotone in K so an
-    interior K* exists.
+    interior K* exists. ``family`` selects the completion-time family for the
+    exact stage (per-channel extras are subset alongside the statistics).
     """
     mus = np.asarray(mus, np.float64)
     sigmas = np.asarray(sigmas, np.float64)
+    dist_id, extra = resolve_family(family, len(mus))
+    extra = np.asarray(extra)
     order = np.argsort(-_score(mus, sigmas))
     max_k = max_k or len(mus)
 
     best: Optional[GroupChoice] = None
     for k in range(1, min(max_k, len(mus)) + 1):
-        idx = order[:k]
-        if k == 1:
-            dec = PartitionDecision(weights=np.ones(1), mu=float(mus[idx[0]]),
-                                    var=float(sigmas[idx[0]] ** 2), method="single")
-        else:
-            dec = optimize_weights(mus[idx], sigmas[idx], lam=lam, steps=pgd_steps)
+        idx = np.asarray(order[:k])
+        dec = _subset_decision(idx, mus, sigmas, dist_id, extra, lam, pgd_steps)
         obj = dec.mu + lam * dec.var + join_cost * k
         if best is None or obj < best.objective:
-            best = GroupChoice(indices=np.asarray(idx), decision=dec, objective=float(obj))
+            best = GroupChoice(indices=idx, decision=dec, objective=float(obj))
     assert best is not None
     return best
 
 
 def select_channels_exhaustive(mus: Sequence[float], sigmas: Sequence[float],
                                lam: float = 0.0, join_cost: float = 0.0,
-                               pgd_steps: int = 120) -> GroupChoice:
+                               pgd_steps: int = 120,
+                               family="normal") -> GroupChoice:
     """Oracle subset search (exponential — small fleets only, used in tests)."""
     mus = np.asarray(mus, np.float64)
     sigmas = np.asarray(sigmas, np.float64)
+    dist_id, extra = resolve_family(family, len(mus))
+    extra = np.asarray(extra)
     n = len(mus)
     best: Optional[GroupChoice] = None
     for k in range(1, n + 1):
         for combo in itertools.combinations(range(n), k):
             idx = np.asarray(combo)
-            if k == 1:
-                dec = PartitionDecision(weights=np.ones(1), mu=float(mus[idx[0]]),
-                                        var=float(sigmas[idx[0]] ** 2), method="single")
-            else:
-                dec = optimize_weights(mus[idx], sigmas[idx], lam=lam, steps=pgd_steps)
+            dec = _subset_decision(idx, mus, sigmas, dist_id, extra, lam,
+                                   pgd_steps)
             obj = dec.mu + lam * dec.var + join_cost * k
             if best is None or obj < best.objective:
                 best = GroupChoice(indices=idx, decision=dec, objective=float(obj))

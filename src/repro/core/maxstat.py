@@ -32,6 +32,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from ..analysis import sanitize as _san
 from . import distributions as dists
 from .distributions import Phi, phi, safe_cdf
 
@@ -115,9 +116,12 @@ def max_moments_quad_w(w, mus, sigmas, num: int = 2048,
     mus = jnp.asarray(mus, dtype)
     sigmas = jnp.asarray(sigmas, dtype)
     extra = jnp.asarray(extra, dtype)
+    _san.check_fold_inputs(mus, sigmas)
     m_eff, s_eff = dists.family_effective_moments(dist_id, w, mus, sigmas,
                                                   extra)
     ts = time_grid(m_eff, s_eff, num=num)
+    if _san.enabled() and _san.all_concrete(ts):
+        _san.assert_monotone_grid("max_moments_quad_w", ts)
     cdf = dists.family_cdf(dist_id, ts[:, None], w, mus, sigmas, extra)
     surv = 1.0 - jnp.prod(cdf, axis=-1)
     mu = jnp.trapezoid(surv, ts)
@@ -158,6 +162,7 @@ def clark_max_moments_seq(means, stds) -> Tuple[jax.Array, jax.Array]:
     channel means are well separated (verified against the quad oracle).
     Implemented as a lax.scan so K may be large (1000+ channels).
     """
+    _san.check_fold_inputs(means, stds)
     means = jnp.asarray(means)
     stds = jnp.asarray(stds)
 

@@ -15,7 +15,8 @@ import warnings
 warnings.warn(
     "repro.core.normal is deprecated: import these primitives from "
     "repro.core.distributions (they moved when the completion-time model "
-    "became a pluggable ChannelFamily)",
+    "became a pluggable ChannelFamily). In-repo imports of this shim are "
+    "flagged by lint rule RPA050 (scripts/lint.py).",
     DeprecationWarning,
     stacklevel=2,
 )

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import sanitize as _san
 from ..kernels import ops
 from .distributions import resolve_family, scaled_channel_params
 from .frontier import frontier_2ch, select_on_frontier
@@ -110,10 +111,11 @@ def _project_simplex(v):
 
 
 @partial(jax.jit, static_argnames=("steps", "num_t", "impl", "block_f",
-                                   "dist_id"))
+                                   "dist_id", "sanitize"))
 def _pgd_multi(W0, mus, sigmas, extra, lam, steps: int = 200, num_t: int = 1024,
                lr: float = 0.05, impl: str = "xla",
-               block_f: Optional[int] = None, dist_id: str = "normal"):
+               block_f: Optional[int] = None, dist_id: str = "normal",
+               sanitize: bool = False):
     """All starts solved as ONE batched PGD on the fused kernel.
 
     Each step evaluates the whole (S, K) iterate stack through
@@ -123,6 +125,10 @@ def _pgd_multi(W0, mus, sigmas, extra, lam, steps: int = 200, num_t: int = 1024,
     the backend for the gradient evaluations themselves; the static
     ``dist_id`` + traced ``extra`` select the completion-time family without
     retracing when only family parameters move).
+
+    Static ``sanitize=True`` plants checkify invariant checks on the iterate
+    and gradients each step; legal only under ``analysis.sanitize.run_checked``
+    (an unwrapped checkify.check inside jit is a trace-time error).
     """
     proj = jax.vmap(_project_simplex)
 
@@ -131,10 +137,15 @@ def _pgd_multi(W0, mus, sigmas, extra, lam, steps: int = 200, num_t: int = 1024,
             W, mus, sigmas, num_t=num_t, impl=impl, block_f=block_f,
             family=(dist_id, extra))
         g = dmu + lam * dvar
+        if sanitize:
+            _san.check_finite(g, "PGD gradient")
         # normalize gradient scale so lr is unitless across problem magnitudes
         g = g / (jnp.linalg.norm(g, axis=-1, keepdims=True) + 1e-12)
         step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / steps))
-        return proj(W - step * g)
+        W = proj(W - step * g)
+        if sanitize:
+            _san.check_weight_rows(W, "PGD iterate")
+        return W
 
     return jax.lax.fori_loop(0, steps, body, W0)
 
@@ -189,8 +200,18 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
         starts += [dirichlet[i] for i in range(restarts)]
 
     W0 = jnp.stack(starts)
-    Wf = _pgd_multi(W0, mus, sigmas, extra, jnp.float32(lam), steps=steps,
-                    num_t=num_t, impl=impl, block_f=block_f, dist_id=dist_id)
+    if _san.enabled():
+        # sanitizer tier: eager boundary validation, then the jitted solver
+        # under checkify so the in-loop invariant checks are functionalized
+        _san.check_frontier_inputs(W0, mus, sigmas, extra)
+        Wf = _san.run_checked(
+            partial(_pgd_multi, steps=steps, num_t=num_t, impl=impl,
+                    block_f=block_f, dist_id=dist_id, sanitize=True),
+            W0, mus, sigmas, extra, jnp.float32(lam))
+    else:
+        Wf = _pgd_multi(W0, mus, sigmas, extra, jnp.float32(lam), steps=steps,
+                        num_t=num_t, impl=impl, block_f=block_f,
+                        dist_id=dist_id)
     mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=num_t,
                                        impl=impl, block_f=block_f,
                                        family=(dist_id, extra))

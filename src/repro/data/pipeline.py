@@ -12,7 +12,7 @@ examples/train_partitioned.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -39,10 +39,13 @@ existing JSON cache survives both schema bumps.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import time
 from typing import Dict, Optional, Sequence, Tuple
+
+_log = logging.getLogger(__name__)
 
 __all__ = ["BLOCK_F_CANDIDATES", "vmem_bytes", "pick_block_f", "lookup",
            "sweep", "clear_cache", "default_cache_path"]
@@ -222,6 +225,11 @@ def lookup(F: int, K: int, num_t: int, backend: str = "xla",
         return max(min(int(hit["block_f"]), F), 1)
     bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id,
                       params=params, stacked=stacked)
+    _log.debug(
+        "autotune cache miss: F=%d K=%d num_t=%d backend=%s dist_id=%s "
+        "mode=%s stacked=%s -> model block_f=%d (run autotune.sweep to "
+        "replace the model pick with a timed one)",
+        F, K, num_t, backend, dist_id, _mode(fused, params), stacked, bf)
     _CACHE[key] = {"block_f": bf, "source": "model"}
     return bf
 

@@ -148,13 +148,24 @@ from .ref import _CDF_FLOOR  # single source: kernel must match its oracle
 from repro.core import distributions as dists
 
 
-def _check_block(F: int, block_f: int) -> None:
+def _nearest_valid_block_f(F: int, block_f: int) -> int:
+    """The divisor of F closest to the requested block_f (ties go smaller:
+    a smaller tile always fits where the larger one would have)."""
+    divisors = [d for d in range(1, F + 1) if F % d == 0]
+    return min(divisors, key=lambda d: (abs(d - block_f), d))
+
+
+def _check_block(F: int, K: int, block_f: int, dist_id: str,
+                 mode: str) -> None:
     # a real error, not an assert: asserts vanish under python -O and callers
     # outside ops.py would get a silent wrong-shape launch
     if F % block_f:
         raise ValueError(
-            f"F={F} must be divisible by block_f={block_f} "
-            f"(ops.frontier_moments pads with copies of row 0 to guarantee this)")
+            f"launch shape invalid: F={F} not divisible by block_f={block_f} "
+            f"(K={K}, dist_id={dist_id!r}, mode={mode!r}); nearest valid "
+            f"block_f is {_nearest_valid_block_f(F, block_f)}. "
+            f"ops.frontier_moments pads W with copies of row 0 to guarantee "
+            f"divisibility — call through it, or pass a block_f dividing F.")
 
 
 def _slice_k(arr, kk):
@@ -237,7 +248,7 @@ def frontier_grid(W, mus, sigmas, extra=None, *, num_t: int = 1024,
     """
     F, K = W.shape
     block_f = min(block_f, F)
-    _check_block(F, block_f)
+    _check_block(F, K, block_f, dist_id, "fwd")
     W = W.astype(jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     per_row = mus.ndim == 2
@@ -417,7 +428,7 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
     """
     F, K = W.shape
     block_f = min(block_f, F)
-    _check_block(F, block_f)
+    _check_block(F, K, block_f, dist_id, "pgrad" if param_grads else "grad")
     W = W.astype(jnp.float32)
     mus = jnp.asarray(mus, jnp.float32)
     per_row = mus.ndim == 2

@@ -35,6 +35,8 @@ def _family_args(dist_id, extra, K):
     return jnp.asarray(extra, jnp.float32)
 
 
+# repro: allow[RPA001] layout-only axis alignment: family dispatch happens in
+# the family_cdf call of the caller, which holds the static dist_id
 def _stat_bcast(mus, sigmas, extra):
     """Broadcast shapes for the (F, T, K) grid calls.
 

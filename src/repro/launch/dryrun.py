@@ -30,7 +30,7 @@ from ..optim.adamw import cosine_schedule
 from ..train.step import init_state, make_train_step
 from .mesh import batch_axes, make_production_mesh
 from .roofline import analyze_hlo, count_params, model_flops, roofline_terms
-from .shardings import batch_specs, cache_specs, named, param_specs, state_specs
+from .shardings import cache_specs, named, param_specs, state_specs
 
 DEFAULT_OUT = "experiments/dryrun"
 

@@ -34,7 +34,6 @@ Known approximations (documented in EXPERIMENTS.md):
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

@@ -19,7 +19,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig

@@ -5,13 +5,12 @@
 """
 import argparse
 
-import jax
 
 from ..configs import ARCHS, get_config
 from ..models import build_model
 from ..models.transformer import ShardCtx
 from ..train import Trainer, TrainerConfig
-from .mesh import batch_axes, make_local_mesh
+from .mesh import make_local_mesh
 
 
 def main() -> None:

@@ -15,9 +15,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import LayerSpec, ModelConfig
+from ..configs.base import ModelConfig
 from . import attention as attn
-from .layers import (dense_init, dtype_of, embed_init, embed_lookup, lm_head,
+from .layers import (dtype_of, embed_init, embed_lookup, lm_head,
                      mlp_apply, mlp_init, rms_norm, rmsnorm_init)
 from .transformer import ShardCtx, _place_seq, _prefill_slot_pos
 

@@ -4,7 +4,7 @@ batcher (the paper's file-transfer scenario mapped to request routing).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ host-side simple: all device work is inside the jitted step.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax

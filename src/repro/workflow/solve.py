@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import sanitize as _san
 from ..core.bayes import nig_estimate_ses
 from ..core.distributions import resolve_family
 from ..core.partitioner import optimize_weights
@@ -163,10 +164,10 @@ def _stage_moments_grads(W, dist_ids, idxs, stats, num_t, impl, bfs):
 
 @partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs",
                                    "presolve_steps", "steps", "num_t",
-                                   "impl", "bfs"))
+                                   "impl", "bfs", "sanitize"))
 def _pgd_dag(structure, dist_ids, idxs, stats, masks, W0, lam_var,
              presolve_steps: int, steps: int, num_t: int, impl: str, bfs,
-             lr: float = 0.05):
+             lr: float = 0.05, sanitize: bool = False):
     """Two-phase joint PGD; every phase is the same stacked launch per step.
 
     Phase 1 (presolve) descends each stage's LOCAL expected join time — the
@@ -177,6 +178,9 @@ def _pgd_dag(structure, dist_ids, idxs, stats, masks, W0, lam_var,
     joins. Returns ``(W_presolve, W_final)``: both snapshots join the final
     candidate pool so the refine can explore without ever losing the
     presolve solution.
+
+    Static ``sanitize=True`` plants checkify invariant checks per step; legal
+    only under ``analysis.sanitize.run_checked`` (see that module).
     """
     proj = jax.vmap(jax.vmap(_project_simplex_masked))
     masks_b = jnp.broadcast_to(masks, W0.shape)
@@ -195,9 +199,15 @@ def _pgd_dag(structure, dist_ids, idxs, stats, masks, W0, lam_var,
             G = g_mu[..., None] * dmu + g_var[..., None] * dvar
         else:
             G = dmu                                    # stage-local mean
+        if sanitize:
+            _san.check_finite(smu, "DAG stage means")
+            _san.check_finite(G, "DAG PGD gradient")
         G = G / (jnp.linalg.norm(G, axis=-1, keepdims=True) + 1e-12)
         step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / n_steps))
-        return proj(W - step * G, masks_b)
+        W = proj(W - step * G, masks_b)
+        if sanitize:
+            _san.check_weight_rows(W, "DAG PGD iterate")
+        return W
 
     W1 = jax.lax.fori_loop(0, presolve_steps,
                            partial(body, False, presolve_steps), W0)
@@ -362,10 +372,24 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
         if block_f is None else max(min(block_f, R * len(g.idx)), 1)
         for g in groups)
 
-    W1, Wf = _pgd_dag(dag.structure, dist_ids, idxs, stats,
-                      jnp.asarray(mask), W0, jnp.float32(lam_var),
-                      presolve_steps if presolve_steps is not None else steps,
-                      steps, num_t, impl, bfs)
+    pre = presolve_steps if presolve_steps is not None else steps
+    if _san.enabled():
+        # sanitizer tier: eager boundary validation of the stage statistics,
+        # then the jitted joint solver under checkify (see analysis.sanitize)
+        _san.assert_weight_rows(np.asarray(W0))
+        for g in groups:
+            _san.assert_finite("stage mus", g.mus)
+            _san.assert_finite("stage sigmas", g.sigmas)
+            _san.assert_nonneg("stage sigmas", g.sigmas)
+        W1, Wf = _san.run_checked(
+            partial(_pgd_dag, presolve_steps=pre, steps=steps, num_t=num_t,
+                    impl=impl, bfs=bfs, sanitize=True),
+            dag.structure, dist_ids, idxs, stats, jnp.asarray(mask), W0,
+            jnp.float32(lam_var))
+    else:
+        W1, Wf = _pgd_dag(dag.structure, dist_ids, idxs, stats,
+                          jnp.asarray(mask), W0, jnp.float32(lam_var),
+                          pre, steps, num_t, impl, bfs)
     cands = jnp.concatenate([W0, W1, Wf], axis=0)
     et = eval_num_t or max(num_t, 2048)
 

@@ -11,7 +11,7 @@ except ImportError:  # degrade to fixed-seed sweeps (see requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
-    NIGState, clark_max_moments_2, clark_max_moments_seq, equal_split,
+    clark_max_moments_2, clark_max_moments_seq, equal_split,
     frontier_2ch, inverse_mu_split, max_moments_mc, max_moments_quad,
     nig_init, nig_point_estimates, nig_update, nig_update_batch,
     optimize_2ch, optimize_weights, pareto_mask, predict_moments,

@@ -26,6 +26,8 @@ def _candidates(F, k, seed=0):
     return jnp.asarray(e / e.sum(axis=1, keepdims=True), jnp.float32)
 
 
+# repro: allow[RPA001] deliberately normal-only autodiff oracle: family
+# parity is covered per-dist_id by TestFamilyGradParity below
 def _autodiff_grads(W, mus, sigmas, num_t):
     """Per-row (dmu_dW, dvar_dW) by jax.grad through the OLD quadrature
     objective (rows are independent, so grad-of-sum is the per-row grad)."""

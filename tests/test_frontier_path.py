@@ -1,7 +1,6 @@
 """The kernel-backed solve path: batched ``ops.frontier_moments`` as the one
 moment evaluator — padding glue, impl agreement, K-channel frontier vs the
 survival-integral oracle, and warm-started balancer refreshes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,8 +1,6 @@
 """Unit tests for the static HLO roofline analyzer and launch helpers."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.roofline import (_group_size, analyze_hlo, count_params,
                                    model_flops, roofline_terms)

@@ -1,6 +1,5 @@
 """Scheduler integration: balancer, straggler policy, elasticity, simulator."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

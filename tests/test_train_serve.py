@@ -1,5 +1,4 @@
 """Integration: trainer loop, checkpoint restart, partitioned step, serving."""
-import os
 import tempfile
 
 import jax

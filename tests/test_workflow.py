@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.distributions import Drift
 from repro.core.maxstat import clark_max_moments_2
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.sched import WorkflowBalancer
 from repro.sim import WorkflowSim
 from repro.workflow import (DAGValidationError, Stage, StageDAG, evaluate_dag,
@@ -425,19 +425,17 @@ class TestWorkflowRuntime:
 class TestNoDeprecatedNormalShim:
     def test_no_in_repo_module_imports_core_normal(self):
         """The deprecated ``core.normal`` shim stays one release for
-        external callers, but nothing inside the package may ride it."""
+        external callers, but nothing inside the package may ride it.
+
+        Enforced by lint rule RPA050 (AST-based, so string mentions in
+        docstrings/comments don't false-positive the way the old text scan
+        did); this test pins the rule to the real source tree.
+        """
         import pathlib
 
         import repro
+        from repro.analysis import run_paths
 
         root = pathlib.Path(repro.__file__).parent
-        offenders = []
-        for path in root.rglob("*.py"):
-            if path.name == "normal.py" and path.parent.name == "core":
-                continue
-            text = path.read_text()
-            for pat in ("core.normal", "core import normal",
-                        "from .normal", "from . import normal"):
-                if pat in text:
-                    offenders.append((str(path.relative_to(root)), pat))
-        assert not offenders, offenders
+        findings = run_paths([str(root)], select=["RPA050"])
+        assert not findings, [f.format() for f in findings]
