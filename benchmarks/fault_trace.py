@@ -1,0 +1,134 @@
+"""Failure-trace benchmark: failure-aware vs failure-blind partitioning.
+
+The fleet is heterogeneous AND flaky: every channel's attempts fail with a
+per-channel probability (drawn around ~8% mean — "churn" here is attempt
+churn, the retry physics the ``defective`` family prices). Two solvers get
+the SAME true base statistics (no estimation noise — the comparison isolates
+the pricing model):
+
+* **blind** — solves the frontier under the normal family: it sees the mean
+  and spread of a clean attempt and nothing else, so it loads flaky channels
+  as if they were reliable;
+* **aware** — solves under ``Defective(p, pricing="retry")``: the
+  geometric-retry inflation of both mean and variance is inside the
+  survival integral, so flaky channels are discounted *before* the first
+  failure is observed.
+
+Both weight vectors then replay the IDENTICAL seeded trace (per-tick
+Generator seeded ``(seed, tick)``, shared across policies) through the
+defective-regime ``ClusterSim``; the realized per-tick join time is the
+score. The gap is the price of ignoring failure physics — the fault-domain
+twin of fig2's frontier-vs-uniform gap.
+
+``--json`` writes ``BENCH_fault_trace.json`` (schema: bench / smoke / ticks
+/ channels / mean_fail_p / makespan{blind,aware}{mean,var,p50,p99} /
+improvement_pct / entries); ``scripts/bench_smoke.sh`` runs the small config
+and asserts the aware solver wins, ``scripts/ci.sh`` asserts the schema.
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .common import emit, save_table
+
+CHANNELS = 12
+TICKS = 300
+FAIL_RANGE = (0.02, 0.15)   # per-channel attempt-failure probs (mean ~8.5%)
+LAM = 0.05                  # frontier risk weight (same for both policies)
+
+# the machine-readable contract of BENCH_fault_trace*.json — declared next
+# to the writer; scripts/ci.sh imports these to validate the emitted files
+SCHEMA_KEYS = ("bench", "smoke", "ticks", "channels", "mean_fail_p",
+               "makespan", "improvement_pct", "entries")
+ENTRY_KEYS = ("name", "policy", "ticks", "mean_s", "var_s2", "p99_s")
+
+
+def run(ticks: int = TICKS, channels: int = CHANNELS, seed: int = 0,
+        smoke: bool = False) -> dict:
+    from repro.core.distributions import Defective
+    from repro.core.partitioner import optimize_weights
+    from repro.sim import ClusterSim
+
+    sim = ClusterSim.heterogeneous(channels, seed=seed, dist="defective",
+                                   fail_range=FAIL_RANGE)
+    mus, sigmas = sim.true_params
+    p = np.array([c.fail_p for c in sim.channels])
+
+    w_blind = optimize_weights(mus, sigmas, lam=LAM,
+                               family="normal").weights
+    w_aware = optimize_weights(mus, sigmas, lam=LAM,
+                               family=Defective(p.astype(np.float32),
+                                                pricing="retry")).weights
+
+    joins = {"blind": [], "aware": []}
+    rows = []
+    for t in range(ticks):
+        # one Generator per (policy, tick), seeded identically: both
+        # policies face the exact same rate + retry draws each tick
+        jb = sim.run_step(w_blind, rng=np.random.default_rng((seed, t)))[0]
+        ja = sim.run_step(w_aware, rng=np.random.default_rng((seed, t)))[0]
+        joins["blind"].append(jb)
+        joins["aware"].append(ja)
+        rows.append((t, round(jb, 6), round(ja, 6)))
+
+    stats = {}
+    for name, xs in joins.items():
+        xs = np.asarray(xs)
+        stats[name] = {"mean": float(xs.mean()), "var": float(xs.var()),
+                       "p50": float(np.percentile(xs, 50)),
+                       "p99": float(np.percentile(xs, 99))}
+    improvement = 100.0 * (stats["blind"]["mean"] - stats["aware"]["mean"]) \
+        / stats["blind"]["mean"]
+    save_table("fault_trace_smoke.csv" if smoke else "fault_trace.csv",
+               "tick,join_blind,join_aware", rows)
+    out = {
+        "bench": "fault_trace",
+        "smoke": smoke,
+        "ticks": ticks,
+        "channels": channels,
+        "mean_fail_p": float(p.mean()),
+        "makespan": stats,
+        "improvement_pct": float(improvement),
+        "entries": [
+            {"name": f"fault_trace_{name}", "policy": name, "ticks": ticks,
+             "mean_s": stats[name]["mean"], "var_s2": stats[name]["var"],
+             "p99_s": stats[name]["p99"]}
+            for name in ("blind", "aware")
+        ],
+    }
+    emit("fault_trace_improvement_pct", float(improvement),
+         f"ticks={ticks};channels={channels};mean_p={p.mean():.3f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable BENCH_fault_trace.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale (fewer ticks) for smoke runs")
+    ap.add_argument("--ticks", type=int, default=None)
+    ap.add_argument("--channels", type=int, default=CHANNELS)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default: repo-root "
+                         "BENCH_fault_trace.json, or _smoke variant)")
+    args = ap.parse_args()
+
+    ticks = args.ticks or (80 if args.smoke else TICKS)
+    res = run(ticks=ticks, channels=args.channels, smoke=args.smoke)
+    if args.json:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        default = ("BENCH_fault_trace_smoke.json" if args.smoke
+                   else "BENCH_fault_trace.json")
+        path = args.out or os.path.abspath(os.path.join(root, default))
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    print({k: res[k] for k in ("makespan", "improvement_pct",
+                               "mean_fail_p")})
+
+
+if __name__ == "__main__":
+    main()

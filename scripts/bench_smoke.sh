@@ -18,6 +18,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.dag_scale --json --smoke
 
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.fault_trace --json --smoke
+
 python - <<'PY'
 import json
 
@@ -56,4 +59,17 @@ print(f"dag scale smoke OK: {g['stages']} stages x K={g['channels']}, "
       f"family groups {g['family_groups']}, "
       f"joint vs greedy {g['improvement_pct']}% "
       f"(realized {g['realized_improvement_pct']}%)")
+
+ft = json.load(open("BENCH_fault_trace_smoke.json"))
+assert ft["bench"] == "fault_trace" and ft["ticks"] > 0
+assert ft["mean_fail_p"] >= 0.05, ft["mean_fail_p"]   # >=5% attempt churn
+assert {"blind", "aware"} <= set(ft["makespan"]), ft["makespan"]
+# the acceptance contract: under real attempt churn, pricing the failure
+# physics (Defective) must realize a strictly better makespan than the
+# failure-blind normal-family solve on the identical trace
+assert ft["improvement_pct"] > 0, \
+    f"failure-aware solver did not beat the blind one: {ft['improvement_pct']}%"
+print(f"fault trace smoke OK: {ft['ticks']} ticks, "
+      f"mean fail_p {ft['mean_fail_p']:.3f}, "
+      f"aware beats blind by {ft['improvement_pct']:.2f}%")
 PY

@@ -51,6 +51,14 @@ if [ "$SANITIZE_PASS" = 1 ]; then
         python -m pytest -x -q -m "not slow and not mc_oracle" "$@"
 fi
 
+# Chaos smoke: the fault-tolerance tier (kill/restore tick parity, churn
+# traces, checkpoint manifests) runs under the sanitizer so probability-
+# domain and finiteness checks ride every fault path too. The `fault`
+# marker selects it; it is small enough to run on every tier.
+echo "== chaos tier: fault-marked tests under REPRO_SANITIZE=1 =="
+REPRO_SANITIZE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "fault and not slow and not mc_oracle"
+
 scripts/bench_smoke.sh
 
 python - <<'PY'
@@ -59,17 +67,19 @@ import json
 
 # single source: the schema each benchmark promises is declared next to its
 # writer and imported here — no hand-copied key lists to drift
-from benchmarks import cluster_scale, dag_scale, serve_trace
+from benchmarks import cluster_scale, dag_scale, fault_trace, serve_trace
 
 SCHEMAS = {
     "cluster_scale": cluster_scale.SCHEMA_KEYS,
     "serve_trace": serve_trace.SCHEMA_KEYS,
     "dag_scale": dag_scale.SCHEMA_KEYS,
+    "fault_trace": fault_trace.SCHEMA_KEYS,
 }
 ENTRY_KEYS = {
     "cluster_scale": cluster_scale.ENTRY_KEYS,
     "serve_trace": serve_trace.ENTRY_KEYS,
     "dag_scale": dag_scale.ENTRY_KEYS,
+    "fault_trace": fault_trace.ENTRY_KEYS,
 }
 
 paths = sorted(glob.glob("BENCH_*.json"))

@@ -9,7 +9,9 @@ Importing this package registers every rule with the framework registry
 * :mod:`.vmem`       — RPA030-RPA032: Pallas VMEM/BlockSpec budget audit
 * :mod:`.contracts`  — RPA040/RPA050: documented zero cotangents, deprecated
   imports
+* :mod:`.famcov`     — RPA060: every FAMILIES entry reaches all threading
+  sites (ref, kernels, VJP, autotune, sim ground truth)
 
 See docs/INVARIANTS.md for the catalogue with rationale and history.
 """
-from . import contracts, family, staticargs, vjp, vmem  # noqa: F401
+from . import contracts, famcov, family, staticargs, vjp, vmem  # noqa: F401

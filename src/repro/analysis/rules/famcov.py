@@ -1,0 +1,102 @@
+"""Family-coverage completeness (RPA060).
+
+RPA001/002 catch a *call site* that drops the family spec; they cannot catch
+a whole *family* that was added to ``core.distributions.FAMILIES`` but never
+taught to one of the layers that must understand every ``dist_id``. That is
+exactly how a new family ships half-implemented: the kernels fall through to
+a default branch, the sim has no generating regime for it, and the first
+symptom is a benchmark whose "ground truth" quietly ran a different
+distribution than the solver priced.
+
+**RPA060** — every family name in the ``FAMILIES`` tuple (parsed from
+``core/distributions.py``, never imported) must appear as a word in each of
+the threading sites:
+
+* ``kernels/ref.py``           — the quadrature oracle,
+* ``kernels/frontier_grid.py`` — both Pallas kernels,
+* ``kernels/ops.py``           — the custom-VJP wrapper,
+* ``kernels/autotune.py``      — plan keys + sweep coverage,
+* ``sim/cluster.py``           — the ground-truth generator.
+
+A site that legitimately handles a family through a fully generic path can
+carry a ``# repro: allow[RPA060]`` pragma at the top of the file with the
+justification (none do today — every current family names its branch or its
+coefficient-table row in all five).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional, Sequence
+
+from ..framework import Finding, Project, register
+
+# site suffix -> what the mention proves there
+_SITES = (
+    ("kernels/ref.py", "reference oracle"),
+    ("kernels/frontier_grid.py", "Pallas kernels"),
+    ("kernels/ops.py", "custom VJP"),
+    ("kernels/autotune.py", "autotune keys/sweep"),
+    ("sim/cluster.py", "sim ground truth"),
+)
+
+_FAMILIES_SRC = "core/distributions.py"
+
+
+def _parse_families(source: str) -> Optional[Sequence[str]]:
+    """The FAMILIES tuple, read statically from the distributions module."""
+    tree = ast.parse(source)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "FAMILIES"
+                   for t in node.targets):
+            continue
+        try:
+            value = ast.literal_eval(node.value)
+        except ValueError:
+            return None
+        if isinstance(value, (tuple, list)) and \
+                all(isinstance(v, str) for v in value):
+            return tuple(value)
+    return None
+
+
+@register
+class FamilyCoverageRule:
+    CODES = {
+        "RPA060": "family in FAMILIES is never mentioned in a threading site",
+    }
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        by_suffix = {}
+        for ctx in project.files:
+            norm = ctx.path.replace("\\", "/")
+            for suffix, role in _SITES:
+                if norm.endswith(suffix):
+                    by_suffix[suffix] = ctx
+            if norm.endswith(_FAMILIES_SRC):
+                by_suffix[_FAMILIES_SRC] = ctx
+        dist_ctx = by_suffix.get(_FAMILIES_SRC)
+        if dist_ctx is None:
+            return  # partial lint run without the registry — nothing to check
+        families = _parse_families(dist_ctx.source)
+        if not families:
+            yield dist_ctx.finding(
+                1, "RPA060",
+                "FAMILIES tuple is not a literal tuple of strings — the "
+                "coverage rule cannot enumerate the registry")
+            return
+        for suffix, role in _SITES:
+            ctx = by_suffix.get(suffix)
+            if ctx is None:
+                continue
+            for fam in families:
+                if re.search(rf"\b{re.escape(fam)}\b", ctx.source):
+                    continue
+                yield ctx.finding(
+                    1, "RPA060",
+                    f"family '{fam}' (core.distributions.FAMILIES) is never "
+                    f"mentioned in {suffix} ({role}) — a dist_id this layer "
+                    f"does not know falls through to a default branch and "
+                    f"silently prices the wrong distribution")

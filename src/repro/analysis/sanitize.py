@@ -42,6 +42,7 @@ __all__ = [
     "all_concrete",
     "assert_finite",
     "assert_nonneg",
+    "assert_prob",
     "assert_weight_rows",
     "assert_monotone_grid",
     "check_frontier_inputs",
@@ -95,6 +96,24 @@ def assert_nonneg(name: str, a, atol: float = _NEG_ATOL) -> None:
             f"sanitize: {name} must be nonnegative, min is {lo:.3e}")
 
 
+def assert_prob(name: str, a, atol: float = _NEG_ATOL) -> None:
+    """Elements are probabilities: finite and inside [0 - atol, 1 + atol].
+
+    Guards the defective family's failure probabilities (and any other
+    survival/failure rate crossing a frontier boundary): a p outside [0, 1]
+    silently flips the sign of the retry-inflation terms instead of failing.
+    """
+    assert_finite(name, a)
+    a = np.asarray(a)
+    if not a.size:
+        return
+    lo, hi = float(a.min()), float(a.max())
+    if lo < -atol or hi > 1.0 + atol:
+        raise SanitizeError(
+            f"sanitize: {name} must lie in [0, 1], range is "
+            f"[{lo:.3e}, {hi:.3e}]")
+
+
 def assert_weight_rows(W, atol: float = _MASS_ATOL) -> None:
     """Candidate-split rows: finite, nonnegative, row mass <= 1 + atol.
 
@@ -122,12 +141,20 @@ def assert_monotone_grid(name: str, ts) -> None:
             f"(tmax <= 0 or non-finite reach)")
 
 
-# repro: allow[RPA001] family-agnostic: finiteness/positivity hold for every family
-def check_frontier_inputs(W, mus, sigmas, extra=None) -> None:
+# repro: allow[RPA001] finiteness/positivity are family-agnostic; the one
+# dist_id branch (defective's probability domain) falls back to the generic
+# checks for every other family
+def check_frontier_inputs(W, mus, sigmas, extra=None, dist_id=None) -> None:
     """Boundary validation for the frontier entry points (eager tier).
 
     No-op unless the sanitizer is enabled AND every input is concrete —
     inside a trace the in-trace checkify tier owns these invariants.
+    ``dist_id`` turns on family-specific domain checks: for ``defective``,
+    the failure probabilities (extra row 0) and the pricing fraction (row 1)
+    must be probabilities, and the retry-conditioned moments (a, b) they
+    induce must stay finite (a p at the q-floor inflates them by ~1e6 but
+    never to Inf — anything non-finite means corrupted stats, not a hot
+    channel).
     """
     arrays = (W, mus, sigmas) if extra is None else (W, mus, sigmas, extra)
     if not (enabled() and all_concrete(*arrays)):
@@ -138,6 +165,15 @@ def check_frontier_inputs(W, mus, sigmas, extra=None) -> None:
     assert_nonneg("sigmas", sigmas)
     if extra is not None:
         assert_finite("family extra", extra)
+        if dist_id == "defective":
+            from repro.core.distributions import defective_moments_np
+            ex = np.asarray(extra)
+            p, lam = ex[0], ex[1]
+            assert_prob("failure probabilities p", p)
+            assert_prob("failure pricing lam", lam)
+            a, b = defective_moments_np(np.asarray(mus), np.asarray(sigmas),
+                                        p, lam)
+            assert_finite("defective conditioned moments", a, b)
 
 
 def check_fold_inputs(means, stds) -> None:

@@ -1,4 +1,6 @@
 """Sharded checkpointing with atomic commit and async writes."""
-from .store import CheckpointManager, latest_step, restore, save
+from .store import (CheckpointManager, latest_step, restore,
+                    restore_pipeline, save, save_pipeline)
 
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+__all__ = ["CheckpointManager", "latest_step", "restore",
+           "restore_pipeline", "save", "save_pipeline"]

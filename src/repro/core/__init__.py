@@ -12,20 +12,26 @@ Public API:
     moment_sensitivity / posterior_sensitivity — d(solve)/d(posterior params)
     select_channels              — how many channels to enlist (group testing ext.)
     ChannelFamily / get_family   — pluggable completion-time families
-                                   (normal | lognormal | drift | empirical)
+                                   (normal | lognormal | drift | empirical |
+                                    defective)
+    remaining_work_stats         — sunk-work rescaling for mid-flight re-solves
 """
 from .distributions import (
     FAMILIES,
     ChannelFamily,
+    Defective,
     Drift,
     Empirical,
     LogNormal,
     Normal,
     Phi,
     Phi_c,
+    defective_moments_np,
+    family_from_extra,
     get_family,
     phi,
     point_mass_cdf,
+    remaining_work_stats,
     resolve_family,
     safe_cdf,
     scaled_channel_params,

@@ -25,6 +25,23 @@ simulator and the serving batcher) can run any of:
 ``empirical``
     No parametric assumption: a C-component Gaussian mixture fitted to the
     observed per-unit rates (EM, deterministic init), evaluated exactly.
+``defective``
+    Failure-aware channels: each attempt fails with per-channel probability
+    ``p`` and is re-run, a failed attempt costing ``lam`` of an attempt
+    (``lam = 1`` retry pricing: all sunk work lost; ``lam = 0.5`` resume
+    pricing: continuous mid-attempt checkpointing loses half an attempt in
+    expectation). The completion time, conditioned on eventual success, is
+    the geometric compound ``T = A_0 + lam * sum_{i<=N} A_i`` with
+    ``N ~ Geom`` failures; the family's law is the Gaussian moment-matched
+    to its retry-inflated moments ``a = mu (1 + lam p/q)``,
+    ``b^2 = sigma^2 (1 + lam^2 p/q) + lam^2 mu^2 p/q^2`` (``q = 1 - p``) —
+    a pure scale family in ``w``, so the whole analytic adjoint structure
+    (including ``d/dp``, the failure-probability gradient in ``extra`` row
+    0) stays inside the affine feature basis below. ``p = 0`` reduces
+    exactly to ``normal``. :func:`family_sample` draws the PHYSICAL retry
+    process (failures actually injected): per-channel moments match the
+    law exactly, join moments to the Gaussian-shape approximation (same
+    status as the Clark fold).
 
 Kernel-facing contract
 ----------------------
@@ -95,11 +112,15 @@ __all__ = [
     "LogNormal",
     "Drift",
     "Empirical",
+    "Defective",
+    "defective_moments_np",
+    "remaining_work_stats",
     "get_family",
     "resolve_family",
+    "family_from_extra",
 ]
 
-FAMILIES = ("normal", "lognormal", "drift", "empirical")
+FAMILIES = ("normal", "lognormal", "drift", "empirical", "defective")
 
 # Static mixture size for the empirical family: big enough for bimodal
 # contention profiles, small enough that the kernel's per-channel inner loop
@@ -109,6 +130,12 @@ EMP_COMPONENTS = 3
 _SQRT2 = 1.4142135623730951
 _SQRT_2PI = 2.5066282746310002
 _TINY = 1e-20  # safe-log floor; anything below the t-grid's resolution
+
+# Survival-probability floor for the defective family: p is clamped to
+# 1 - _Q_FLOOR so the p -> 1 limit (expected retries diverge) stays finite
+# in every kernel; at the clamp the channel is priced as ~1e6 expected
+# retries, which any solver already treats as "never assign work here".
+_Q_FLOOR = 1e-6
 
 
 # --------------------------------------------------------------------------
@@ -187,7 +214,11 @@ def extra_rows(dist_id: str) -> int:
     launch signature (and its BlockSpec) is uniform across families.
     """
     _check_dist(dist_id)
-    return 3 * EMP_COMPONENTS if dist_id == "empirical" else 1
+    if dist_id == "empirical":
+        return 3 * EMP_COMPONENTS
+    if dist_id == "defective":
+        return 2  # row 0: failure prob p (differentiable); row 1: pricing lam
+    return 1
 
 
 def _mixture_stats(extra):
@@ -240,6 +271,60 @@ def _drift_mean_scale(w, extra):
     return w * (1.0 + 0.5 * rho * w)
 
 
+def defective_moments_np(mu, sigma, p, lam):
+    """Numpy twin of :func:`_defective_ab` for host-side samplers.
+
+    Returns the retry-inflated per-unit moments ``(a, b)`` of the defective
+    family: with ``q = 1 - p`` (floored at ``1e-6``) and failed attempts
+    costing ``lam`` of an attempt,
+
+        a   = mu * (1 + lam p/q)
+        b^2 = sigma^2 (1 + lam^2 p/q) + lam^2 mu^2 p/q^2
+
+    exactly the mean/variance of ``T = A_0 + lam sum_{i<=N} A_i`` with
+    ``A_i ~ N(mu, sigma^2)`` iid and ``N ~ Geom(q)`` failures-before-success
+    (``E N = p/q``, ``Var N = p/q^2``). The simulator's retry injection and
+    :func:`family_sample` draw that physical process, so the law and its
+    ground truth share this one derivation.
+    """
+    mu = np.asarray(mu, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    p = np.clip(np.asarray(p, np.float64), 0.0, 1.0 - _Q_FLOOR)
+    lam = np.asarray(lam, np.float64)
+    q = 1.0 - p
+    ratio = p / q
+    a = mu * (1.0 + lam * ratio)
+    b2 = sigma * sigma * (1.0 + lam * lam * ratio) \
+        + (lam * mu) ** 2 * ratio / q
+    return a, np.sqrt(np.maximum(b2, 0.0))
+
+
+def _defective_ab(mu, sigma, extra):
+    """Retry-inflated per-unit moments (a, b) of the defective family.
+
+    ``extra[0] = p`` (per-attempt failure probability, clamped to
+    ``[0, 1 - _Q_FLOOR]``), ``extra[1] = lam`` (pricing: fraction of an
+    attempt a failure costs). See :func:`defective_moments_np` for the
+    derivation; ``T(w) ~ N(w a, (w b)^2)`` — a pure scale family, so every
+    kernel treats it exactly like ``normal`` with ``(a, b)`` substituted.
+    ``p = 0`` gives ``(a, b) = (mu, sigma)`` identically.
+
+    Only the UPPER side is clamped: clamping at 0 would put the valid
+    boundary value ``p = 0`` on a max-tie, where autodiff splits the
+    cotangent 0.5/0.5 and the analytic adjoint would disagree with it by
+    exactly 2x. Negative ``p`` is rejected at the API boundary
+    (:class:`Defective`) and by the sanitizer instead.
+    """
+    p = jnp.minimum(extra[0], 1.0 - _Q_FLOOR)
+    lam = extra[1]
+    q = 1.0 - p
+    ratio = p / q
+    a = mu * (1.0 + lam * ratio)
+    b2 = sigma * sigma * (1.0 + lam * lam * ratio) \
+        + jnp.square(lam * mu) * ratio / q
+    return a, jnp.sqrt(jnp.maximum(b2, 0.0))
+
+
 def family_effective_moments(dist_id: str, w, mu, sigma, extra):
     """(mean, std) of the completion time T(w) under the family.
 
@@ -253,6 +338,9 @@ def family_effective_moments(dist_id: str, w, mu, sigma, extra):
         return w * mu, w * sigma
     if dist_id == "drift":
         return mu * _drift_mean_scale(w, extra), w * sigma
+    if dist_id == "defective":
+        a, b = _defective_ab(mu, sigma, extra)
+        return w * a, w * b
     m_mix, s_mix = _mixture_stats(extra)
     return w * m_mix, w * s_mix
 
@@ -272,6 +360,10 @@ def _raw_cdf(dist_id: str, t, w, mu, sigma, extra, ok, safe_w):
         m_d = mu * _drift_mean_scale(w, extra)
         std = w * sigma
         z = (t - m_d) / jnp.where(ok, std, 1.0)
+        return Phi(z)
+    if dist_id == "defective":
+        a, b = _defective_ab(mu, sigma, extra)
+        z = (t - w * a) / jnp.where(ok, w * b, 1.0)
         return Phi(z)
     # empirical mixture: sum_c pi_c Phi((t - w m_c)/(w s_c)); a zero-spread
     # component degenerates to its own (right-continuous) point mass
@@ -293,6 +385,10 @@ def _family_ok(dist_id: str, w, mu, sigma, extra):
     if dist_id == "empirical":
         _, s_mix = _mixture_stats(extra)
         return (w > 0.0) & (s_mix > 0.0)
+    if dist_id == "defective":
+        # b can be positive even when sigma == 0 (retry variance from mu)
+        _, b = _defective_ab(mu, sigma, extra)
+        return (w * b) > 0.0
     return (w * sigma) > 0.0
 
 
@@ -340,6 +436,10 @@ def family_adjoint_parts(dist_id: str, t, w, mu, sigma, extra):
     elif dist_id == "drift":
         m_d = mu * _drift_mean_scale(w, extra)
         z = (t - m_d) / jnp.where(ok, w * sigma, 1.0)
+        D = phi(z)
+    elif dist_id == "defective":
+        a, b = _defective_ab(mu, sigma, extra)
+        z = (t - w * a) / jnp.where(ok, w * b, 1.0)
         D = phi(z)
     else:  # empirical: D = sum_c pi_c phi(z_c) / s_c; no single z score
         C = EMP_COMPONENTS
@@ -401,6 +501,12 @@ def family_coeffs(dist_id: str, w, mu, sigma, extra):
         # dz/dw = -mu g'/(w s) - z/w collapses to -(rho mu)/(2 sigma) - t/(w^2 s)
         alpha = guard(-0.5 * rho * mu / jnp.where(ok, sigma, 1.0))
         return alpha, guard(-inv_w2s), zero, guard(inv_s)
+    if dist_id == "defective":
+        # pure scale family: identical to normal with (a, b) substituted
+        _, b = _defective_ab(mu, sigma, extra)
+        inv_w2b = 1.0 / jnp.where(ok, w * w * b, 1.0)
+        inv_b = 1.0 / jnp.where(ok, w * b, 1.0)
+        return zero, guard(-inv_w2b), zero, guard(inv_b)
     # empirical: scale family in w -> dC/dw = -(t/w) pdf, dC/dt = pdf = D/w
     inv_w2 = 1.0 / jnp.where(ok, w * w, 1.0)
     inv_w = 1.0 / jnp.where(ok, w, 1.0)
@@ -439,6 +545,11 @@ def family_features(dist_id: str, params: bool = False
       joins the basis, and that family alone contracts Pz/Pvz.
     * ``empirical``: the channel's (mu, sigma) never enter the mixture CDF —
       no parameter adjoints, the {t} basis stays.
+    * ``defective``: the W-adjoint is the normal family's with (a, b)
+      substituted ({t} basis); the parameter adjoints move the composite
+      spread ``b(mu, sigma, p)``, so dz/dmu and dz/dp pick up -z (db/d.)/b
+      terms — the z feature joins and all three features go live, the
+      widest working set of any family (part of the autotune model).
     """
     _check_dist(dist_id)
     if not params:
@@ -447,21 +558,26 @@ def family_features(dist_id: str, params: bool = False
             "lognormal": (True, False, False),
             "drift": (True, True, False),
             "empirical": (False, True, False),
+            "defective": (False, True, False),
         }[dist_id]
     return {
         "normal": (True, True, False),
         "lognormal": (True, False, True),
         "drift": (True, True, False),
         "empirical": (False, True, False),
+        "defective": (True, True, True),
     }[dist_id]
 
 
 def family_has_extra_grads(dist_id: str) -> bool:
     """Whether the family's ``extra`` row 0 carries a differentiable shape
-    parameter (drift's per-channel ``rho``). The empirical mixture's fitted
-    parameters are solve constants by contract (re-fit, not descended)."""
+    parameter (drift's per-channel ``rho``, defective's failure probability
+    ``p``). The empirical mixture's fitted parameters are solve constants by
+    contract (re-fit, not descended), and the defective family's pricing
+    constant ``lam`` (extra row 1) is a mode switch, not a statistic — its
+    cotangent is documented-zero."""
     _check_dist(dist_id)
-    return dist_id == "drift"
+    return dist_id in ("drift", "defective")
 
 
 def family_param_coeffs(dist_id: str, w, mu, sigma, extra):
@@ -495,6 +611,17 @@ def family_param_coeffs(dist_id: str, w, mu, sigma, extra):
         dz/dmu    = -g/(w sigma)                          -> (a, 0, 0)
         dz/dsigma = -z/sigma = mu g/(w sigma^2) - t/(w sigma^2) -> (a, b, 0)
         dz/drho   = -mu w/(2 sigma)                       -> (a, 0, 0)
+    * defective, z = (t - w a)/(w b) with q = 1-p, r = p/q,
+      a = mu (1 + lam r), b^2 = sigma^2 (1 + lam^2 r) + lam^2 mu^2 r/q:
+      every parameter theta gives dz/dtheta = -(da/dtheta)/b
+      - z (db/dtheta)/b, so each is an (a, 0, c) pair against {1, z}:
+        da/dmu = 1 + lam r,   db/dmu    = lam^2 mu (r/q) / b
+        da/dsigma = 0,        db/dsigma = sigma (1 + lam^2 r) / b
+        da/dp = mu lam / q^2,
+        d(b^2)/dp = lam^2 (sigma^2/q^2 + mu^2 (1+p)/q^3),
+        db/dp = d(b^2)/dp / (2 b)
+      ``c_rho`` is the coefficient for p (extra row 0); lam (row 1) is a
+      pricing constant with documented-zero cotangent.
     * empirical: all zero (mus/sigmas unused; mixture params are constants).
     """
     _check_dist(dist_id)
@@ -536,6 +663,25 @@ def family_param_coeffs(dist_id: str, w, mu, sigma, extra):
         c_sigma = (guard(mu * g * inv_ws2), guard(-inv_ws2), zero)
         c_rho = (guard(-0.5 * mu * w / jnp.where(ok, sigma, 1.0)), zero, zero)
         return c_mu, c_sigma, c_rho
+    if dist_id == "defective":
+        p = jnp.minimum(extra[0], 1.0 - _Q_FLOOR)
+        lam = extra[1]
+        q = 1.0 - p
+        ratio = p / q
+        _, b = _defective_ab(mu, sigma, extra)
+        inv_b = 1.0 / jnp.where(ok, b, 1.0)
+        inv_b2 = inv_b * inv_b
+        da_dmu = 1.0 + lam * ratio
+        db_dmu_b = lam * lam * mu * (ratio / q) * inv_b2   # (db/dmu)/b
+        db_dsg_b = sigma * (1.0 + lam * lam * ratio) * inv_b2
+        da_dp = mu * lam / (q * q)
+        db2_dp = lam * lam * (sigma * sigma / (q * q)
+                              + mu * mu * (1.0 + p) / (q * q * q))
+        db_dp_b = 0.5 * db2_dp * inv_b2                    # (db/dp)/b
+        c_mu = (guard(-da_dmu * inv_b), zero, guard(-db_dmu_b))
+        c_sigma = (zero, zero, guard(-db_dsg_b))
+        c_p = (guard(-da_dp * inv_b), zero, guard(-db_dp_b))
+        return c_mu, c_sigma, c_p
     # empirical: the mixture CDF never reads (mu, sigma); extra is a constant
     return z3, z3, z3
 
@@ -548,6 +694,9 @@ def family_dreach(dist_id: str, w, mu, sigma, extra, z: float):
     if dist_id == "drift":
         rho = extra[0]
         return mu * (1.0 + rho * w) + z * sigma
+    if dist_id == "defective":
+        a, b = _defective_ab(mu, sigma, extra)
+        return a + z * b
     m_mix, s_mix = _mixture_stats(extra)
     return (m_mix + z * s_mix) * jnp.ones_like(w)
 
@@ -563,6 +712,9 @@ def family_dreach_params(dist_id: str, w, mu, sigma, extra, z: float):
     * normal / lognormal: mean = w mu, std = w sigma -> (w, z w, 0)
     * drift: mean = mu g(w) with g = w(1 + rho w/2), std = w sigma
       -> (g(w), z w, mu w^2/2)
+    * defective: mean = w a, std = w b -> w (da/d. + z db/d.) with the
+      chain-rule pieces from :func:`family_param_coeffs`; db-terms are
+      gated on b > 0 (a spread-free channel's reach moves only through a).
     * empirical: the mixture stats ignore (mu, sigma) -> all zero.
     """
     _check_dist(dist_id)
@@ -573,6 +725,24 @@ def family_dreach_params(dist_id: str, w, mu, sigma, extra, z: float):
     if dist_id == "drift":
         g = _drift_mean_scale(w, extra)
         return g * ones, z * w * ones, 0.5 * mu * w * w * ones
+    if dist_id == "defective":
+        p = jnp.minimum(extra[0], 1.0 - _Q_FLOOR)
+        lam = extra[1]
+        q = 1.0 - p
+        ratio = p / q
+        _, b = _defective_ab(mu, sigma, extra)
+        b_ok = b > 0.0
+        inv_b = 1.0 / jnp.where(b_ok, b, 1.0)
+        db_dmu = jnp.where(b_ok, lam * lam * mu * (ratio / q) * inv_b, 0.0)
+        db_dsg = jnp.where(b_ok, sigma * (1.0 + lam * lam * ratio) * inv_b,
+                           0.0)
+        db2_dp = lam * lam * (sigma * sigma / (q * q)
+                              + mu * mu * (1.0 + p) / (q * q * q))
+        db_dp = jnp.where(b_ok, 0.5 * db2_dp * inv_b, 0.0)
+        d_mu = w * ((1.0 + lam * ratio) + z * db_dmu)
+        d_sg = w * z * db_dsg
+        d_p = w * (mu * lam / (q * q) + z * db_dp)
+        return d_mu * ones, d_sg * ones, d_p * ones
     return zero, zero, zero
 
 
@@ -601,6 +771,21 @@ def family_sample(dist_id: str, rng: np.random.Generator, w, mu, sigma, extra,
         rho = extra[0]
         base = w * rng.normal(mu, sigma, size=(size, w.shape[0]))
         return base + 0.5 * rho * mu * w * w  # deterministic mean inflation
+    if dist_id == "defective":
+        # the PHYSICAL retry process, failures actually injected:
+        # T = w (A_0 + lam sum_{i<=N} A_i), A_i ~ N(mu, sigma^2) iid,
+        # N ~ Geom failures-before-success. Per-channel moments match the
+        # family's (a, b) exactly; the JOIN inherits the Gaussian shape
+        # approximation (the model law is the moment-matched normal).
+        p = np.clip(extra[0], 0.0, 1.0 - _Q_FLOOR)
+        lam = extra[1]
+        K = w.shape[0]
+        succ = rng.normal(mu, sigma, size=(size, K))
+        nfail = rng.geometric(1.0 - p, size=(size, K)) - 1
+        # sum of N iid normals drawn exactly: N(N mu, N sigma^2)
+        lost = nfail * mu + np.sqrt(nfail.astype(np.float64)) * sigma \
+            * rng.standard_normal((size, K))
+        return w * (succ + lam * lost)
     C = EMP_COMPONENTS
     pis = extra[:C].T                       # (K, C)
     ms, ss = extra[C:2 * C].T, extra[2 * C:3 * C].T
@@ -669,6 +854,62 @@ class Drift(ChannelFamily):
 
     def state_dict(self) -> dict:
         return {"dist_id": "drift", "rho": np.asarray(self.rho).tolist()}
+
+
+# Failure pricing modes: the fraction of an attempt a failed attempt costs.
+# "retry" re-runs from scratch (all sunk work lost); "resume" assumes
+# continuous mid-attempt checkpointing, losing half an attempt in expectation
+# (failure point uniform over the attempt).
+DEFECTIVE_PRICING = {"retry": 1.0, "resume": 0.5}
+
+
+@dataclass(frozen=True)
+class Defective(ChannelFamily):
+    """Failure-aware family: per-channel attempt-failure probability ``p``.
+
+    Each attempt on channel k fails independently with probability ``p[k]``
+    and is re-run; the pricing mode fixes how much of an attempt a failure
+    costs (``"retry"``: 1.0, ``"resume"``: 0.5, or any float in [0, 1]).
+    ``p`` may be a scalar (broadcast) or per-channel. ``p = 0`` reduces the
+    channel to the normal family exactly, so one Defective family covers a
+    fleet where only some channels are flaky — and the solver prices both
+    the mean inflation and the retry variance instead of discovering the
+    failures as realized stragglers.
+    """
+
+    p: object = 0.0
+    lam: object = 1.0
+
+    def __init__(self, p=0.0, pricing="retry"):
+        super().__init__(dist_id="defective")
+        if isinstance(pricing, str):
+            if pricing not in DEFECTIVE_PRICING:
+                raise ValueError(f"pricing must be one of "
+                                 f"{sorted(DEFECTIVE_PRICING)} or a float in "
+                                 f"[0, 1], got {pricing!r}")
+            lam = DEFECTIVE_PRICING[pricing]
+        else:
+            lam = float(pricing)
+            if not 0.0 <= lam <= 1.0:
+                raise ValueError(f"pricing fraction must lie in [0, 1], "
+                                 f"got {lam}")
+        p_arr = np.asarray(p, np.float32)
+        if p_arr.size and (float(p_arr.min()) < 0.0
+                           or float(p_arr.max()) > 1.0):
+            raise ValueError("failure probabilities must lie in [0, 1], got "
+                             f"range [{float(p_arr.min())}, "
+                             f"{float(p_arr.max())}]")
+        object.__setattr__(self, "p", p_arr)
+        object.__setattr__(self, "lam", np.float32(lam))
+
+    def extra(self, k: int) -> np.ndarray:
+        p = np.broadcast_to(np.asarray(self.p, np.float32), (k,))
+        lam = np.full((k,), self.lam, np.float32)
+        return np.stack([p, lam])
+
+    def state_dict(self) -> dict:
+        return {"dist_id": "defective", "p": np.asarray(self.p).tolist(),
+                "lam": float(self.lam)}
 
 
 @dataclass(frozen=True)
@@ -781,6 +1022,10 @@ def get_family(family) -> ChannelFamily:
             raise ValueError("the empirical family carries fitted parameters; "
                              "build it with Empirical.from_samples(...) "
                              "instead of the bare name")
+        if family == "defective":
+            raise ValueError("the defective family carries failure "
+                             "probabilities; build it with Defective(p, "
+                             "pricing=...) instead of the bare name")
         if family in _SINGLETONS:
             return _SINGLETONS[family]
         raise ValueError(f"unknown family {family!r}; expected one of "
@@ -793,6 +1038,9 @@ def get_family(family) -> ChannelFamily:
         if dist == "empirical":
             return Empirical(np.asarray(d["weights"]), np.asarray(d["means"]),
                              np.asarray(d["stds"]))
+        if dist == "defective":
+            return Defective(np.asarray(d["p"], np.float32),
+                             pricing=float(d.get("lam", 1.0)))
         return _SINGLETONS[dist]
     raise TypeError(f"cannot interpret {type(family).__name__} as a family")
 
@@ -821,3 +1069,78 @@ def resolve_family(family, k: int) -> Tuple[str, np.ndarray]:
         return dist_id, extra
     fam = get_family(family)
     return fam.dist_id, fam.extra(k)
+
+
+def family_from_extra(dist_id: str, extra) -> ChannelFamily:
+    """Raise a lowered ``(dist_id, extra (E, K))`` pair back to a
+    ChannelFamily instance — the inverse of :func:`resolve_family` for
+    concrete (non-traced) extras. Used by layers that transform the lowered
+    parameters (e.g. the sunk-work remaining-stats rescaling) and then need
+    a family object for API boundaries that validate specs (Stage, checks)."""
+    _check_dist(dist_id)
+    ex = np.asarray(extra, np.float32)
+    if dist_id == "normal":
+        return _SINGLETONS["normal"]
+    if dist_id == "lognormal":
+        return _SINGLETONS["lognormal"]
+    if dist_id == "drift":
+        return Drift(ex[0])
+    if dist_id == "defective":
+        lam = float(ex[1].flat[0]) if ex[1].size else 1.0
+        return Defective(np.clip(ex[0], 0.0, 1.0), pricing=lam)
+    C = EMP_COMPONENTS
+    return Empirical(ex[0:C], ex[C:2 * C], ex[2 * C:3 * C])
+
+
+def remaining_work_stats(dist_id: str, mus, sigmas, extra, done):
+    """Channel statistics for the *remaining* work after sunk progress.
+
+    The mid-flight re-solve contract (host-side, numpy): ``done`` is the
+    per-channel work fraction already completed, ``r = max(1 - sum(done), 0)``
+    the total remaining work, and the re-solve optimizes a fresh unit simplex
+    over statistics rescaled so that assigning remaining-share ``w'`` means
+    executing ``w' * r`` units of original work:
+
+    * scale families (normal, lognormal, defective, empirical): completion
+      time of ``s`` units is ``s``-linear, so ``(mu, sigma) -> (r mu,
+      r sigma)`` (mixture rows likewise); shape parameters (``p``, ``lam``,
+      mixture weights) are per-attempt physics and do not rescale.
+    * drift: a channel that already executed ``d_k`` units sits at inflated
+      instantaneous rate ``mu (1 + rho d_k)``; the residual completion time
+      of ``s`` more units is ``N(s mu (1 + rho d_k)(1 + rho' s/2),
+      (s sigma)^2)`` with ``rho' = rho / (1 + rho d_k)``. Substituting
+      ``s = w' r`` gives ``mu' = r mu (1 + rho d_k)``, ``sigma' = r sigma``,
+      ``rho'' = rho r / (1 + rho d_k)``.
+
+    Returns ``(mus_r, sigmas_r, extra_r, r)`` as float64 numpy arrays plus
+    the scalar remaining fraction. ``r == 0`` returns all-zero stats — the
+    caller should short-circuit (nothing left to solve).
+    """
+    _check_dist(dist_id)
+    mus = np.asarray(mus, np.float64)
+    sigmas = np.asarray(sigmas, np.float64)
+    extra = np.asarray(extra, np.float64)
+    done = np.asarray(done, np.float64)
+    if done.shape != mus.shape:
+        raise ValueError(f"done must be per-channel {mus.shape}, "
+                         f"got {done.shape}")
+    if done.size and (float(done.min()) < -1e-9
+                      or float(done.sum()) > 1.0 + 1e-6):
+        raise ValueError("done fractions must be nonnegative with total "
+                         f"<= 1, got sum {float(done.sum()):.6f}, "
+                         f"min {float(done.min()):.3e}")
+    r = float(max(1.0 - done.sum(), 0.0))
+    extra_r = extra.copy()
+    if dist_id == "drift":
+        rho = extra[0]
+        inflate = 1.0 + rho * done
+        mus_r = r * mus * inflate
+        sigmas_r = r * sigmas
+        extra_r[0] = rho * r / np.maximum(inflate, 1e-12)
+        return mus_r, sigmas_r, extra_r, r
+    if dist_id == "empirical":
+        C = EMP_COMPONENTS
+        extra_r[C:3 * C] *= r  # component means and stds scale; weights don't
+        return r * mus, r * sigmas, extra_r, r
+    # normal / lognormal / defective: pure scale families, shape params fixed
+    return r * mus, r * sigmas, extra_r, r

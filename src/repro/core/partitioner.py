@@ -31,7 +31,8 @@ import numpy as np
 
 from ..analysis import sanitize as _san
 from ..kernels import ops
-from .distributions import resolve_family, scaled_channel_params
+from .distributions import (remaining_work_stats, resolve_family,
+                            scaled_channel_params)
 from .frontier import frontier_2ch, select_on_frontier
 from .maxstat import clark_max_moments_seq, max_moments_quad_w
 
@@ -157,7 +158,8 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      block_f: Optional[int] = None,
                      family="normal", risk_lam: float = 0.0,
                      posterior=None,
-                     return_sensitivity: bool = False):
+                     return_sensitivity: bool = False,
+                     done=None):
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
     Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
@@ -184,11 +186,31 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
       split when ``posterior`` is given (closed-form d(moments)/d(m, kappa,
       alpha, beta)), else a ``MomentSensitivity`` (d(moments)/d(mus, sigmas,
       rho)).
+    * ``done`` (per-channel completed work fractions): the sunk-work
+      mid-flight re-solve. Channel statistics are rescaled to the remaining
+      work ``r = 1 - sum(done)`` through
+      ``distributions.remaining_work_stats`` (drift channels keep their
+      inflated instantaneous rate — see there for the per-family algebra),
+      and the returned weights are shares OF THE REMAINING WORK: channel k
+      executes ``weights[k] * r`` more units of the original job. The
+      predicted moments are for the remaining work only — add the caller's
+      elapsed wall time for an end-to-end estimate.
     """
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
     k = mus.shape[0]
     dist_id, extra = resolve_family(family, k)
+    if done is not None:
+        mus_r, sigmas_r, extra_r, r = remaining_work_stats(
+            dist_id, np.asarray(mus), np.asarray(sigmas), np.asarray(extra),
+            done)
+        if r <= 0.0:
+            # nothing left to solve: degenerate all-done decision
+            return PartitionDecision(weights=np.zeros(k), mu=0.0, var=0.0,
+                                     method="pgd-simplex-done")
+        mus = jnp.asarray(mus_r, jnp.float32)
+        sigmas = jnp.asarray(sigmas_r, jnp.float32)
+        extra = extra_r
     extra = jnp.asarray(extra, jnp.float32)
     starts = [equal_split(k), inverse_mu_split(mus)]
     if warm_start is not None:
@@ -203,7 +225,7 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
     if _san.enabled():
         # sanitizer tier: eager boundary validation, then the jitted solver
         # under checkify so the in-loop invariant checks are functionalized
-        _san.check_frontier_inputs(W0, mus, sigmas, extra)
+        _san.check_frontier_inputs(W0, mus, sigmas, extra, dist_id=dist_id)
         Wf = _san.run_checked(
             partial(_pgd_multi, steps=steps, num_t=num_t, impl=impl,
                     block_f=block_f, dist_id=dist_id, sanitize=True),

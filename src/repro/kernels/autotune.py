@@ -48,7 +48,8 @@ from typing import Dict, Optional, Sequence, Tuple
 _log = logging.getLogger(__name__)
 
 __all__ = ["BLOCK_F_CANDIDATES", "vmem_bytes", "pick_block_f", "lookup",
-           "sweep", "clear_cache", "default_cache_path"]
+           "sweep", "clear_cache", "default_cache_path", "cache_state",
+           "load_cache_state"]
 
 BLOCK_F_CANDIDATES: Tuple[int, ...] = (32, 64, 128, 256, 512)
 
@@ -139,9 +140,10 @@ def vmem_bytes(block_f: int, num_k: int, num_t: int, fused: bool = False,
     where the scale-like families carry two, and the ``empirical`` mixture
     holds C-1 extra per-component tiles live per channel step — which is why
     the family is part of the autotune key. Full-parameter mode (``params``)
-    widens the basis again (lognormal's z feature: up to three accumulator
-    pairs, six live (bf, K) accumulators) and adds the six channel-statistic
-    gradient output tiles — the ``pgrad`` key mode. The ``stacked``
+    widens the basis again (the z feature of lognormal and defective: up to
+    three accumulator pairs, six live (bf, K) accumulators — defective's
+    {1, t, z} basis is the widest of any family) and adds the six
+    channel-statistic gradient output tiles — the ``pgrad`` key mode. The ``stacked``
     (per-row statistics) layout grows the mus/sigmas tiles from (1, K) to
     (bf, K) and the extra tile to (E, bf, K): 1 + E more (bf, K)-equivalents
     per program (one of the two stat tiles was already counted).
@@ -262,6 +264,9 @@ def sweep(F: int, K: int, num_t: int, backend: str = "xla",
         from repro.core.distributions import Empirical
         family = Empirical.from_samples(
             rng.normal(mus[None, :], sgs[None, :], size=(256, K)))
+    elif dist_id == "defective":
+        from repro.core.distributions import Defective
+        family = Defective(rng.uniform(0.0, 0.3, K).astype(np.float32))
     else:
         family = dist_id
 
@@ -313,3 +318,25 @@ def clear_cache() -> None:
     """Drop the in-process cache (tests use this to exercise JSON round-trips)."""
     _CACHE.clear()
     _JSON_LOADED.clear()
+
+
+def cache_state() -> dict:
+    """Snapshot the in-process cache for a pipeline checkpoint manifest.
+
+    The kill/restore tick-parity contract (see ``ckpt.store``) includes the
+    autotune cache: a restored replica that re-derives block_f from the model
+    while the original process held a sweep result would launch a different
+    kernel shape — numerically identical, but a different compile and a
+    different performance cliff. Snapshotting the cache (entries are small
+    JSON-able dicts) makes the restored process pick identical launches.
+    """
+    return {k: dict(v) for k, v in _CACHE.items()}
+
+
+def load_cache_state(state: dict) -> None:
+    """Restore a :func:`cache_state` snapshot (keys migrated like the JSON
+    cache; sweep entries outrank model-derived in-process ones)."""
+    for k, v in state.items():
+        k = _migrate_key(k)
+        if k not in _CACHE or _CACHE[k].get("source") != "sweep":
+            _CACHE[k] = dict(v)

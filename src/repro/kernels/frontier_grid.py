@@ -1,8 +1,8 @@
 """The paper's hot loop as a Pallas TPU kernel: survival-integral moments for a
 grid of candidate splits, with an optional fused analytic-gradient pass —
 generalized over pluggable completion-time families (normal / lognormal /
-drift / empirical, selected by a **static** ``dist_id`` so every family
-compiles to its own specialized kernel).
+drift / empirical / defective, selected by a **static** ``dist_id`` so every
+family compiles to its own specialized kernel).
 
 Why a kernel: at fleet scale the scheduler re-evaluates mu(w), sigma^2(w) for
 thousands of candidate splits x hundreds/thousands of channels every rebalance
@@ -54,6 +54,11 @@ with per-channel constants (family_coeffs):
     lognormal   alpha=-1/(w s_l),     beta=0,               gamma0=1/s_l
     drift       alpha=-rho mu/(2 s),  beta=-1/(w^2 sigma),  gamma1=1/(w sigma)
     empirical   alpha=0,              beta=-1/w^2,          gamma1=1/w
+    defective   alpha=0,              beta=-1/(w^2 b),      gamma1=1/(w b)
+
+(defective is the normal family with the retry-inflated moments (a, b)
+substituted for (mu, sigma) — a pure scale family in w; see
+``distributions._defective_ab``.)
 
 (lognormal's z-score lives in log-space, so its dw-derivative is t-free;
 drift's z = (t - mu g(w))/(w sigma) with g = w(1 + rho w/2) contributes both
@@ -71,8 +76,8 @@ Parameter adjoints (the closed estimation loop)
 -----------------------------------------------
 
 The channel statistics are learned online, so the solve must also be
-differentiable in mu_k, sigma_k and the family extras (drift's rho_k). The
-SAME contraction covers them: for any per-channel parameter theta_k,
+differentiable in mu_k, sigma_k and the family extras (drift's rho_k,
+defective's failure probability p_k). The SAME contraction covers them: for any per-channel parameter theta_k,
 
     d log C_k / d theta_k |_t = g_jk * (a_k + b_k t + c_k z_jk)
 
@@ -86,9 +91,14 @@ is affine in the widened feature basis {1, t, z} (family_param_coeffs):
                 dz/dsigma = mu g/(w sigma^2) - t/(w s^2)   {1, t}
                 dz/drho = -mu w/(2 sigma)                  {1}
     empirical   (mus/sigmas unused; mixture extras are solve constants)
+    defective   dz/dtheta = -(da/dtheta)/b
+                            - z (db/dtheta)/b              {1, z}
+                (theta in {mu, sigma, p}; lam is a pricing
+                constant with documented-zero cotangent)
 
-The z feature is lognormal-only: its moment-matched shape s_l(mu, sigma)
-moves with the statistics, so dz/dmu picks up a term proportional to z
+The z feature belongs to the families whose *spread* moves with the
+statistics: lognormal's moment-matched shape s_l(mu, sigma) and defective's
+composite b(mu, sigma, p), so dz/dmu picks up a term proportional to z
 itself — which contracts against two more accumulators
 
     Pz_k  = sum_j a_jk z_jk         Pvz_k = sum_j a_jk z_jk (t_j - mu)
@@ -418,8 +428,8 @@ def frontier_grid_with_grads(W, mus, sigmas, extra=None, *, num_t: int = 1024,
     family statically selected by ``dist_id``. With ``param_grads=True`` the
     same single launch additionally emits the channel-statistic adjoints —
     ``(dmu_dmus, dvar_dmus, dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)``,
-    all (F, K), ``d*_dex`` being extra row 0 (drift's rho; zeros for families
-    without differentiable extra) — the full-parameter mode the estimation
+    all (F, K), ``d*_dex`` being extra row 0 (drift's rho, defective's p; zeros for
+    families without differentiable extra) — the full-parameter mode the estimation
     loop's custom VJP rides. ``mus``/``sigmas`` may be (F, K) per-row
     statistics (``extra`` then (E, F, K)) exactly as in
     :func:`frontier_grid`; the adjoint outputs are per-row either way, so

@@ -356,8 +356,10 @@ def _frontier_moments_vjp_bwd(num_t, impl, bfs, z, dist_id, res, cts):
     d_mus = g_mu @ dmu_m + g_var @ dvar_m
     d_sigmas = g_mu @ dmu_s + g_var @ dvar_s
     # extra cotangent: row 0 carries the differentiable shape parameter
-    # (drift's rho); remaining rows (and all rows for the other families) are
-    # solve constants with zero cotangent by contract
+    # (drift's rho, defective's failure probability p); remaining rows (the
+    # defective pricing constant lam, the empirical mixture parameters, and
+    # all rows for the other families) are solve constants with zero
+    # cotangent by contract
     d_extra = jnp.zeros_like(extra)
     d_extra = d_extra.at[0].set(g_mu @ dmu_e + g_var @ dvar_e)
     return dW, d_mus, d_sigmas, d_extra
@@ -377,7 +379,8 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     route here. ``family`` selects the per-channel completion-time
     distribution — a name in {normal, lognormal, drift} or a
     ``core.distributions.ChannelFamily`` instance (Drift with per-channel
-    rates, a fitted Empirical mixture); it lowers to a static ``dist_id`` so
+    rates, a fitted Empirical mixture, Defective with per-channel failure
+    probabilities); it lowers to a static ``dist_id`` so
     each family compiles to its own specialized kernel. F is padded to a
     ``block_f`` multiple internally (padding rows repeat row 0 and are sliced
     off), so callers never see the kernel's divisibility requirement. When
@@ -392,9 +395,9 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     backprops through the analytic adjoint of the (family-parametric)
     survival integral (see ``frontier_grid.py``) instead of
     autodiff-replaying the quadrature — in the split weights ``W`` AND in
-    the channel statistics: ``mus``, ``sigmas`` and, for the drift family,
-    ``extra`` row 0 (per-channel ``rho``) all receive nonzero analytic
-    cotangents, which is what lets ``core.sensitivity`` chain the solve
+    the channel statistics: ``mus``, ``sigmas`` and, for the drift and
+    defective families, ``extra`` row 0 (per-channel ``rho`` / failure
+    probability ``p``) all receive nonzero analytic cotangents, which is what lets ``core.sensitivity`` chain the solve
     through the NIG posterior parameters (the closed estimation loop of
     arXiv:1511.00613). The empirical family's mixture parameters remain
     solve constants (re-fit from data, never descended): their cotangents
@@ -415,7 +418,7 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     sigmas = jnp.asarray(sigmas, jnp.float32)
     F, K = W.shape
     dist_id, extra = _resolve_family(family, K)
-    _san.check_frontier_inputs(W, mus, sigmas, extra)
+    _san.check_frontier_inputs(W, mus, sigmas, extra, dist_id=dist_id)
     stacked = mus.ndim == 2
     if stacked:
         extra = _stack_extra(extra, F)
@@ -451,7 +454,8 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
         (mu, var, dmu_dW, dvar_dW, dmu_dmus, dvar_dmus,
          dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)
 
-    (``d*_dex`` = extra row 0, drift's ``rho``; zeros for other families) —
+    (``d*_dex`` = extra row 0, drift's ``rho`` or defective's ``p``;
+    zeros for other families) —
     the surface ``core.sensitivity`` and the posterior-sensitivity analysis
     consume. Family/padding/autotune glue matches :func:`frontier_moments`,
     including the stage-stacked per-row statistics layout (``mus``/``sigmas``
@@ -464,7 +468,7 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
     dist_id, extra = _resolve_family(family, W.shape[1])
-    _san.check_frontier_inputs(W, mus, sigmas, extra)
+    _san.check_frontier_inputs(W, mus, sigmas, extra, dist_id=dist_id)
     stacked = mus.ndim == 2
     if stacked:
         extra = _stack_extra(extra, W.shape[0])

@@ -3,6 +3,11 @@
 These are the semantics; the kernels must match them (asserted by
 tests/test_kernels.py across shape/dtype sweeps, kernels run in
 interpret=True on CPU).
+
+The frontier oracles are family-generic: every completion-time family in
+``core.distributions.FAMILIES`` — normal, lognormal, drift, empirical,
+defective — flows through the ``dists.family_*`` dispatch on the static
+``dist_id``; there are no per-family branches in the quadrature itself.
 """
 from __future__ import annotations
 
@@ -110,9 +115,11 @@ def frontier_grid_with_grads_ref(W, mus, sigmas, num_t: int = 1024,
          dmu_dsigmas, dvar_dsigmas, dmu_dex, dvar_dex)
 
     where ``dmu_dmus[f, k] = d mu_f / d mu_k`` etc. and ``d*_dex`` is the
-    cotangent of ``extra`` **row 0** — drift's per-channel ``rho``; zero for
-    every other family (the empirical mixture's fitted parameters are solve
-    constants by contract, see ``distributions.family_has_extra_grads``).
+    cotangent of ``extra`` **row 0** — drift's per-channel ``rho``, the
+    defective family's failure probability ``p``; zero for every other
+    family (the empirical mixture's fitted parameters, like defective's
+    pricing constant ``lam`` in row 1, are solve constants by contract, see
+    ``distributions.family_has_extra_grads``).
     This is the estimation-loop surface: the ``frontier_moments`` custom VJP
     and ``core.sensitivity`` ride these outputs to differentiate the solve
     through the posterior point estimates.

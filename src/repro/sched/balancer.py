@@ -118,6 +118,7 @@ class UncertaintyAwareBalancer:
     _last_scores: object = field(default=None, repr=False)
     _effective_refresh: Optional[int] = field(default=None, repr=False)
     _last_fragility: Optional[float] = field(default=None, repr=False)
+    _last_rel_fragility: Optional[float] = field(default=None, repr=False)
     _hist_rates: list = field(default_factory=list, repr=False)
     _hist_work: list = field(default_factory=list, repr=False)
     _hist_mask: list = field(default_factory=list, repr=False)
@@ -291,6 +292,7 @@ class UncertaintyAwareBalancer:
                 if self.adaptive_refresh:
                     dec, report = out
                     self._last_fragility = report.fragility
+                    self._last_rel_fragility = report.relative_fragility
                     self._size_refresh(report.relative_fragility)
                 else:
                     dec = out
@@ -321,6 +323,65 @@ class UncertaintyAwareBalancer:
     def assign(self, total_units: int) -> np.ndarray:
         """Integer work assignment (e.g. microbatch counts per pod)."""
         return integerize(self.weights(), total_units)
+
+    def resolve_inflight(self, done, failed=None) -> np.ndarray:
+        """Sunk-work-aware mid-flight re-solve (the failure-recovery tick).
+
+        ``done`` is the per-channel work fraction already completed (of the
+        WHOLE job, so ``sum(done) <= 1``); ``failed`` an optional iterable of
+        channel indices currently dead — they are excluded from the re-solve
+        and receive exactly zero share. Returns shares of the REMAINING work
+        ``r = 1 - sum(done)``: channel k should execute ``out[k] * r`` more
+        units. The cached full-work solve is untouched (this decision is
+        about a partially-executed instance, not the steady-state split).
+
+        The re-solve is warm-started from the previous solve minus the sunk
+        progress, and fragility-gated: with no failures, an adaptive-refresh
+        balancer whose last solve was firm (relative fragility at or under
+        ``refresh_target_rel``) skips the PGD entirely — the warm start IS
+        the answer to within-tolerance, exactly the cadence logic the
+        steady-state tick uses. Any failure always forces the solve: losing
+        a channel is a model change, never absorbable drift.
+        """
+        from ..core.distributions import remaining_work_stats, resolve_family
+
+        done = np.asarray(done, np.float64)
+        k = self.num_channels
+        active = np.ones(k, bool)
+        if failed is not None:
+            failed = np.asarray(sorted(set(int(i) for i in failed)), int)
+            active[failed] = False
+        r = float(max(1.0 - done.sum(), 0.0))
+        if r <= 0.0 or not active.any():
+            return np.zeros(k)
+        mus, sigmas = self.estimates()
+        dist_id, extra = resolve_family(self.selected_family, k)
+        mus_r, sigmas_r, extra_r, _ = remaining_work_stats(
+            dist_id, mus, sigmas, np.asarray(extra), done)
+        prev = (self._cached_w
+                if self._cached_w is not None and len(self._cached_w) == k
+                else None)
+        if prev is not None:
+            warm = np.maximum(np.asarray(prev, np.float64) - done, 0.0)
+            warm *= active
+        else:
+            warm = active.astype(np.float64)
+        s = warm.sum()
+        warm = warm / s if s > 0 else active / active.sum()
+        if (active.all() and prev is not None and self.adaptive_refresh
+                and self._last_rel_fragility is not None
+                and self._last_rel_fragility <= self.refresh_target_rel):
+            return warm
+        idx = np.flatnonzero(active)
+        dec = optimize_weights(
+            mus_r[idx], sigmas_r[idx], lam=self.lam, steps=self.pgd_steps,
+            restarts=0, num_t=self.num_t, impl=self.impl,
+            block_f=self.block_f,
+            family=(dist_id, np.asarray(extra_r, np.float32)[:, idx]),
+            warm_start=warm[idx])
+        out = np.zeros(k)
+        out[idx] = dec.weights
+        return out
 
     def predicted_moments(self, weights: Optional[np.ndarray] = None,
                           family=None):
@@ -393,6 +454,8 @@ class UncertaintyAwareBalancer:
             "challenger_count": self._challenger_count,
             "obs_count": self._obs_count,
             "effective_refresh": self._effective_refresh,
+            "last_fragility": self._last_fragility,
+            "last_rel_fragility": self._last_rel_fragility,
             "cached_w": (None if self._cached_w is None
                          else np.asarray(self._cached_w).tolist()),
             "cached_family_key": self._cached_family_key,
@@ -434,6 +497,8 @@ class UncertaintyAwareBalancer:
         b._obs_count = d.get("obs_count", 0)
         b._effective_refresh = d.get("effective_refresh",
                                      max(b.refresh_every, 1))
+        b._last_fragility = d.get("last_fragility")
+        b._last_rel_fragility = d.get("last_rel_fragility")
         if d.get("cached_w") is not None:
             b._cached_w = np.asarray(d["cached_w"], np.float64)
             key = d.get("cached_family_key")
@@ -492,6 +557,7 @@ class WorkflowBalancer:
     _obs_count: int = 0
     _effective_refresh: Optional[int] = field(default=None, repr=False)
     _last_decision: object = field(default=None, repr=False)
+    _failed: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         if self._est is None:
@@ -531,6 +597,45 @@ class WorkflowBalancer:
             self._est[name].observe(durs, work[name])
         self._obs_count += 1
 
+    # ------------------------------------------------------------- failures
+    def handle_failure(self, stage: str, idx: int):
+        """A sim/operator failure event: channel ``idx`` of ``stage`` is
+        dead. It receives exactly zero share from every subsequent
+        ``weights()`` call (the remainder renormalized within the stage)
+        until :meth:`handle_recovery`. Invalidate the cached solve so the
+        next tick re-solves against the shrunken fleet."""
+        if not any(s.name == stage for s in self.dag.stages):
+            raise KeyError(f"unknown stage {stage!r}")
+        self._failed.setdefault(stage, set()).add(int(idx))
+        self._cached = None
+
+    def handle_recovery(self, stage: str, idx: int):
+        """Re-admit a recovered channel (no-op if it was never failed)."""
+        bad = self._failed.get(stage)
+        if bad is not None:
+            bad.discard(int(idx))
+            if not bad:
+                self._failed.pop(stage)
+        self._cached = None
+
+    def failed_channels(self) -> dict:
+        """{stage: sorted failed channel indices} — empty when healthy."""
+        return {n: sorted(v) for n, v in self._failed.items() if v}
+
+    def _mask_failed(self, name: str, w: np.ndarray) -> np.ndarray:
+        """Zero dead channels and renormalize the survivors' shares."""
+        bad = self._failed.get(name)
+        if not bad:
+            return w
+        w = w.copy()
+        w[sorted(bad)] = 0.0
+        s = w.sum()
+        if s > 0:
+            return w / s
+        alive = np.ones(len(w))
+        alive[sorted(bad)] = 0.0
+        return alive / max(alive.sum(), 1.0)
+
     # ------------------------------------------------------------ decisions
     def _live_dag(self):
         mus, sigmas, fams = {}, {}, {}
@@ -543,7 +648,14 @@ class WorkflowBalancer:
     def _solve_key(self) -> str:
         fams = [UncertaintyAwareBalancer._family_key(
             self._est[s.name].selected_family) for s in self.dag.stages]
-        return "|".join(fams)
+        key = "|".join(fams)
+        if self._failed:
+            # a failure/recovery event is a model change, not drift: the key
+            # shifts so any cached solve from the old fleet shape goes stale
+            bad = ";".join(f"{n}:{sorted(v)}"
+                           for n, v in sorted(self._failed.items()) if v)
+            key += f"|failed[{bad}]"
+        return key
 
     def weights(self) -> dict:
         """Current per-stage splits; re-solves jointly when stale."""
@@ -576,9 +688,15 @@ class WorkflowBalancer:
             self._cached_key = key
         out = {}
         for n, w in self._cached.items():
-            w = w.copy()
+            w = self._mask_failed(n, w.copy())
             if self.min_weight > 0:
-                w = np.maximum(w, self.min_weight)
+                # floor only the live channels — a dead channel's zero share
+                # is a hard constraint, not a starvation to fix
+                bad = self._failed.get(n)
+                live = np.ones(len(w), bool)
+                if bad:
+                    live[sorted(bad)] = False
+                w = np.where(live, np.maximum(w, self.min_weight), 0.0)
                 w = w / w.sum()
             out[n] = w
         return out
@@ -598,3 +716,93 @@ class WorkflowBalancer:
         dec = evaluate_dag(self._live_dag(), self.weights(),
                            num_t=max(self.num_t, 2048), impl=self.impl)
         return dec.makespan_mu, dec.makespan_var
+
+    def resolve_inflight(self, done: dict) -> dict:
+        """Sunk-work-aware joint re-solve of a partially executed pipeline.
+
+        ``done`` maps stage name -> per-channel fraction of that stage's
+        work already completed (``sum <= 1`` per stage; stages absent are
+        untouched). Returns {stage: shares of that stage's REMAINING work},
+        warm-started from the cached solve; dead channels (from
+        :meth:`handle_failure`) get exactly zero share. The steady-state
+        cache is untouched — this prices one wounded instance, not the
+        fleet's long-run split.
+        """
+        from ..workflow.solve import solve_dag  # lazy: layering
+
+        warm = (None if self._cached is None
+                else {n: self._mask_failed(n, w.copy())
+                      for n, w in self._cached.items()})
+        dec = solve_dag(self._live_dag(), lam_var=self.lam_var,
+                        steps=self.pgd_steps, restarts=0,
+                        num_t=self.num_t, impl=self.impl,
+                        block_f=self.block_f, warm_start=warm,
+                        done=done)
+        return {n: self._mask_failed(n, np.asarray(w, np.float64))
+                for n, w in dec.weights.items()}
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Everything but the DAG structure: a balancer restored against
+        the same DAG resumes identical ticks (same per-stage posteriors,
+        family selections, cached solve, cadence phase and failure set).
+        The DAG itself is code-side configuration and is passed back into
+        :meth:`from_state_dict` by the caller."""
+        return {
+            "kind": "workflow",
+            "lam_var": self.lam_var,
+            "family": ("auto" if (isinstance(self.family, str)
+                                  and self.family == "auto")
+                       else get_family(self.family).state_dict()),
+            "refresh_every": self.refresh_every,
+            "pgd_steps": self.pgd_steps,
+            "restarts": self.restarts,
+            "impl": self.impl, "num_t": self.num_t,
+            "block_f": self.block_f,
+            "risk_lam": self.risk_lam,
+            "adaptive_refresh": self.adaptive_refresh,
+            "refresh_target_rel": self.refresh_target_rel,
+            "prior_mean": self.prior_mean,
+            "min_weight": self.min_weight,
+            "obs_count": self._obs_count,
+            "effective_refresh": self._effective_refresh,
+            "cached": (None if self._cached is None
+                       else {n: np.asarray(w).tolist()
+                             for n, w in self._cached.items()}),
+            "cached_key": self._cached_key,
+            "failed": {n: sorted(v) for n, v in self._failed.items() if v},
+            "est": {n: e.state_dict() for n, e in self._est.items()},
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict, dag) -> "WorkflowBalancer":
+        fam_spec = d.get("family", "auto")
+        fam = "auto" if fam_spec == "auto" else get_family(fam_spec)
+        b = cls(dag=dag, lam_var=d.get("lam_var", 0.0), family=fam,
+                refresh_every=d.get("refresh_every", 1),
+                pgd_steps=d.get("pgd_steps", 60),
+                restarts=d.get("restarts", 1),
+                impl=d.get("impl", "xla"), num_t=d.get("num_t", 512),
+                block_f=d.get("block_f"),
+                risk_lam=d.get("risk_lam", 0.0),
+                adaptive_refresh=d.get("adaptive_refresh", False),
+                refresh_target_rel=d.get("refresh_target_rel", 0.02),
+                prior_mean=d.get("prior_mean", 1.0),
+                min_weight=d.get("min_weight", 0.0))
+        est = d.get("est", {})
+        for name, sd in est.items():
+            if name not in b._est:
+                raise ValueError(
+                    f"state_dict stage {name!r} not in the supplied DAG "
+                    f"(stages: {[s.name for s in dag.stages]})")
+            b._est[name] = UncertaintyAwareBalancer.from_state_dict(sd)
+        b._obs_count = d.get("obs_count", 0)
+        b._effective_refresh = d.get("effective_refresh",
+                                     max(b.refresh_every, 1))
+        if d.get("cached") is not None:
+            b._cached = {n: np.asarray(w, np.float64)
+                         for n, w in d["cached"].items()}
+            b._cached_key = d.get("cached_key")
+        b._failed = {n: set(int(i) for i in v)
+                     for n, v in d.get("failed", {}).items() if v}
+        return b

@@ -41,7 +41,9 @@ class StragglerPolicy:
     offenses: Dict[int, int] = field(default_factory=dict)
     quarantined: Dict[int, int] = field(default_factory=dict)  # idx -> step
     drift_rhos: Dict[int, float] = field(default_factory=dict)  # idx -> rho
+    failed: set = field(default_factory=set)   # soft-failed (recoverable)
     step: int = 0
+    _sim: object = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.mitigation not in ("quarantine", "drift"):
@@ -108,6 +110,8 @@ class StragglerPolicy:
             else self.balancer.weights()
         for i in self.quarantined:
             w[i] = 0.0
+        for i in self.failed:
+            w[i] = 0.0
         s = w.sum()
         return w / s if s > 0 else np.full_like(w, 1.0 / len(w))
 
@@ -115,14 +119,51 @@ class StragglerPolicy:
         from .balancer import integerize
         return integerize(self.weights(), total_units)
 
-    def fail(self, idx: int):
-        """Hard failure (missed heartbeat): remove the channel entirely."""
+    def fail(self, idx: int, remove: bool = True):
+        """Channel failure. ``remove=True`` (missed heartbeat, default) is
+        the elastic path: the channel and its posterior are deleted and every
+        index above shifts down. ``remove=False`` is a *soft* failure — the
+        channel keeps its posterior and index but receives zero weight from
+        :meth:`weights` until :meth:`recover`; this is the path the sim's
+        churn schedules drive, where a failed node is expected back."""
+        if not remove:
+            self.failed.add(int(idx))
+            if self._sim is not None:
+                self._sim.inject_failure(idx)
+            return
         self.balancer.remove_channel(idx)
         self.offenses = {i - (i > idx): c for i, c in self.offenses.items() if i != idx}
         self.quarantined = {i - (i > idx): s for i, s in self.quarantined.items()
                             if i != idx}
         self.drift_rhos = {i - (i > idx): r for i, r in self.drift_rhos.items()
                            if i != idx}
+        self.failed = {i - (i > idx) for i in self.failed if i != idx}
+
+    def recover(self, idx: int):
+        """Re-admit a soft-failed channel (posterior intact, weight > 0 on
+        the next tick)."""
+        self.failed.discard(int(idx))
+        if self._sim is not None:
+            self._sim.recover(idx)
+
+    def bind_sim(self, sim):
+        """Two-way wiring to a :class:`sim.cluster.ClusterSim`: ``fail(idx,
+        remove=False)`` / ``recover(idx)`` propagate to the sim's failure
+        flags, and :meth:`sync_with_sim` pulls sim-side churn (schedules,
+        direct ``inject_failure`` calls) back into the policy."""
+        self._sim = sim
+
+    def sync_with_sim(self) -> set:
+        """Adopt the bound sim's current failure flags as the soft-fail set.
+
+        Call once per tick after ``run_step`` so churn-schedule events the
+        policy never saw (the sim killed a node mid-trace) still zero that
+        channel's weight on the next decision. Returns the new set."""
+        if self._sim is None:
+            raise RuntimeError("no sim bound; call bind_sim(sim) first")
+        self.failed = {i for i, c in enumerate(self._sim.channels)
+                       if getattr(c, "failed", False)}
+        return set(self.failed)
 
     def join(self, prior_mean=None):
         """Elastic scale-up."""

@@ -125,6 +125,27 @@ class PartitionedBatcher:
         }
         return join_t, counts, responses
 
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Balancer AND sim-world snapshot: a batcher restored from this
+        replays bitwise-identical ticks (same splits, same simulated
+        durations, same posterior updates) — see ckpt/store.py's
+        kill/restore tick-parity contract. Replica groups (model handles)
+        are code-side configuration, like the workflow balancer's DAG."""
+        return {"balancer": self.balancer.state_dict(),
+                "sim": self.sim.state_dict()}
+
+    def load_state_dict(self, d: dict):
+        self.balancer = UncertaintyAwareBalancer.from_state_dict(
+            d["balancer"])
+        self.sim = ClusterSim.from_state_dict(d["sim"])
+        return self
+
+    @classmethod
+    def from_state_dict(cls, d: dict,
+                        groups: List[ReplicaGroup]) -> "PartitionedBatcher":
+        return cls(groups).load_state_dict(d)
+
 
 class PipelineBatcher:
     """A serving pipeline of :class:`PartitionedBatcher` stages over a
@@ -162,6 +183,20 @@ class PipelineBatcher:
     @property
     def selected_families(self) -> dict:
         return {n: b.selected_family for n, b in self.batchers.items()}
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Per-stage batcher snapshots (graph structure stays code-side)."""
+        return {"stages": {n: b.state_dict()
+                           for n, b in self.batchers.items()}}
+
+    def load_state_dict(self, d: dict):
+        for n, sd in d["stages"].items():
+            if n not in self.batchers:
+                raise ValueError(f"state_dict stage {n!r} not in this "
+                                 f"pipeline (stages: {self.names})")
+            self.batchers[n].load_state_dict(sd)
+        return self
 
     def run_batch(self, prompts: np.ndarray, max_new: int = 8,
                   execute: bool = False):

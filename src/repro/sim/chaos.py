@@ -1,0 +1,140 @@
+"""Chaos harness: drive a partitioning loop through churn and crash cycles.
+
+Two fault axes, composable in one trace:
+
+* **Channel churn** — the ClusterSim churn schedule (fail / throttle /
+  recover / load regimes) hits the fleet mid-trace; the balancer reacts by
+  re-solving over the survivors (``resolve_inflight``) so dead channels get
+  exactly zero share while their posteriors survive for re-admission.
+* **Process crashes** — every ``kill_every`` ticks the live balancer AND the
+  sim-world snapshot are thrown away and rebuilt from the last
+  ``ckpt.store.save_pipeline`` manifest, exactly what a failover replica
+  does. With ``verify_parity=True`` the harness computes the would-be
+  survivor's next decision before the kill and asserts the restored
+  replica's decision is bitwise identical — the kill/restore tick-parity
+  contract (see ckpt/store.py), enforced continuously instead of once in a
+  unit test.
+
+The harness is the engine under ``tests/test_fault.py``'s chaos smoke and
+the ``scripts/ci.sh`` chaos tier; ``benchmarks/fault_trace.py`` uses the
+same churn machinery but scores solver quality instead of crash safety.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..ckpt.store import restore_pipeline, save_pipeline
+from ..sched.balancer import UncertaintyAwareBalancer
+from .cluster import ClusterSim
+
+__all__ = ["ChaosResult", "run_chaos_trace"]
+
+
+@dataclass
+class ChaosResult:
+    """Outcome of one chaos trace (all fields JSON-serializable)."""
+
+    ticks: int
+    kills: int
+    parity_checks: int          # kill/restore decisions compared bitwise
+    joins: List[float]          # per-tick join latencies
+    events: List[Tuple[int, str, str]]  # (tick, kind, detail)
+    final_failed: List[int] = field(default_factory=list)
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks, "kills": self.kills,
+            "parity_checks": self.parity_checks,
+            "mean_join": float(np.mean(self.joins)) if self.joins else 0.0,
+            "events": len(self.events),
+            "final_failed": list(self.final_failed),
+        }
+
+
+def _decide(bal: UncertaintyAwareBalancer, sim: ClusterSim) -> np.ndarray:
+    """One tick's split: the steady-state solve, re-solved over survivors
+    when the sim shows dead channels (zero sunk work — each tick is a fresh
+    instance of the whole job)."""
+    failed = [i for i, c in enumerate(sim.channels) if c.failed]
+    if failed:
+        return bal.resolve_inflight(np.zeros(bal.num_channels),
+                                    failed=failed)
+    return bal.weights()
+
+
+def run_chaos_trace(num_channels: int = 6, ticks: int = 24,
+                    kill_every: int = 8, churn=None, seed: int = 0,
+                    dist: str = "normal", family="normal",
+                    lam: float = 0.05, ckpt_dir: Optional[str] = None,
+                    verify_parity: bool = True) -> ChaosResult:
+    """Run a partitioned trace under churn + kill/restore cycles.
+
+    ``churn``: iterable of ``(step, action, idx, value)`` tuples fed to
+    :meth:`ClusterSim.schedule_churn` (value may be None for fail/recover).
+    ``kill_every=0`` disables crashes (churn-only trace). Every tick is
+    checkpointed (manifest = balancer state + sim-world snapshot), so a
+    kill at tick t restores the tick-t boundary exactly.
+
+    Raises AssertionError if ``verify_parity`` and a restored replica's
+    next decision diverges bitwise from the would-be survivor's.
+    """
+    own_dir = ckpt_dir is None
+    if own_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_chaos_")
+        ckpt_dir = tmp.name
+    sim = ClusterSim.heterogeneous(num_channels, seed=seed, dist=dist)
+    for ev in (churn or ()):
+        step, action, idx, value = (tuple(ev) + (None, None))[:4]
+        sim.schedule_churn(step, action, idx, value)
+    bal = UncertaintyAwareBalancer(num_channels=num_channels, lam=lam,
+                                   family=family, explore=0.0)
+    joins: List[float] = []
+    events: List[Tuple[int, str, str]] = []
+    kills = parity = 0
+    try:
+        for t in range(1, ticks + 1):
+            w = _decide(bal, sim)
+            join_t, durs = sim.run_step(w)
+            bal.observe(durs, w)
+            joins.append(float(join_t))
+            save_pipeline(ckpt_dir, t, bal,
+                          inflight={"sim": sim.state_dict(),
+                                    "tick": t})
+            if kill_every and t % kill_every == 0 and t < ticks:
+                if verify_parity:
+                    # survivor's next decision, computed on an isolated
+                    # clone so the live balancer's caches stay untouched
+                    survivor = UncertaintyAwareBalancer.from_state_dict(
+                        bal.state_dict())
+                    sim_sv = ClusterSim.from_state_dict(sim.state_dict())
+                    w_expect = _decide(survivor, sim_sv)
+                # the crash: drop the live objects, restore the manifest
+                bal2, inflight, _ = restore_pipeline(ckpt_dir)
+                sim2 = ClusterSim.from_state_dict(inflight["sim"])
+                if verify_parity:
+                    w_got = _decide(
+                        UncertaintyAwareBalancer.from_state_dict(
+                            bal2.state_dict()),
+                        ClusterSim.from_state_dict(sim2.state_dict()))
+                    if not np.array_equal(np.asarray(w_expect),
+                                          np.asarray(w_got)):
+                        raise AssertionError(
+                            f"kill/restore parity broken at tick {t}: "
+                            f"survivor {w_expect} vs replica {w_got}")
+                    parity += 1
+                bal, sim = bal2, sim2
+                kills += 1
+                events.append((t, "kill_restore",
+                               f"restored step {t} from {ckpt_dir}"))
+    finally:
+        if own_dir:
+            tmp.cleanup()
+    return ChaosResult(
+        ticks=ticks, kills=kills, parity_checks=parity, joins=joins,
+        events=events,
+        final_failed=[i for i, c in enumerate(sim.channels) if c.failed])

@@ -31,21 +31,31 @@ from ..core.distributions import lognormal_shape_np
 
 __all__ = ["Channel", "ClusterSim", "WorkflowSim"]
 
-_DISTS = ("normal", "lognormal", "drift")
+_DISTS = ("normal", "lognormal", "drift", "defective")
+
+# churn-schedule verbs run_step understands (fault-tolerance traces)
+_CHURN_ACTIONS = ("fail", "recover", "throttle", "set_load")
 
 
 @dataclass
 class Channel:
     mu: float                      # mean seconds per unit work
     sigma: float                   # std seconds per unit work
-    dist: str = "normal"           # normal | lognormal | drift
+    dist: str = "normal"           # normal | lognormal | drift | defective
     drift: float = 0.0             # per-step multiplicative mu drift (hotspots)
     rho: float = 0.0               # within-work drift rate (dist == "drift")
+    fail_p: float = 0.0            # per-attempt failure prob (dist=="defective")
+    resume_frac: float = 1.0       # fraction of an attempt a failure costs
     failed: bool = False
 
     def __post_init__(self):
         if self.dist not in _DISTS:
             raise ValueError(f"dist must be one of {_DISTS}, got {self.dist!r}")
+        if not 0.0 <= self.fail_p <= 1.0:
+            raise ValueError(f"fail_p must lie in [0, 1], got {self.fail_p}")
+        if not 0.0 <= self.resume_frac <= 1.0:
+            raise ValueError(f"resume_frac must lie in [0, 1], "
+                             f"got {self.resume_frac}")
 
     def sample(self, rng: np.random.Generator, work: float) -> float:
         """Single-channel draw (the vectorized path in run_step is primary)."""
@@ -59,6 +69,13 @@ class Channel:
         dur = work * r
         if self.dist == "drift":
             dur += 0.5 * self.rho * self.mu * work * work
+        elif self.dist == "defective" and self.fail_p > 0:
+            # physical retry process: geometric number of failed attempts,
+            # each costing resume_frac of an attempt's (random) duration
+            nfail = int(rng.geometric(1.0 - min(self.fail_p, 1.0 - 1e-9))) - 1
+            lost = nfail * self.mu + np.sqrt(nfail) * self.sigma \
+                * rng.standard_normal()
+            dur += self.resume_frac * work * lost
         return max(dur, 1e-9)
 
 
@@ -74,6 +91,7 @@ class ClusterSim:
     seed: int = 0
     step_count: int = 0
     load_factor: float = 1.0
+    churn: dict = field(default_factory=dict)  # step -> [(action, idx, value)]
     rng: np.random.Generator = field(init=False)
 
     def __post_init__(self):
@@ -88,17 +106,54 @@ class ClusterSim:
     @classmethod
     def heterogeneous(cls, n: int, mu_range=(10.0, 40.0), cov_range=(0.02, 0.3),
                       seed: int = 0, dist: str = "normal",
-                      rho_range=(0.1, 0.8)) -> "ClusterSim":
+                      rho_range=(0.1, 0.8),
+                      fail_range=(0.02, 0.15)) -> "ClusterSim":
         """Random fleet; ``dist`` selects the regime (drift draws per-channel
-        rho from ``rho_range``)."""
+        rho from ``rho_range``; defective draws per-channel attempt-failure
+        probability from ``fail_range``)."""
         rng = np.random.default_rng(seed)
         chans = []
         for _ in range(n):
             mu = rng.uniform(*mu_range)
             sigma = mu * rng.uniform(*cov_range)
             rho = rng.uniform(*rho_range) if dist == "drift" else 0.0
-            chans.append(Channel(mu=mu, sigma=sigma, dist=dist, rho=rho))
+            fp = rng.uniform(*fail_range) if dist == "defective" else 0.0
+            chans.append(Channel(mu=mu, sigma=sigma, dist=dist, rho=rho,
+                                 fail_p=fp))
         return cls(channels=chans, seed=seed + 1)
+
+    # ------------------------------------------------------------- churn
+    def schedule_churn(self, step: int, action: str, idx: Optional[int] = None,
+                       value: Optional[float] = None):
+        """Queue a churn event for the ``step``-th future :meth:`run_step`
+        call (1-based, matching ``step_count`` after its increment).
+
+        Actions: ``"fail"`` / ``"recover"`` (channel ``idx`` dies / returns),
+        ``"throttle"`` (channel ``idx`` slows by factor ``value``),
+        ``"set_load"`` (fleet-wide congestion regime switches to ``value``).
+        Events fire BEFORE the step's draws, so a channel failed at step t
+        contributes nothing to step t — the same visibility a heartbeat
+        timeout gives a real scheduler.
+        """
+        if action not in _CHURN_ACTIONS:
+            raise ValueError(f"churn action must be one of {_CHURN_ACTIONS}, "
+                             f"got {action!r}")
+        if action in ("fail", "recover", "throttle") and idx is None:
+            raise ValueError(f"churn action {action!r} needs a channel idx")
+        if action in ("throttle", "set_load") and value is None:
+            raise ValueError(f"churn action {action!r} needs a value")
+        self.churn.setdefault(int(step), []).append((action, idx, value))
+
+    def _apply_churn(self):
+        for action, idx, value in self.churn.pop(self.step_count, ()):
+            if action == "fail":
+                self.inject_failure(idx)
+            elif action == "recover":
+                self.recover(idx)
+            elif action == "throttle":
+                self.inject_slowdown(idx, value)
+            else:
+                self.set_load(value)
 
     @property
     def true_params(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -133,6 +188,7 @@ class ClusterSim:
         simulator); mixed fleets add one lognormal draw for those channels.
         """
         self.step_count += 1
+        self._apply_churn()
         r = self._resolve_rng(rng)
         w = np.asarray(weights, np.float64).reshape(-1)
         if w.shape[0] != len(self.channels):
@@ -154,6 +210,18 @@ class ClusterSim:
                           for c in self.channels])
         if rho.any():
             durs = durs + 0.5 * rho * mu * w * w
+        pf = np.asarray([c.fail_p if c.dist == "defective" else 0.0
+                         for c in self.channels])
+        if pf.any():
+            # retry inflation: geometric failed-attempt count per channel,
+            # each failure costing resume_frac of an attempt's random length
+            # (all-normal fleets take zero extra draws — stream-compatible)
+            lam = np.asarray([c.resume_frac for c in self.channels])
+            q = np.clip(1.0 - pf, 1e-9, 1.0)
+            nfail = r.geometric(q) - 1
+            lost = nfail * mu + np.sqrt(nfail) * sigma \
+                * r.standard_normal(len(self.channels))
+            durs = durs + np.where(pf > 0, lam * w * lost, 0.0)
         if self.load_factor != 1.0:  # congestion regime: times scale fleet-wide
             durs = durs * self.load_factor
         durs = np.where(active, np.maximum(durs, 1e-9), 0.0)
@@ -161,6 +229,39 @@ class ClusterSim:
             if c.drift:
                 c.mu *= (1.0 + c.drift)
         return float(durs.max(initial=0.0)), durs
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Full world snapshot — channel physics, churn queue AND the rng
+        bit-generator state, so a restored sim replays the exact trace the
+        dead one would have produced (the sim side of the kill/restore
+        tick-parity contract)."""
+        return {
+            "seed": self.seed,
+            "step_count": self.step_count,
+            "load_factor": self.load_factor,
+            "churn": {str(k): [list(e) for e in v]
+                      for k, v in self.churn.items()},
+            "channels": [{
+                "mu": float(c.mu), "sigma": float(c.sigma), "dist": c.dist,
+                "drift": float(c.drift), "rho": float(c.rho),
+                "fail_p": float(c.fail_p),
+                "resume_frac": float(c.resume_frac), "failed": bool(c.failed),
+            } for c in self.channels],
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "ClusterSim":
+        sim = cls(channels=[Channel(**c) for c in d["channels"]],
+                  seed=d.get("seed", 0),
+                  step_count=d.get("step_count", 0),
+                  load_factor=d.get("load_factor", 1.0),
+                  churn={int(k): [tuple(e) for e in v]
+                         for k, v in d.get("churn", {}).items()})
+        if d.get("rng_state") is not None:
+            sim.rng.bit_generator.state = d["rng_state"]
+        return sim
 
     def inject_failure(self, idx: int):
         self.channels[idx].failed = True
@@ -208,12 +309,18 @@ class WorkflowSim:
         for i, s in enumerate(dag.stages):
             dist = s.dist_id if s.dist_id in _DISTS else "normal"
             rho = np.zeros(s.k)
-            if dist == "drift":
+            fail_p, resume = np.zeros(s.k), np.ones(s.k)
+            if dist in ("drift", "defective"):
                 from ..core.distributions import resolve_family
-                rho = np.asarray(resolve_family(s.family, s.k)[1][0],
-                                 np.float64)
+                ex = np.asarray(resolve_family(s.family, s.k)[1], np.float64)
+                if dist == "drift":
+                    rho = ex[0]
+                else:
+                    fail_p, resume = ex[0], ex[1]
             chans = [Channel(mu=float(s.mus[j]), sigma=float(s.sigmas[j]),
-                             dist=dist, rho=float(rho[j]))
+                             dist=dist, rho=float(rho[j]),
+                             fail_p=float(fail_p[j]),
+                             resume_frac=float(resume[j]))
                      for j in range(s.k)]
             sims[s.name] = ClusterSim(channels=chans, seed=seed + 1 + i)
         return cls(stage_sims=sims, seed=seed)

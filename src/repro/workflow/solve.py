@@ -299,6 +299,33 @@ def _dag_fragility(structure, groups, stats, se_stacks, W, smu, svar,
 
 
 # --------------------------------------------------------------------- solve
+def _dag_with_done(dag: StageDAG, done: Dict[str, np.ndarray]) -> StageDAG:
+    """Rescale named stages' statistics to their remaining work.
+
+    Per-stage :func:`core.distributions.remaining_work_stats`: a half-done
+    stage re-solves a fresh unit simplex over ``r``-scaled statistics; a
+    fully-done stage degenerates to all-zero stats (every channel a point
+    mass at 0 — zero duration, gates nothing).
+    """
+    mus_by, sgs_by, fam_by = {}, {}, {}
+    from ..core.distributions import family_from_extra, remaining_work_stats
+    for s in dag.stages:
+        if s.name not in done:
+            continue
+        dist_id, extra = resolve_family(s.family, s.k)
+        mus_r, sgs_r, extra_r, _ = remaining_work_stats(
+            dist_id, np.asarray(s.mus), np.asarray(s.sigmas),
+            np.asarray(extra), np.asarray(done[s.name]))
+        # Stage validation requires strictly positive means; a fully-done
+        # stage floors to a negligible point mass instead of zero
+        mus_by[s.name] = np.maximum(mus_r, 1e-9)
+        sgs_by[s.name] = sgs_r
+        # Stage validates family specs through get_family, which rejects
+        # lowered tuples — raise the rescaled extras back to an instance
+        fam_by[s.name] = family_from_extra(dist_id, extra_r)
+    return dag.with_stats(mus_by, sgs_by, fam_by)
+
+
 def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
             warm_start, key) -> np.ndarray:
     """(R, S, Kmax) start stack: equal, inverse-mu, warm, Dirichlet."""
@@ -307,7 +334,8 @@ def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
     eq = act / act.sum(axis=1, keepdims=True)
     inv = np.zeros_like(eq)
     for i, s in enumerate(dag.stages):
-        w = 1.0 / np.asarray(s.mus)
+        # floor guards the fully-done (all-zero-stats) re-solve stages
+        w = 1.0 / np.maximum(np.asarray(s.mus), 1e-12)
         inv[i, :s.k] = w / w.sum()
     starts = [eq, inv]
     if warm_start is not None:
@@ -335,7 +363,8 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
               risk_lam: float = 0.0,
               posteriors: Optional[Dict[str, object]] = None,
               presolve_steps: Optional[int] = None,
-              eval_num_t: Optional[int] = None) -> DAGDecision:
+              eval_num_t: Optional[int] = None,
+              done: Optional[Dict[str, np.ndarray]] = None) -> DAGDecision:
     """Jointly optimize every stage's split for the end-to-end makespan.
 
     Objective: ``makespan_mu + lam_var * makespan_var`` composed through the
@@ -358,7 +387,17 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
     composed estimation fragility; the fragility of the winning candidate
     is reported on the decision whenever posteriors are given (the
     balancer's adaptive refresh sizes its cadence by it).
+
+    ``done`` ({stage name: per-channel completed work fractions}) is the
+    sunk-work mid-flight re-solve: each named stage's statistics are rescaled
+    to its remaining work through ``distributions.remaining_work_stats``
+    before grouping, and its returned weights are shares of THAT REMAINING
+    work (stages not named are solved for their full unit of work). A stage
+    whose work is entirely done keeps zero weights and zero duration moments
+    — it no longer gates its joins.
     """
+    if done:
+        dag = _dag_with_done(dag, done)
     groups, mask, kmax = _stage_groups(dag)
     dist_ids = tuple(g.dist_id for g in groups)
     idxs = tuple(g.idx for g in groups)

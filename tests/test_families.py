@@ -22,9 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Drift, Empirical, frontier_kch, get_family,
-                        max_moments_quad_w, point_mass_cdf, resolve_family,
-                        safe_cdf)
+from repro.core import (Defective, Drift, Empirical, frontier_kch,
+                        get_family, max_moments_quad_w, point_mass_cdf,
+                        resolve_family, safe_cdf)
 from repro.core import distributions as dists
 from repro.core.partitioner import optimize_weights, predict_moments
 from repro.kernels import autotune, ops, ref
@@ -61,7 +61,10 @@ def _families(k, seed=0):
     return [("normal", "normal"),
             ("lognormal", "lognormal"),
             ("drift", Drift(rng.uniform(0.1, 0.7, k).astype(np.float32))),
-            ("empirical", emp)]
+            ("empirical", emp),
+            ("defective",
+             Defective(rng.uniform(0.05, 0.35, k).astype(np.float32),
+                       pricing="retry"))]
 
 
 class TestMonteCarloOracle:
@@ -114,7 +117,7 @@ class TestMonteCarloOracle:
 
 class TestFamilyGradients:
     @pytest.mark.parametrize("fam_id", ["normal", "lognormal", "drift",
-                                        "empirical"])
+                                        "empirical", "defective"])
     def test_analytic_matches_autodiff(self, fam_id):
         """The fused analytic adjoint == jax.grad through the family
         quadrature, zero-weight rows included."""
@@ -135,7 +138,7 @@ class TestFamilyGradients:
         assert float(dmu[0, 0]) == 0.0  # zero-weight channel: no direct grad
 
     @pytest.mark.parametrize("fam_id", ["normal", "lognormal", "drift",
-                                        "empirical"])
+                                        "empirical", "defective"])
     def test_finite_differences(self, fam_id):
         """Acceptance: gradients match central differences on all families."""
         k = 5
@@ -163,7 +166,8 @@ class TestFamilyGradients:
             fd = (f(wp) - f(wm)) / (2 * eps)
             np.testing.assert_allclose(g[i], fd, rtol=5e-2)
 
-    @pytest.mark.parametrize("fam_id", ["lognormal", "drift", "empirical"])
+    @pytest.mark.parametrize("fam_id", ["lognormal", "drift", "empirical",
+                                        "defective"])
     def test_custom_vjp_bitwise(self, fam_id):
         """jax.grad of frontier_moments rides the fused kernel's outputs
         bitwise for every family (the registered custom VJP)."""
@@ -180,7 +184,7 @@ class TestFamilyGradients:
 
 class TestFamilyKernels:
     @pytest.mark.parametrize("fam_id", ["normal", "lognormal", "drift",
-                                        "empirical"])
+                                        "empirical", "defective"])
     @pytest.mark.parametrize("fused", [False, True])
     def test_pallas_interpret_matches_ref(self, fam_id, fused):
         k, F, num_t, bf = 5, 8, 256, 4
@@ -297,7 +301,7 @@ class TestPointMassConventions:
         assert float(safe_cdf(jnp.float32(6.0), 5.0, 0.0)) == 1.0
 
     @pytest.mark.parametrize("fam_id", ["normal", "lognormal", "drift",
-                                        "empirical"])
+                                        "empirical", "defective"])
     def test_w_zero_channel_is_finished(self, fam_id):
         """A w=0 channel is a point mass at 0: CDF 1 for every t >= 0, so it
         cannot move the joint moments — for ANY family."""
@@ -345,16 +349,18 @@ class TestAutotuneFamilyCache:
         try:
             variants = [(False, "normal"), (True, "normal"),
                         (False, "drift"), (True, "drift"),
-                        (False, "lognormal"), (True, "empirical")]
-            keys = {autotune._key(64, 8, 128, "xla", fused, dist)
+                        (False, "lognormal"), (True, "empirical"),
+                        (False, "defective"), (True, "defective")]
+            keys = {autotune._key(256, 8, 128, "xla", fused, dist)
                     for fused, dist in variants}
             assert len(keys) == len(variants)
             # seed distinct entries through lookup and verify isolation
+            # (F=256 so every seeded block_f <= F survives lookup's clamp)
             for i, (fused, dist) in enumerate(variants):
-                autotune._CACHE[autotune._key(64, 8, 128, "xla", fused, dist)] = {
+                autotune._CACHE[autotune._key(256, 8, 128, "xla", fused, dist)] = {
                     "block_f": 2 ** (i + 1), "source": "sweep"}
             for i, (fused, dist) in enumerate(variants):
-                assert autotune.lookup(64, 8, 128, backend="xla", fused=fused,
+                assert autotune.lookup(256, 8, 128, backend="xla", fused=fused,
                                        dist_id=dist, cache_path=path) == 2 ** (i + 1)
         finally:
             autotune.clear_cache()
@@ -575,6 +581,228 @@ class TestSchedulerFamilies:
             pol.record([10.0, 60.0], [0.5, 0.5])
         assert 1 in pol.quarantined
         assert pol.weights()[1] == 0.0
+
+
+class TestDefectiveFamily:
+    """Tentpole: fault tolerance as channel physics. The defective family
+    prices a per-channel attempt-failure probability ``p`` (extra row 0) and
+    a retry/resume cost ``lam`` (extra row 1) into retry-inflated per-unit
+    moments (a, b); T(w) ~ N(w a, (w b)^2) is a pure scale family, so the
+    whole stack treats it like ``normal`` with (a, b) substituted."""
+
+    def test_p_zero_reduces_to_normal(self):
+        """p = 0 is the healthy fleet: (a, b) = (mu, sigma) identically, so
+        moments AND gradients must agree with the normal family to fp
+        round-off (b = sqrt(sigma^2) may differ by an ulp)."""
+        k = 4
+        mus, sigmas = _problem(k, seed=13)
+        W = _candidates(6, k)
+        out_n = ops.frontier_moments_with_grads(W, mus, sigmas, num_t=512)
+        out_d = ops.frontier_moments_with_grads(W, mus, sigmas, num_t=512,
+                                                family=Defective(0.0))
+        for a, b in zip(out_d, out_n):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-8)
+
+    def test_rejects_out_of_domain(self):
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            Defective([-0.1, 0.2])
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            Defective([0.1, 1.2])
+        with pytest.raises(ValueError, match="pricing"):
+            Defective(0.1, pricing="refund")
+        with pytest.raises(ValueError, match="pricing"):
+            Defective(0.1, pricing=1.5)
+        with pytest.raises(ValueError, match="failure"):
+            get_family("defective")  # p is not optional: build Defective(p)
+
+    def test_pricing_orders_the_cost(self):
+        """resume (lam=0.5) re-runs only half an attempt per failure, so it
+        must sit strictly between healthy and full-retry pricing."""
+        k = 3
+        mus, sigmas = _problem(k, seed=17)
+        W = _candidates(4, k)
+        p = np.full(k, 0.2, np.float32)
+        mu_0, _ = ops.frontier_moments(W, mus, sigmas, num_t=512)
+        mu_r, _ = ops.frontier_moments(W, mus, sigmas, num_t=512,
+                                       family=Defective(p, pricing="resume"))
+        mu_f, _ = ops.frontier_moments(W, mus, sigmas, num_t=512,
+                                       family=Defective(p, pricing="retry"))
+        assert float(np.min(np.asarray(mu_r) - np.asarray(mu_0))) > 0.0
+        assert float(np.min(np.asarray(mu_f) - np.asarray(mu_r))) > 0.0
+
+    @pytest.mark.mc_oracle
+    def test_per_channel_moments_match_physical_process(self):
+        """Acceptance: the analytic (a, b) equal the mean/std of the PHYSICAL
+        retry process (failures actually drawn, N ~ Geom) to <= 1e-3."""
+        rng = np.random.default_rng(2)
+        k = 4
+        mus = rng.uniform(10, 40, k)
+        sigmas = mus * rng.uniform(0.1, 0.3, k)
+        p = np.array([0.0, 0.05, 0.15, 0.4], np.float32)
+        lam = 1.0
+        w = rng.dirichlet(np.ones(k))
+        extra = np.stack([p, np.full(k, lam, np.float32)])
+        a, b = dists.defective_moments_np(mus, sigmas, p, lam)
+        N, chunk = 20_000_000, 1_000_000
+        mc = np.random.default_rng(9)
+        s = np.zeros(k)
+        s2 = np.zeros(k)
+        for _ in range(N // chunk):
+            T = dists.family_sample("defective", mc, w, mus, sigmas, extra,
+                                    chunk)
+            s += T.sum(axis=0)
+            s2 += (T * T).sum(axis=0)
+        mu_mc = s / N
+        var_mc = s2 / N - mu_mc * mu_mc
+        np.testing.assert_allclose(w * a, mu_mc, rtol=1e-3)
+        np.testing.assert_allclose((w * b) ** 2, var_mc, rtol=1e-3)
+
+    @pytest.mark.mc_oracle
+    def test_join_matches_mc_oracle(self):
+        """The join quadrature vs MC through the MODEL law (the
+        moment-matched Gaussian) <= 1e-3 — same contract as the other
+        families' oracle test."""
+        rng = np.random.default_rng(3)
+        k = 4
+        mus = rng.uniform(10, 40, k)
+        sigmas = mus * rng.uniform(0.1, 0.3, k)
+        p = np.array([0.02, 0.1, 0.25, 0.0], np.float32)
+        w = rng.dirichlet(np.ones(k))
+        a, b = dists.defective_moments_np(mus, sigmas, p, 1.0)
+        N, chunk = 10_000_000, 1_000_000
+        mc = np.random.default_rng(10)
+        s = s2 = 0.0
+        for _ in range(N // chunk):
+            T = mc.normal(w * a, w * b, size=(chunk, k)).max(axis=1)
+            s += T.sum()
+            s2 += (T * T).sum()
+        mu_mc = s / N
+        var_mc = s2 / N - mu_mc * mu_mc
+        mu_q, var_q = ops.frontier_moments(
+            jnp.asarray(w, jnp.float32)[None, :], jnp.asarray(mus, jnp.float32),
+            jnp.asarray(sigmas, jnp.float32), num_t=4096,
+            family=Defective(p, pricing="retry"))
+        assert abs(float(mu_q[0]) - mu_mc) / mu_mc <= 1e-3
+        assert abs(float(var_q[0]) - var_mc) / var_mc <= 1e-3
+
+    @pytest.mark.mc_oracle
+    def test_join_shape_approximation_is_close(self):
+        """Against the PHYSICAL process the model inherits the Gaussian
+        per-channel shape approximation, so the JOIN tolerance is loose and
+        documented (the per-channel moments themselves are exact — see
+        test_per_channel_moments_match_physical_process)."""
+        rng = np.random.default_rng(4)
+        k = 4
+        mus = rng.uniform(10, 40, k)
+        sigmas = mus * rng.uniform(0.1, 0.2, k)
+        p = np.array([0.05, 0.1, 0.15, 0.08], np.float32)
+        w = rng.dirichlet(np.ones(k))
+        extra = np.stack([p, np.ones(k, np.float32)])
+        N, chunk = 2_000_000, 500_000
+        mc = np.random.default_rng(11)
+        s = s2 = 0.0
+        for _ in range(N // chunk):
+            T = dists.family_sample("defective", mc, w, mus, sigmas, extra,
+                                    chunk).max(axis=1)
+            s += T.sum()
+            s2 += (T * T).sum()
+        mu_mc = s / N
+        var_mc = s2 / N - mu_mc * mu_mc
+        mu_q, var_q = ops.frontier_moments(
+            jnp.asarray(w, jnp.float32)[None, :], jnp.asarray(mus, jnp.float32),
+            jnp.asarray(sigmas, jnp.float32), num_t=4096,
+            family=Defective(p, pricing="retry"))
+        # the join MEAN is what the solver minimizes: within 5% of the
+        # physical process. The join VARIANCE under-prices the multimodal
+        # retry tail (retries put probability spikes at +mu, +2mu, ... that
+        # the moment-matched Gaussian flattens), so only a factor-scale
+        # envelope is promised — the per-channel moments are exact, the
+        # join shape is an approximation by design.
+        assert abs(float(mu_q[0]) - mu_mc) / mu_mc <= 5e-2
+        assert 0.3 <= float(var_q[0]) / var_mc <= 1.6
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("p_edge", [0.0, 0.95])
+    def test_p_gradient_matches_fd(self, impl, p_edge):
+        """The custom VJP's analytic d/dp (extra row 0) matches finite
+        differences on both impls, including the p = 0 healthy edge and the
+        p -> 1 retry-divergence edge."""
+        rng = np.random.default_rng(6)
+        k = 4
+        mus = rng.uniform(0.8, 2.0, k).astype(np.float32)
+        sigmas = rng.uniform(0.1, 0.4, k).astype(np.float32)
+        W = jnp.asarray(rng.dirichlet(np.ones(k), 5), jnp.float32)
+        p = np.array([p_edge, 0.1, 0.2, 0.05], np.float32)
+        extra = Defective(p, pricing="retry").extra(k)
+
+        def loss(e):
+            m, v = ops.frontier_moments(W, mus, sigmas, num_t=512, impl=impl,
+                                        family=("defective", e))
+            return m.sum() + 0.1 * v.sum()
+
+        g = jax.grad(loss)(jnp.asarray(extra))
+        h = 1e-3
+        for i in range(k):
+            if p[i] == 0.0:
+                # one-sided forward difference: stepping to p = -h would
+                # leave the family's domain (the sanitizer rejects it, and
+                # the analytic grad is the one-sided limit at the boundary)
+                ep = extra.copy()
+                ep[0, i] += h
+                fd = (loss(jnp.asarray(ep)) - loss(jnp.asarray(extra))) / h
+            else:
+                ep, em = extra.copy(), extra.copy()
+                ep[0, i] += h
+                em[0, i] -= h
+                fd = (loss(jnp.asarray(ep)) - loss(jnp.asarray(em))) / (2 * h)
+            np.testing.assert_allclose(float(g[0, i]), float(fd), rtol=5e-2,
+                                       err_msg=f"channel {i} (p={p[i]})")
+
+    def test_lam_row_cotangent_is_zero_by_contract(self):
+        """Pricing (extra row 1) is a hyperparameter chosen by the retry
+        policy, not a fitted quantity: the VJP documents a ZERO cotangent for
+        it (only row 0 is populated), so nothing ever descends on lam."""
+        k = 3
+        mus, sigmas = _problem(k, seed=19)
+        W = _candidates(4, k)
+        extra = Defective(np.full(k, 0.2, np.float32)).extra(k)
+        g = jax.grad(lambda e: jnp.sum(ops.frontier_moments(
+            W, mus, sigmas, num_t=256, family=("defective", e))[0]))(
+                jnp.asarray(extra))
+        np.testing.assert_array_equal(np.asarray(g[1]), 0.0)
+        assert float(np.max(np.abs(np.asarray(g[0])))) > 0.0
+
+    def test_autotune_v3_key_round_trip(self, tmp_path):
+        path = str(tmp_path / "cache.json")
+        autotune.clear_cache()
+        try:
+            entry = autotune.sweep(8, 3, 64, backend="xla", fused=False,
+                                   repeats=1, candidates=(4, 8),
+                                   cache_path=path, dist_id="defective")
+            on_disk = json.load(open(path))
+            assert "v3:xla:F8:K3:T64:modefwd:famdefective" in on_disk
+            autotune.clear_cache()
+            assert autotune.lookup(8, 3, 64, backend="xla",
+                                   dist_id="defective",
+                                   cache_path=path) == entry["block_f"]
+        finally:
+            autotune.clear_cache()
+
+    def test_solver_shifts_work_off_flaky_channel(self):
+        """Pricing the failure physics must move weight away from the flaky
+        channel relative to the failure-blind normal solve — the same
+        acceptance shape as the drift solver test."""
+        mus = np.array([20.0, 20.0, 20.0])
+        sigmas = np.array([2.0, 2.0, 2.0])
+        p = np.array([0.3, 0.0, 0.0], np.float32)
+        dec_n = optimize_weights(mus, sigmas, lam=0.0, steps=120, restarts=0)
+        dec_d = optimize_weights(mus, sigmas, lam=0.0, steps=120, restarts=0,
+                                 family=Defective(p, pricing="retry"))
+        assert dec_d.weights[0] < dec_n.weights[0] - 0.02
+        mu_obl, _ = max_moments_quad_w(dec_n.weights, mus, sigmas, num=4096,
+                                       family=Defective(p, pricing="retry"))
+        assert dec_d.mu <= float(mu_obl) + 1e-6
 
 
 class TestServeFamilies:
