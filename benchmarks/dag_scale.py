@@ -8,18 +8,27 @@ channels per stage, solved two ways:
   Python loop of independent ``optimize_weights`` solves — every stage pays
   its own kernel launches and nobody sees the graph);
 * ``joint``   — ``workflow.solve.solve_dag``: all 32 stage splits descend
-  the composed end-to-end makespan together, every moment/gradient
-  evaluation ONE stacked ``ops.frontier_moments*`` launch over all stages
-  (``family_groups == 1`` on this all-one-family graph — the
-  "no per-stage kernel loop" contract, asserted here).
+  the composed end-to-end makespan together through the multi-fidelity
+  ladder (coarse presolve/triage rung, pruned+deduped survivors, fine
+  refine under plateau early-stop, eval-fidelity final pick), every
+  moment/gradient evaluation ONE stacked ``ops.frontier_moments*`` launch
+  over all stages (``family_groups == 1`` on this all-one-family graph —
+  the "no per-stage kernel loop" contract, asserted here).
 
 Reported: predicted makespan moments under the shared evaluator (identical
 quadrature for both methods), realized makespan over paired simulation
-trials (same rng trace for both splits), and solve wall times. The joint
-solve must beat greedy on expected makespan — greedy's min-mean stage splits
-ignore that every branch's VARIANCE is paid at the joins (E[max] >= max E
-grows with spread), which is the paper's point lifted from channels to
-stages.
+trials (same rng trace for both splits), solve wall times
+(median + real p90 over ``repeats`` warm solves), the joint solver's
+per-phase wall breakdown (starts / presolve / triage / refine /
+final-score — so fidelity-ladder wins stay attributable), and the
+``joint_vs_greedy_wallclock_ratio`` the PR 8 acceptance gates on
+(joint ≤ greedy at full scale, with the makespan win preserved).
+
+A second, joint-only **scale point** at 512 stages × K=256 (170 branches)
+proves the stacked-row path scales 10×: same ladder, same single-launch
+contract, entry name ``joint_solve_xla_scale``. The smoke run keeps the
+512-stage STRUCTURE but shrinks everything else (K, quadrature, steps) so
+the composition/compile path is exercised without the full-scale cost.
 
 ``--json`` writes machine-readable ``BENCH_dag_scale.json`` at the repo
 root; ``scripts/bench_smoke.sh`` runs the reduced scale and
@@ -39,14 +48,23 @@ TICK_K = 256           # channels per stage
 TICK_T = 256           # survival-integral points per candidate
 PGD_STEPS = 60
 MC_TRIALS = 200
+FULL_REPEATS = 5       # timed warm solves per method (median + real p90)
+SMOKE_REPEATS = 3
+
+SCALE_BRANCHES = 170   # scale point: S = 2 + 170*3 = 512 stages
+SCALE_REPEATS = 3
 
 # the machine-readable contract of BENCH_dag_scale*.json — declared next to
 # the writer; scripts/ci.sh imports these to validate the emitted files
 SCHEMA_KEYS = ("bench", "smoke", "stages", "channels", "joint", "greedy",
                "improvement_pct", "realized_improvement_pct",
-               "family_groups", "single_batched_path", "entries")
+               "family_groups", "single_batched_path",
+               "joint_phase_us", "joint_vs_greedy_wallclock_ratio",
+               "scale_point", "entries")
 ENTRY_KEYS = ("name", "impl", "S", "K", "num_t", "median_us", "p90_us",
               "repeats")
+# the solver phases every joint entry must attribute its wall time across
+PHASE_KEYS = ("starts", "presolve", "triage", "refine", "final_score")
 
 _JSON_ENTRIES = []
 
@@ -101,16 +119,64 @@ def _mc_makespan(dag, weights, trials, seed=0):
     return float(np.mean(ts)), float(np.var(ts))
 
 
+def _phase_us(decision):
+    """The solver's own per-phase wall breakdown, rounded for the JSON."""
+    prof = decision.profile or {}
+    return {k: round(float(v), 1)
+            for k, v in prof.get("phase_us", {}).items()}
+
+
+def _scale_point(smoke, rows):
+    """Joint-only 512-stage solve: the stacked-row path at 10x the stages.
+
+    Greedy at this scale would be 512 sequential per-stage solves — the
+    pathology the joint path exists to avoid — so only the joint solve is
+    timed. Smoke keeps the 512-stage structure (the composition and its
+    compile path are what the scale point guards) but shrinks channels,
+    quadrature and steps.
+    """
+    from repro.workflow import solve_dag
+
+    if smoke:
+        k, num_t, steps, repeats = 8, 64, 6, 1
+    else:
+        k, num_t, steps, repeats = TICK_K, TICK_T, PGD_STEPS, SCALE_REPEATS
+    dag = make_dag(SCALE_BRANCHES, BRANCH_LEN, k, seed=1)
+    S = len(dag.stages)
+
+    result = {}
+
+    def once():
+        result["dec"] = solve_dag(dag, steps=steps, restarts=1, num_t=num_t)
+
+    med, p90 = timeit_stats(once, repeats=repeats, warmup=1)
+    dec = result["dec"]
+    rows.append((S, k, num_t, "joint_solve_xla_scale", med))
+    _record("joint_solve_xla_scale", "xla", S, k, num_t, med, p90, repeats)
+    emit(f"dag_scale_{S}st_{k}ch_joint_solve_xla_scale", med)
+    return {
+        "stages": S, "channels": k, "num_t": num_t, "steps": steps,
+        "median_us": round(med, 2), "p90_us": round(p90, 2),
+        "repeats": repeats,
+        "makespan_mu": dec.makespan_mu,
+        "method": dec.method,
+        "family_groups": dec.family_groups,
+        "phase_us": _phase_us(dec),
+    }
+
+
 def run(smoke=False) -> dict:
     from repro.workflow import solve_dag, solve_dag_greedy
     from repro.workflow.solve import _stage_groups
 
     if smoke:
         branches, blen, k, num_t, steps, trials = 2, 3, 32, 128, 30, 50
+        repeats = SMOKE_REPEATS
     else:
         branches, blen, k, num_t, steps, trials = (
             STAGES_BRANCHES, BRANCH_LEN, TICK_K, TICK_T, PGD_STEPS,
             MC_TRIALS)
+        repeats = FULL_REPEATS
     dag = make_dag(branches, blen, k)
     S = len(dag.stages)
     groups, _, _ = _stage_groups(dag)
@@ -120,7 +186,7 @@ def run(smoke=False) -> dict:
 
     rows = []
 
-    def bench(name, fn, repeats=2):
+    def bench(name, fn):
         result = {}
 
         def once():
@@ -132,16 +198,21 @@ def run(smoke=False) -> dict:
         rows.append((S, k, num_t, name, med))
         _record(name, "xla", S, k, num_t, med, p90, repeats)
         emit(f"dag_scale_{S}st_{k}ch_{name}", med)
-        return result["v"]
+        return result["v"], med
 
     # joint: all S stages through one stacked fused launch per PGD step
-    joint = bench("joint_solve_xla",
-                  lambda: solve_dag(dag, steps=steps, restarts=1,
-                                    num_t=num_t))
+    joint, joint_med = bench(
+        "joint_solve_xla",
+        lambda: solve_dag(dag, steps=steps, restarts=1, num_t=num_t))
     # greedy: the per-stage solve loop
-    greedy = bench("greedy_solve_xla",
-                   lambda: solve_dag_greedy(dag, steps=steps, restarts=1,
-                                            num_t=num_t))
+    greedy, greedy_med = bench(
+        "greedy_solve_xla",
+        lambda: solve_dag_greedy(dag, steps=steps, restarts=1,
+                                 num_t=num_t))
+
+    ratio = joint_med / greedy_med
+    emit(f"dag_scale_{S}st_{k}ch_wallclock_ratio", ratio,
+         f"joint={joint_med:.0f}us;greedy={greedy_med:.0f}us")
 
     imp = 100.0 * (1.0 - joint.makespan_mu / greedy.makespan_mu)
     emit(f"dag_scale_{S}st_{k}ch_improvement_pct", imp,
@@ -152,6 +223,8 @@ def run(smoke=False) -> dict:
     mc_imp = 100.0 * (1.0 - mc_joint[0] / mc_greedy[0])
     emit(f"dag_scale_{S}st_{k}ch_realized_improvement_pct", mc_imp,
          f"trials={trials}")
+
+    scale = _scale_point(smoke, rows)
 
     save_table("dag_scale_smoke.csv" if smoke else "dag_scale.csv",
                "S,K,num_t,path,us", rows)
@@ -174,6 +247,9 @@ def run(smoke=False) -> dict:
         "realized_improvement_pct": round(mc_imp, 4),
         "family_groups": joint.family_groups,
         "single_batched_path": joint.family_groups == 1,
+        "joint_phase_us": _phase_us(joint),
+        "joint_vs_greedy_wallclock_ratio": round(ratio, 4),
+        "scale_point": scale,
         "entries": _JSON_ENTRIES,
     }
 
@@ -200,14 +276,19 @@ def main():
         print(f"wrote {path}")
     print({key: res[key] for key in ("improvement_pct",
                                      "realized_improvement_pct",
+                                     "joint_vs_greedy_wallclock_ratio",
                                      "family_groups")})
     if not args.smoke:
         # acceptance gates LAST, after every artifact is on disk: the joint
-        # solve must beat graph-blind greedy on expected makespan, through a
-        # single batched stage-moment path (smoke scale is solve-starved —
-        # the margin only means anything at the tracked full scale)
+        # solve must beat graph-blind greedy on expected makespan AND
+        # wall-clock, through a single batched stage-moment path (smoke
+        # scale is solve-starved — the margins only mean anything at the
+        # tracked full scale)
         assert res["single_batched_path"], res["family_groups"]
-        assert res["improvement_pct"] > 0, res["improvement_pct"]
+        assert res["improvement_pct"] >= 0.088, res["improvement_pct"]
+        assert res["joint_vs_greedy_wallclock_ratio"] <= 1.0, \
+            res["joint_vs_greedy_wallclock_ratio"]
+        assert res["scale_point"]["stages"] == 512, res["scale_point"]
 
 
 if __name__ == "__main__":

@@ -30,6 +30,8 @@ def run() -> dict:
 
     def eval_curve():
         W = jnp.stack([jnp.linspace(0, 1, 201), 1 - jnp.linspace(0, 1, 201)], -1)
+        # repro: allow[RPA070] paper Fig 1 reproduction — the figure's
+        # quadrature is part of what is being reproduced, not a solve knob
         m, v = ops.frontier_moments(W, jnp.array([30.0, 20.0]),
                                     jnp.array([2.0, 6.0]), num_t=2048)
         m.block_until_ready()

@@ -55,10 +55,21 @@ assert g["bench"] == "dag_scale" and g["stages"] > 0
 assert g["single_batched_path"], g["family_groups"]
 names = {e["name"] for e in g["entries"]}
 assert {"joint_solve_xla", "greedy_solve_xla"} <= names, names
+# the fidelity ladder must attribute the joint wall time across its phases,
+# and the 512-stage scale point must ride even at smoke scale (structure
+# intact, K/quadrature/steps shrunk) so the scaled composition path is
+# exercised on every CI run
+assert {"starts", "presolve", "triage", "refine",
+        "final_score"} <= set(g["joint_phase_us"]), g["joint_phase_us"]
+assert g["joint_vs_greedy_wallclock_ratio"] > 0
+assert g["scale_point"]["stages"] == 512, g["scale_point"]
+assert "joint_solve_xla_scale" in names, names
 print(f"dag scale smoke OK: {g['stages']} stages x K={g['channels']}, "
       f"family groups {g['family_groups']}, "
       f"joint vs greedy {g['improvement_pct']}% "
-      f"(realized {g['realized_improvement_pct']}%)")
+      f"(realized {g['realized_improvement_pct']}%, "
+      f"wallclock ratio {g['joint_vs_greedy_wallclock_ratio']}), "
+      f"scale point {g['scale_point']['stages']}st")
 
 ft = json.load(open("BENCH_fault_trace_smoke.json"))
 assert ft["bench"] == "fault_trace" and ft["ticks"] > 0

@@ -95,4 +95,32 @@ for path in paths:
         gone = [k for k in ENTRY_KEYS[bench] if k not in e]
         assert not gone, f"{path}: entry {e.get('name')} missing {gone}"
     print(f"{path}: schema OK ({bench}, {len(d['entries'])} entries)")
+
+# dag_scale carries the PR 8 multi-fidelity acceptance surface beyond the
+# generic schema: the joint solve's wall time must be attributed across the
+# ladder phases, the joint/greedy wall-clock ratio must be present (and <= 1
+# at the tracked full scale), and a 512-stage scale point must exist — at
+# full scale as a 512 x K=256 entry
+for path in sorted(glob.glob("BENCH_dag_scale*.json")):
+    with open(path) as f:
+        d = json.load(f)
+    phases = set(dag_scale.PHASE_KEYS)
+    assert phases <= set(d["joint_phase_us"]), (
+        f"{path}: joint_phase_us missing "
+        f"{phases - set(d['joint_phase_us'])}")
+    sp = d["scale_point"]
+    assert sp["stages"] == 512, f"{path}: scale point at {sp['stages']} stages"
+    assert phases <= set(sp["phase_us"]), (
+        f"{path}: scale-point phase_us missing {phases - set(sp['phase_us'])}")
+    names = {e["name"] for e in d["entries"]}
+    assert "joint_solve_xla_scale" in names, f"{path}: no scale entry: {names}"
+    ratio = d["joint_vs_greedy_wallclock_ratio"]
+    assert ratio > 0, f"{path}: bad wall-clock ratio {ratio}"
+    if not d["smoke"]:
+        assert any(e["S"] == 512 and e["K"] == 256 for e in d["entries"]), \
+            f"{path}: full-scale file lacks the 512-stage x K=256 entry"
+        assert ratio <= 1.0, \
+            f"{path}: joint slower than greedy at full scale ({ratio})"
+    print(f"{path}: dag_scale acceptance OK (ratio {ratio}, "
+          f"scale point {sp['stages']}st x K={sp['channels']})")
 PY

@@ -11,7 +11,10 @@ Importing this package registers every rule with the framework registry
   imports
 * :mod:`.famcov`     — RPA060: every FAMILIES entry reaches all threading
   sites (ref, kernels, VJP, autotune, sim ground truth)
+* :mod:`.fidelity`   — RPA070: frontier_moments call sites must thread the
+  fidelity knob, not hard-code ``num_t``
 
 See docs/INVARIANTS.md for the catalogue with rationale and history.
 """
-from . import contracts, famcov, family, staticargs, vjp, vmem  # noqa: F401
+from . import (contracts, famcov, family, fidelity, staticargs,  # noqa: F401
+               vjp, vmem)

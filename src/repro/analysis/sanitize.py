@@ -11,7 +11,7 @@ Set ``REPRO_SANITIZE=1`` and every frontier entry point grows teeth:
   :class:`SanitizeError` at the call site that introduced them — instead of
   a NaN surfacing three layers later as a mysteriously flat frontier.
 * **In-trace checks** via ``jax.experimental.checkify``: the PGD solvers
-  (``core.partitioner._pgd_multi``, ``workflow.solve._pgd_dag``) take a
+  (``core.partitioner._pgd_multi``, ``workflow.solve._pgd_phase``) take a
   static ``sanitize`` flag that plants ``checkify.check`` calls inside the
   ``fori_loop`` bodies (iterate and gradient finiteness, simplex mass).
   Their public callers wrap the jitted solver in ``checkify.checkify`` via

@@ -159,7 +159,8 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                      family="normal", risk_lam: float = 0.0,
                      posterior=None,
                      return_sensitivity: bool = False,
-                     done=None):
+                     done=None,
+                     eval_num_t: Optional[int] = None):
     """K-channel simplex optimization (beyond paper's 2-channel exposition).
 
     Multi-start PGD: deterministic starts at equal-split and inverse-mu, an
@@ -195,6 +196,10 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
       executes ``weights[k] * r`` more units of the original job. The
       predicted moments are for the remaining work only — add the caller's
       elapsed wall time for an end-to-end estimate.
+    * ``eval_num_t``: quadrature resolution the finalists are scored at —
+      the winner's moments are reused for the reported decision (no extra
+      re-launch). Default max(num_t, 2048); callers on a coarse fidelity
+      rung (``workflow.solve_dag_greedy``) pass their own.
     """
     mus = jnp.asarray(mus, jnp.float32)
     sigmas = jnp.asarray(sigmas, jnp.float32)
@@ -234,7 +239,11 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
         Wf = _pgd_multi(W0, mus, sigmas, extra, jnp.float32(lam), steps=steps,
                         num_t=num_t, impl=impl, block_f=block_f,
                         dist_id=dist_id)
-    mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=num_t,
+    # finalists are scored ONCE at evaluation resolution and the winner's
+    # moments are reused for the reported decision — the old extra
+    # single-row "oracle" re-launch is gone (same fidelity, one launch less)
+    et = eval_num_t if eval_num_t is not None else max(num_t, 2048)
+    mu_c, var_c = ops.frontier_moments(Wf, mus, sigmas, num_t=et,
                                        impl=impl, block_f=block_f,
                                        family=(dist_id, extra))
     score = np.asarray(mu_c) + lam * np.asarray(var_c)
@@ -247,14 +256,10 @@ def optimize_weights(mus, sigmas, lam: float = 0.0, steps: int = 200,
                                impl=impl, block_f=block_f)
         score = score + risk_lam * frag
         method = "pgd-simplex-risk"
-    best_w = Wf[int(np.argmin(score))]
-    # report moments at oracle resolution (one extra single-row launch)
-    mu_f, var_f = ops.frontier_moments(best_w[None, :], mus, sigmas,
-                                       num_t=max(num_t, 2048), impl=impl,
-                                       block_f=block_f,
-                                       family=(dist_id, extra))
+    bi = int(np.argmin(score))
+    best_w = Wf[bi]
     decision = PartitionDecision(weights=np.asarray(best_w, np.float64),
-                                 mu=float(mu_f[0]), var=float(var_f[0]),
+                                 mu=float(mu_c[bi]), var=float(var_c[bi]),
                                  method=method)
     if not return_sensitivity:
         return decision

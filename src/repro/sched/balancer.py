@@ -535,6 +535,22 @@ class WorkflowBalancer:
     switch on ANY stage, a structure change, or the refresh cadence expiring
     invalidates the cached solve; ``adaptive_refresh`` sizes the cadence by
     the composed makespan fragility (delta-method through the DAG).
+
+    **Incremental re-solves (PR 8).** The balancer snapshots the per-stage
+    statistics each solve ran on. When ``incremental`` is on AND the last
+    solve reported a composed fragility at or under ``refresh_target_rel``
+    (the fragility gate — a fragile solve means the posteriors are still
+    moving the optimum globally, so freezing rows on it would lock in
+    noise), a refresh tick re-solves only the DIRTY stages: those whose
+    posterior point estimates drifted more than ``dirty_tol`` (relative)
+    from their snapshot, or whose selected family changed. Frozen stages'
+    rows pass through the solve bitwise (``solve_dag(dirty=...)``); an
+    empty dirty set skips the solver call entirely and the cached split
+    stands. Snapshots update only for the stages a solve actually moved,
+    so drift on frozen stages accumulates against the solve that last
+    placed them. The multi-fidelity knobs (``presolve_num_t``,
+    ``prune_margin``, ``plateau_tol``/``plateau_patience``) thread through
+    every solver call.
     """
 
     dag: object                      # workflow.StageDAG
@@ -551,13 +567,22 @@ class WorkflowBalancer:
     refresh_target_rel: float = 0.02
     prior_mean: float = 1.0
     min_weight: float = 0.0
+    presolve_num_t: Optional[int] = None   # coarse ladder rung (None: solver default)
+    prune_margin: Optional[float] = 5e-3
+    plateau_tol: float = 1e-6
+    plateau_patience: Optional[int] = 8
+    incremental: bool = True
+    dirty_tol: float = 0.05                # relative posterior drift that dirties a stage
     _est: dict = field(default=None, repr=False)
     _cached: object = field(default=None, repr=False)
     _cached_key: object = field(default=None, repr=False)
     _obs_count: int = 0
     _effective_refresh: Optional[int] = field(default=None, repr=False)
     _last_decision: object = field(default=None, repr=False)
+    _last_rel_frag: Optional[float] = field(default=None, repr=False)
     _failed: dict = field(default_factory=dict, repr=False)
+    _solve_stats: dict = field(default_factory=dict, repr=False)
+    _solve_fams: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         if self._est is None:
@@ -657,8 +682,64 @@ class WorkflowBalancer:
             key += f"|failed[{bad}]"
         return key
 
+    def _dirty_stages(self, live):
+        """Fragility-gated dirty set for an incremental re-solve.
+
+        ``None`` demands a full joint solve; otherwise a (possibly empty)
+        set of stage names whose estimation state moved past ``dirty_tol``
+        since their snapshot. The gate: an incremental solve is only
+        trusted when the last solve reported a composed relative fragility
+        at or under ``refresh_target_rel`` — a fragile solve means the
+        posteriors are still moving the optimum globally, so freezing rows
+        on it would lock in noise. (Fragility is only computed when
+        posteriors ride the solve — ``risk_lam > 0`` or
+        ``adaptive_refresh`` — so a plain balancer always full-solves.)
+        """
+        if not self.incremental or self._cached is None \
+                or not self._solve_stats:
+            return None
+        rel = self._last_rel_frag
+        if rel is None or rel > self.refresh_target_rel:
+            return None
+        dirty = set()
+        for s in live.stages:
+            snap = self._solve_stats.get(s.name)
+            fkey = UncertaintyAwareBalancer._family_key(
+                self._est[s.name].selected_family)
+            if snap is None or self._solve_fams.get(s.name) != fkey:
+                dirty.add(s.name)
+                continue
+            mu0, sg0 = snap
+            mu = np.asarray(s.mus, np.float64)
+            sg = np.asarray(s.sigmas, np.float64)
+            drift = max(
+                float(np.max(np.abs(mu - mu0)
+                             / np.maximum(np.abs(mu0), 1e-9))),
+                float(np.max(np.abs(sg - sg0)
+                             / np.maximum(np.abs(sg0), 1e-9))))
+            if drift > self.dirty_tol:
+                dirty.add(s.name)
+        if len(dirty) == len(live.stages):
+            return None      # everything moved: a plain full solve
+        return dirty
+
+    def _snapshot(self, live, dirty):
+        """Record the per-stage statistics this solve ran on. An incremental
+        solve updates only its dirty stages' snapshots: frozen stages keep
+        the snapshot of the solve that last MOVED them, so posterior drift
+        accumulates against it and eventually crosses ``dirty_tol``."""
+        for s in live.stages:
+            if dirty is not None and s.name not in dirty:
+                continue
+            self._solve_stats[s.name] = (
+                np.asarray(s.mus, np.float64).copy(),
+                np.asarray(s.sigmas, np.float64).copy())
+            self._solve_fams[s.name] = UncertaintyAwareBalancer._family_key(
+                self._est[s.name].selected_family)
+
     def weights(self) -> dict:
-        """Current per-stage splits; re-solves jointly when stale."""
+        """Current per-stage splits; re-solves jointly when stale — and,
+        when the fragility gate allows it, only over the dirty stages."""
         key = self._solve_key()
         cadence = (self.effective_refresh if self.adaptive_refresh
                    else max(self.refresh_every, 1))
@@ -668,24 +749,40 @@ class WorkflowBalancer:
             from ..workflow.solve import solve_dag  # lazy: layering
 
             live = self._live_dag()
-            posteriors = None
-            if self.risk_lam > 0 or self.adaptive_refresh:
-                posteriors = {s.name: self._est[s.name]._nig
-                              for s in self.dag.stages}
-            warm = (self._cached if self._cached is not None else None)
-            dec = solve_dag(live, lam_var=self.lam_var,
-                            steps=self.pgd_steps, restarts=self.restarts,
-                            num_t=self.num_t, impl=self.impl,
-                            block_f=self.block_f, warm_start=warm,
-                            risk_lam=self.risk_lam, posteriors=posteriors)
-            self._last_decision = dec
-            if self.adaptive_refresh and dec.relative_fragility is not None:
-                self._effective_refresh = _cadence_from_fragility(
-                    dec.relative_fragility, self.refresh_every,
-                    self.refresh_target_rel)
-            self._cached = {n: np.asarray(w, np.float64)
-                            for n, w in dec.weights.items()}
-            self._cached_key = key
+            dirty = self._dirty_stages(live)
+            if dirty is not None and not dirty:
+                # every stage within dirty_tol of its snapshot and the last
+                # solve was firm: the cached split stands — no solver call
+                self._cached_key = key
+            else:
+                posteriors = None
+                if self.risk_lam > 0 or self.adaptive_refresh:
+                    posteriors = {s.name: self._est[s.name]._nig
+                                  for s in self.dag.stages}
+                warm = (self._cached if self._cached is not None else None)
+                dec = solve_dag(live, lam_var=self.lam_var,
+                                steps=self.pgd_steps,
+                                restarts=self.restarts,
+                                num_t=self.num_t, impl=self.impl,
+                                block_f=self.block_f, warm_start=warm,
+                                risk_lam=self.risk_lam,
+                                posteriors=posteriors,
+                                presolve_num_t=self.presolve_num_t,
+                                prune_margin=self.prune_margin,
+                                plateau_tol=self.plateau_tol,
+                                plateau_patience=self.plateau_patience,
+                                dirty=dirty)
+                self._last_decision = dec
+                self._last_rel_frag = dec.relative_fragility
+                if (self.adaptive_refresh
+                        and dec.relative_fragility is not None):
+                    self._effective_refresh = _cadence_from_fragility(
+                        dec.relative_fragility, self.refresh_every,
+                        self.refresh_target_rel)
+                self._cached = {n: np.asarray(w, np.float64)
+                                for n, w in dec.weights.items()}
+                self._cached_key = key
+                self._snapshot(live, dirty)
         out = {}
         for n, w in self._cached.items():
             w = self._mask_failed(n, w.copy())
@@ -727,17 +824,35 @@ class WorkflowBalancer:
         :meth:`handle_failure`) get exactly zero share. The steady-state
         cache is untouched — this prices one wounded instance, not the
         fleet's long-run split.
+
+        When the fragility gate admits an incremental solve (see
+        :meth:`_dirty_stages`), only the stages with sunk work plus those
+        whose posteriors drifted are re-solved; the rest of the warm split
+        rides through frozen. No failed channels may ride a frozen row —
+        the warm rows are masked first, and a failure event invalidates
+        the cache (forcing the full path) anyway.
         """
         from ..workflow.solve import solve_dag  # lazy: layering
 
         warm = (None if self._cached is None
                 else {n: self._mask_failed(n, w.copy())
                       for n, w in self._cached.items()})
-        dec = solve_dag(self._live_dag(), lam_var=self.lam_var,
+        live = self._live_dag()
+        dirty = self._dirty_stages(live)
+        if dirty is not None:
+            dirty = dirty | set(done)
+            if len(dirty) >= len(live.stages):
+                dirty = None
+        dec = solve_dag(live, lam_var=self.lam_var,
                         steps=self.pgd_steps, restarts=0,
                         num_t=self.num_t, impl=self.impl,
                         block_f=self.block_f, warm_start=warm,
-                        done=done)
+                        done=done,
+                        presolve_num_t=self.presolve_num_t,
+                        prune_margin=self.prune_margin,
+                        plateau_tol=self.plateau_tol,
+                        plateau_patience=self.plateau_patience,
+                        dirty=dirty)
         return {n: self._mask_failed(n, np.asarray(w, np.float64))
                 for n, w in dec.weights.items()}
 
@@ -764,13 +879,26 @@ class WorkflowBalancer:
             "refresh_target_rel": self.refresh_target_rel,
             "prior_mean": self.prior_mean,
             "min_weight": self.min_weight,
+            "presolve_num_t": self.presolve_num_t,
+            "prune_margin": self.prune_margin,
+            "plateau_tol": self.plateau_tol,
+            "plateau_patience": self.plateau_patience,
+            "incremental": self.incremental,
+            "dirty_tol": self.dirty_tol,
             "obs_count": self._obs_count,
             "effective_refresh": self._effective_refresh,
+            "last_rel_fragility": self._last_rel_frag,
             "cached": (None if self._cached is None
                        else {n: np.asarray(w).tolist()
                              for n, w in self._cached.items()}),
             "cached_key": self._cached_key,
             "failed": {n: sorted(v) for n, v in self._failed.items() if v},
+            # the incremental-solve snapshots: without them a restored
+            # replica would full-solve where the original went incremental,
+            # breaking kill/restore tick parity
+            "solve_stats": {n: [m.tolist(), sg.tolist()]
+                            for n, (m, sg) in self._solve_stats.items()},
+            "solve_fams": dict(self._solve_fams),
             "est": {n: e.state_dict() for n, e in self._est.items()},
         }
 
@@ -788,7 +916,13 @@ class WorkflowBalancer:
                 adaptive_refresh=d.get("adaptive_refresh", False),
                 refresh_target_rel=d.get("refresh_target_rel", 0.02),
                 prior_mean=d.get("prior_mean", 1.0),
-                min_weight=d.get("min_weight", 0.0))
+                min_weight=d.get("min_weight", 0.0),
+                presolve_num_t=d.get("presolve_num_t"),
+                prune_margin=d.get("prune_margin", 5e-3),
+                plateau_tol=d.get("plateau_tol", 1e-6),
+                plateau_patience=d.get("plateau_patience", 8),
+                incremental=d.get("incremental", True),
+                dirty_tol=d.get("dirty_tol", 0.05))
         est = d.get("est", {})
         for name, sd in est.items():
             if name not in b._est:
@@ -805,4 +939,10 @@ class WorkflowBalancer:
             b._cached_key = d.get("cached_key")
         b._failed = {n: set(int(i) for i in v)
                      for n, v in d.get("failed", {}).items() if v}
+        b._last_rel_frag = d.get("last_rel_fragility")
+        b._solve_stats = {n: (np.asarray(m, np.float64),
+                              np.asarray(sg, np.float64))
+                          for n, (m, sg) in d.get("solve_stats",
+                                                  {}).items()}
+        b._solve_fams = dict(d.get("solve_fams", {}))
         return b

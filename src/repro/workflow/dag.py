@@ -65,6 +65,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -307,12 +308,34 @@ class StageDAG:
         return best[sink][1]
 
 
+# joins at least this wide fold via lax.scan instead of a Python-unrolled
+# chain: an unrolled W-way fold is ~30*W HLO ops on one dependency chain,
+# and XLA's passes go superlinear on it (a 170-way join alone pushed the
+# 512-stage solve's compile past 20 minutes); the scan body compiles ONCE.
+# Same sequential fold order, so the numerics match the unrolled path.
+_SCAN_FOLD_MIN = 16
+
+
 def _fold_max(items):
     """Sequential Clark fold of [(mu, var), ...] (moment-matched max)."""
     m, v = items[0]
-    for m2, v2 in items[1:]:
-        m, v = clark_max_moments_2(m, jnp.sqrt(jnp.maximum(v, 1e-18)),
-                                   m2, jnp.sqrt(jnp.maximum(v2, 1e-18)))
+    if len(items) < _SCAN_FOLD_MIN:
+        for m2, v2 in items[1:]:
+            m, v = clark_max_moments_2(m, jnp.sqrt(jnp.maximum(v, 1e-18)),
+                                       m2, jnp.sqrt(jnp.maximum(v2, 1e-18)))
+        return m, v
+
+    def body(carry, mv):
+        cm, cv = carry
+        m2, v2 = mv
+        return clark_max_moments_2(
+            cm, jnp.sqrt(jnp.maximum(cv, 1e-18)),
+            m2, jnp.sqrt(jnp.maximum(v2, 1e-18))), None
+
+    rest = (jnp.stack([jnp.asarray(x[0]) for x in items[1:]]),
+            jnp.stack([jnp.asarray(x[1]) for x in items[1:]]))
+    (m, v), _ = jax.lax.scan(body, (m + jnp.zeros(()), v + jnp.zeros(())),
+                             rest)
     return m, v
 
 

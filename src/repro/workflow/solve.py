@@ -31,6 +31,32 @@ This solver does that with one batched kernel path:
    multi-start, warm-startable from a previous solve (the balancer's tick
    path).
 
+**Multi-fidelity ladder (PR 8).** Quadrature resolution is the solve's
+price knob, and most of the work does not need the fine rung:
+
+* the stage-local presolve and the candidate triage run at a coarse
+  ``presolve_num_t`` (default 128 points — the composed-makespan RANKING of
+  candidates is far less sensitive to quadrature than the absolute moments,
+  because the coarse/fine bias is shared across candidates);
+* starts whose coarse composed score trails the coarse incumbent by more
+  than ``prune_margin`` (relative) are dropped before any fine-fidelity
+  work, and near-duplicate survivors (starts that presolved to the same
+  frontier point) collapse to their best-scored representative —
+  typically the refine descends one survivor, not every start;
+* the composed refine runs at ``num_t`` under a plateau early-stop
+  (``plateau_tol``/``plateau_patience``) instead of a fixed step count;
+* the FINAL pick always scores the surviving candidate pool at evaluation
+  resolution (``eval_num_t``, default max(num_t, 2048)) — coarse scores
+  are triage-only and never decide the returned split.
+
+**Incremental re-solves.** ``dirty`` names the stages whose estimation
+state moved since the ``warm_start`` split was computed: only their rows
+take PGD steps (a traced 0/1 mask gates the update — frozen rows still
+contribute their moments to the composed makespan but pass through every
+step and the final pick BITWISE, never re-projected or renormalized). An
+empty dirty set short-circuits to the warm split verbatim with one forward
+evaluation and no PGD launch at all.
+
 Objective: ``makespan_mu + lam_var * makespan_var``; with ``risk_lam > 0``
 and per-stage NIG posteriors, finalists additionally pay the delta-method
 fragility of the predicted makespan under estimation error — the
@@ -39,6 +65,7 @@ parameter adjoints come from the same stacked full-parameter launch).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional, Tuple
@@ -56,6 +83,19 @@ from .dag import StageDAG, compose_structure
 
 __all__ = ["DAGDecision", "solve_dag", "solve_dag_greedy", "evaluate_dag"]
 
+# default coarse rung of the fidelity ladder: presolve + triage quadrature
+_COARSE_NUM_T = 128
+# refine steps start from a PRESOLVED (near-frontier) iterate, where the
+# presolve's cold-start step size overshoots and oscillates for most of the
+# cosine schedule — a 10x smaller step descends monotonically (which is also
+# what makes the plateau early-stop a sound criterion for the refine)
+_PRESOLVE_LR = 0.05
+_REFINE_LR = 0.005
+# triage survivors whose weight stacks agree within this L-inf distance are
+# the SAME candidate (independent starts converged to one frontier point);
+# refining duplicates is pure waste, the best-scored representative stays
+_DEDUPE_TOL = 5e-3
+
 
 @dataclass(frozen=True)
 class DAGDecision:
@@ -69,6 +109,7 @@ class DAGDecision:
     method: str
     family_groups: int = 1          # kernel launches per moment evaluation
     fragility: Optional[float] = None
+    profile: Optional[dict] = None  # per-phase wall times + solver counters
 
     @property
     def relative_fragility(self) -> Optional[float]:
@@ -162,57 +203,94 @@ def _stage_moments_grads(W, dist_ids, idxs, stats, num_t, impl, bfs):
     return smu, svar, dmu, dvar
 
 
-@partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs",
-                                   "presolve_steps", "steps", "num_t",
-                                   "impl", "bfs", "sanitize"))
-def _pgd_dag(structure, dist_ids, idxs, stats, masks, W0, lam_var,
-             presolve_steps: int, steps: int, num_t: int, impl: str, bfs,
-             lr: float = 0.05, sanitize: bool = False):
-    """Two-phase joint PGD; every phase is the same stacked launch per step.
+@partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs", "steps",
+                                   "patience", "num_t", "impl", "bfs",
+                                   "composed", "sanitize"))
+def _pgd_phase(structure, dist_ids, idxs, stats, masks, W0, upd, lam_var,
+               plateau_tol, steps: int, patience: int, num_t: int,
+               impl: str, bfs, composed: bool, lr: float = _PRESOLVE_LR,
+               warmup: int = 0, sanitize: bool = False):
+    """One masked-PGD phase over the stacked stage simplices.
 
-    Phase 1 (presolve) descends each stage's LOCAL expected join time — the
-    graph-blind objective, all stages at once — so every stage reaches its
-    own frontier before the graph enters; phase 2 descends the composed
-    makespan (fused kernel adjoints chained with the composition's
-    cotangents), which redistributes the mean/variance trade toward the
-    joins. Returns ``(W_presolve, W_final)``: both snapshots join the final
-    candidate pool so the refine can explore without ever losing the
-    presolve solution.
+    ``composed=False`` descends each stage's LOCAL expected join time (the
+    graph-blind presolve objective — the per-row loss decouples into a sum
+    of stage means); ``composed=True`` descends the composed makespan
+    (fused kernel adjoints chained with the composition's cotangents).
 
-    Static ``sanitize=True`` plants checkify invariant checks per step; legal
-    only under ``analysis.sanitize.run_checked`` (see that module).
+    ``upd`` is the traced (S,) dirty mask of an incremental re-solve: rows
+    of frozen stages (``upd == 0``) contribute their moments to the
+    composed objective but take no step — the update is gated by
+    ``jnp.where`` so a frozen row passes through BITWISE (it is never
+    re-projected; Held projection of an on-simplex point is not
+    bit-stable). A traced mask means distinct dirty sets share one
+    compiled solver.
+
+    Plateau early-stop: the loop exits when the pool-best objective fails
+    to improve by a relative ``plateau_tol`` for ``patience`` consecutive
+    steps (``patience >= steps`` disables). Stalls only COUNT once the
+    step index passes ``warmup``: a cold start under a large cosine step
+    oscillates (the pool best can sit still for long windows while the
+    iterates are mid-transit toward the real descent later in the
+    schedule), so stall windows before the warmup are evidence of nothing.
+    The cosine schedule keeps its ``steps``-length horizon, so early exit
+    stops at a mid-schedule step size — the best-iterate tracking below
+    makes that safe.
+
+    Returns ``(W_final, W_best, best_loss, steps_run)``: ``W_best`` is the
+    best-objective iterate seen per start at THIS phase's fidelity (the
+    schedule can overshoot past it; both snapshots join the final pool so
+    refinement can explore without ever losing ground).
+
+    Static ``sanitize=True`` plants checkify invariant checks per step;
+    legal only under ``analysis.sanitize.run_checked`` (see that module).
     """
     proj = jax.vmap(jax.vmap(_project_simplex_masked))
     masks_b = jnp.broadcast_to(masks, W0.shape)
+    upd_b = (upd > 0)[None, :, None]
 
     def loss_one(smu_r, svar_r):
         mk_mu, mk_var = compose_structure(structure, smu_r, svar_r)
         return mk_mu + lam_var * mk_var
 
-    grad_compose = jax.vmap(jax.grad(loss_one, argnums=(0, 1)))
+    val_grad = jax.vmap(jax.value_and_grad(loss_one, argnums=(0, 1)))
 
-    def body(composed, n_steps, i, W):
+    def cond(c):
+        i, W, Wb, row_best, pool_best, stall = c
+        return (i < steps) & (stall < patience)
+
+    def body(c):
+        i, W, Wb, row_best, pool_best, stall = c
         smu, svar, dmu, dvar = _stage_moments_grads(
             W, dist_ids, idxs, stats, num_t, impl, bfs)
         if composed:
-            g_mu, g_var = grad_compose(smu, svar)      # (R, S) each
+            losses, (g_mu, g_var) = val_grad(smu, svar)    # (R,), (R, S)
             G = g_mu[..., None] * dmu + g_var[..., None] * dvar
         else:
-            G = dmu                                    # stage-local mean
+            losses = jnp.sum(smu, axis=1)
+            G = dmu                                        # stage-local mean
         if sanitize:
             _san.check_finite(smu, "DAG stage means")
             _san.check_finite(G, "DAG PGD gradient")
+        better = losses < row_best
+        Wb = jnp.where(better[:, None, None], W, Wb)
+        row_best = jnp.minimum(row_best, losses)
+        cur = jnp.min(losses)
+        moved = pool_best - cur > plateau_tol * jnp.abs(pool_best)
+        stall = jnp.where(moved | (i < warmup), 0, stall + 1)
+        pool_best = jnp.minimum(pool_best, cur)
         G = G / (jnp.linalg.norm(G, axis=-1, keepdims=True) + 1e-12)
-        step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / n_steps))
-        W = proj(W - step * G, masks_b)
+        step = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / steps))
+        W = jnp.where(upd_b, proj(W - step * G, masks_b), W)
         if sanitize:
             _san.check_weight_rows(W, "DAG PGD iterate")
-        return W
+        return (i + 1, W, Wb, row_best, pool_best, stall)
 
-    W1 = jax.lax.fori_loop(0, presolve_steps,
-                           partial(body, False, presolve_steps), W0)
-    Wf = jax.lax.fori_loop(0, steps, partial(body, True, steps), W1)
-    return W1, Wf
+    R = W0.shape[0]
+    # 1e30, not inf: inf-inf poisons the first plateau comparison
+    init = (jnp.int32(0), W0, W0, jnp.full((R,), 1e30, jnp.float32),
+            jnp.float32(1e30), jnp.int32(0))
+    i, W, Wb, row_best, _, _ = jax.lax.while_loop(cond, body, init)
+    return W, Wb, row_best, i
 
 
 @partial(jax.jit, static_argnames=("structure", "dist_ids", "idxs", "num_t",
@@ -266,8 +344,11 @@ def _dag_fragility(structure, groups, stats, se_stacks, W, smu, svar,
     ``estimation_fragility`` chained through the composition: the stacked
     full-parameter launch gives every stage's d(mu_s, var_s)/d(mus, sigmas);
     the composition's cotangents d(mk_mu)/d(mu_s, var_s) come from autodiff
-    over the Clark folds; stage posteriors are independent, so the variance
-    contributions add across stages AND channels.
+    over the Clark folds, taken at the smu/svar the candidates were SCORED
+    at (the finalist evaluation is reused — only the parameter adjoints
+    need a fresh launch, at the solve fidelity). Stage posteriors are
+    independent, so the variance contributions add across stages AND
+    channels.
     """
     R, S, kmax = W.shape
     gmk = jax.vmap(jax.grad(
@@ -327,8 +408,15 @@ def _dag_with_done(dag: StageDAG, done: Dict[str, np.ndarray]) -> StageDAG:
 
 
 def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
-            warm_start, key) -> np.ndarray:
-    """(R, S, Kmax) start stack: equal, inverse-mu, warm, Dirichlet."""
+            warm_start, key, upd: Optional[np.ndarray] = None) -> np.ndarray:
+    """(R, S, Kmax) start stack: equal, inverse-mu, warm, Dirichlet.
+
+    ``upd`` (S,) 0/1 marks the dirty stages of an incremental re-solve.
+    When given, the warm row is taken VERBATIM (no renormalization — it
+    must already be a valid simplex row, e.g. any previous solve's output)
+    and every start's FROZEN rows are overwritten with the warm rows, so
+    all candidates agree bitwise on the stages the solve must not move.
+    """
     S = len(dag.stages)
     act = mask.astype(np.float64)
     eq = act / act.sum(axis=1, keepdims=True)
@@ -341,8 +429,12 @@ def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
     if warm_start is not None:
         wm = np.zeros((S, kmax))
         for i, s in enumerate(dag.stages):
-            w = np.maximum(np.asarray(warm_start[s.name], np.float64), 0.0)
-            wm[i, :s.k] = w / max(w.sum(), 1e-12)
+            w = np.asarray(warm_start[s.name], np.float64)
+            if upd is None:
+                w = np.maximum(w, 0.0)
+                wm[i, :s.k] = w / max(w.sum(), 1e-12)
+            else:
+                wm[i, :s.k] = w
         starts.insert(0, wm)
     if restarts > 0:
         rng = np.random.default_rng(
@@ -352,7 +444,15 @@ def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
             e = rng.exponential(size=(S, kmax)) * act
             starts.append(e / np.maximum(e.sum(axis=1, keepdims=True),
                                          1e-12))
-    return np.stack(starts).astype(np.float32)
+    out = np.stack(starts)
+    if upd is not None:
+        frozen = upd <= 0
+        out[:, frozen, :] = out[0, frozen, :]
+    return out.astype(np.float32)
+
+
+def _us(t0: float, t1: float) -> float:
+    return round((t1 - t0) * 1e6, 1)
 
 
 def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
@@ -364,29 +464,61 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
               posteriors: Optional[Dict[str, object]] = None,
               presolve_steps: Optional[int] = None,
               eval_num_t: Optional[int] = None,
-              done: Optional[Dict[str, np.ndarray]] = None) -> DAGDecision:
+              done: Optional[Dict[str, np.ndarray]] = None,
+              presolve_num_t: Optional[int] = None,
+              prune_margin: Optional[float] = 5e-3,
+              plateau_tol: float = 1e-6,
+              plateau_patience: Optional[int] = 8,
+              dirty: Optional[object] = None) -> DAGDecision:
     """Jointly optimize every stage's split for the end-to-end makespan.
 
     Objective: ``makespan_mu + lam_var * makespan_var`` composed through the
     DAG (series sums, Clark joins), descended by masked projected gradient
-    over the concatenated stage simplices in two phases — a stage-local
-    presolve (every stage to its own frontier) then the composed refine
-    (the graph redistributes the mean/variance trade toward the joins).
+    over the concatenated stage simplices through a multi-fidelity ladder:
+
+    1. stage-local presolve at ``presolve_num_t`` quadrature points
+       (default min(num_t, 128)) — every stage to its own frontier;
+    2. coarse triage: {starts, presolve snapshots} scored on the COMPOSED
+       objective at ``presolve_num_t``; starts whose best coarse score
+       trails the incumbent by more than ``prune_margin`` (relative) are
+       dropped before any fine-fidelity work, and near-duplicate survivors
+       collapse to one representative (``prune_margin=None`` disables the
+       margin prune; the incumbent and the warm start always survive);
+    3. composed refine of the survivors at ``num_t`` — warm from the
+       presolve, so it descends with a small step — under plateau
+       early-stop (``plateau_tol`` relative improvement, ``plateau_patience``
+       consecutive stalls counted after a schedule warmup;
+       ``plateau_patience=None`` restores the fixed step count);
+    4. final pick: the surviving pool (refine inits, best-seen iterates,
+       refined iterates) scored at ``eval_num_t`` (default
+       max(num_t, 2048)) — coarse scores are triage-only, the returned
+       split is ALWAYS chosen at evaluation fidelity, so the refine can
+       only improve on the presolve and a warm start is never lost to an
+       overshooting step.
+
     Every moment/gradient evaluation runs through ONE stacked
     ``ops.frontier_moments*`` launch per completion-time family present in
     the DAG — stages are rows, never a Python loop over kernel launches.
-
-    The final pick scores the union of {starts, presolve snapshot, refined
-    iterates} at evaluation resolution (``eval_num_t``, default
-    max(num_t, 2048)), so the refine can only improve on the presolve and a
-    warm start is never lost to an overshooting step.
+    Each (fidelity, mode) pair resolves its own autotuned block shape:
+    ``num_t`` is part of the autotune key schema, so coarse-rung entries
+    never cross-contaminate fine-rung silicon sweeps.
 
     ``warm_start``: per-stage weights of a previous solve (the balancer's
-    refresh ticks). ``risk_lam > 0`` with per-stage ``posteriors``
-    ({stage name: NIGState}) scores finalists risk-adjusted by the
-    composed estimation fragility; the fragility of the winning candidate
-    is reported on the decision whenever posteriors are given (the
-    balancer's adaptive refresh sizes its cadence by it).
+    refresh ticks). ``dirty`` (requires ``warm_start``) is the incremental
+    re-solve contract: only the named stages' rows take PGD steps; frozen
+    stages contribute moments to the composed makespan but their rows pass
+    through bitwise (exact pass-throughs — bit-identical for
+    float32-representable warm rows, which any previous solve's output
+    is). An EMPTY dirty set returns the warm split verbatim (bitwise, no
+    PGD launch) with moments from a single forward evaluation.
+
+    ``risk_lam > 0`` with per-stage ``posteriors`` ({stage name: NIGState})
+    scores finalists risk-adjusted by the composed estimation fragility;
+    the fragility of the winning candidate is reported on the decision
+    whenever posteriors are given (the balancer's adaptive refresh sizes
+    its cadence by it) — with ``risk_lam == 0`` only the winner's
+    fragility is computed (one single-row launch), reusing the finalist
+    evaluation's moments for the composition cotangents.
 
     ``done`` ({stage name: per-channel completed work fractions}) is the
     sunk-work mid-flight re-solve: each named stage's statistics are rescaled
@@ -395,46 +527,66 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
     work (stages not named are solved for their full unit of work). A stage
     whose work is entirely done keeps zero weights and zero duration moments
     — it no longer gates its joins.
+
+    ``decision.profile`` carries per-phase wall times (``phase_us``) and
+    solver counters (starts, survivors, pool size, steps run per phase) so
+    fidelity-ladder wins stay attributable.
     """
+    t_begin = time.perf_counter()
     if done:
         dag = _dag_with_done(dag, done)
+    S = len(dag.stages)
+    pnt = min(presolve_num_t if presolve_num_t is not None
+              else _COARSE_NUM_T, num_t)
+    et = eval_num_t or max(num_t, 2048)
+
+    upd_np = None
+    if dirty is not None:
+        dset = {str(n) for n in dirty}
+        unknown = dset - {s.name for s in dag.stages}
+        if unknown:
+            raise KeyError(f"dirty stages not in the DAG: {sorted(unknown)}")
+        if warm_start is None:
+            raise ValueError("dirty= is an incremental re-solve and "
+                             "requires warm_start")
+        if not dset:
+            # nothing moved: the warm split stands verbatim — one forward
+            # evaluation for the reported moments, no PGD launch at all
+            base = evaluate_dag(dag, warm_start, num_t=et, impl=impl)
+            return DAGDecision(
+                weights={s.name: np.asarray(warm_start[s.name],
+                                            np.float64).copy()
+                         for s in dag.stages},
+                makespan_mu=base.makespan_mu,
+                makespan_var=base.makespan_var,
+                stage_mu=base.stage_mu, stage_var=base.stage_var,
+                method="pgd-dag-noop", family_groups=base.family_groups,
+                profile={"phase_us": {"final_score":
+                                      _us(t_begin, time.perf_counter())},
+                         "noop": True, "starts": 0, "survivors": 0,
+                         "pool": 1, "presolve_num_t": pnt,
+                         "eval_num_t": et})
+        upd_np = np.array([1.0 if s.name in dset else 0.0
+                           for s in dag.stages], np.float32)
+
     groups, mask, kmax = _stage_groups(dag)
     dist_ids = tuple(g.dist_id for g in groups)
     idxs = tuple(g.idx for g in groups)
     stats = tuple((jnp.asarray(g.mus), jnp.asarray(g.sigmas),
                    jnp.asarray(g.extra)) for g in groups)
-    W0 = jnp.asarray(_starts(dag, mask, kmax, restarts, warm_start, key))
-    R = W0.shape[0]
-    bfs = tuple(
-        autotune.lookup(R * len(g.idx), kmax, num_t, backend=impl,
-                        fused=True, dist_id=g.dist_id, stacked=True)
-        if block_f is None else max(min(block_f, R * len(g.idx)), 1)
-        for g in groups)
-
+    W0 = jnp.asarray(_starts(dag, mask, kmax, restarts, warm_start, key,
+                             upd=upd_np))
+    R = int(W0.shape[0])
+    upd = jnp.asarray(upd_np if upd_np is not None
+                      else np.ones(S, np.float32))
     pre = presolve_steps if presolve_steps is not None else steps
-    if _san.enabled():
-        # sanitizer tier: eager boundary validation of the stage statistics,
-        # then the jitted joint solver under checkify (see analysis.sanitize)
-        _san.assert_weight_rows(np.asarray(W0))
-        for g in groups:
-            _san.assert_finite("stage mus", g.mus)
-            _san.assert_finite("stage sigmas", g.sigmas)
-            _san.assert_nonneg("stage sigmas", g.sigmas)
-        W1, Wf = _san.run_checked(
-            partial(_pgd_dag, presolve_steps=pre, steps=steps, num_t=num_t,
-                    impl=impl, bfs=bfs, sanitize=True),
-            dag.structure, dist_ids, idxs, stats, jnp.asarray(mask), W0,
-            jnp.float32(lam_var))
-    else:
-        W1, Wf = _pgd_dag(dag.structure, dist_ids, idxs, stats,
-                          jnp.asarray(mask), W0, jnp.float32(lam_var),
-                          pre, steps, num_t, impl, bfs)
-    cands = jnp.concatenate([W0, W1, Wf], axis=0)
-    et = eval_num_t or max(num_t, 2048)
+    patience = (plateau_patience if plateau_patience is not None
+                else max(steps, pre, 1))
 
-    # every launch mode resolves its OWN block shape: the fused pgrad
-    # working set is ~4x the grad one and the eval pass runs a larger grid —
-    # reusing the PGD-tuned block would bypass the budget model on both
+    # every launch mode AND fidelity rung resolves its OWN block shape: the
+    # fused pgrad working set is ~4x the grad one, the eval pass runs a
+    # larger grid, and T is part of the autotune key so the coarse rung's
+    # swept entries never shadow the fine rung's
     def _bf(g, rows, nt, fused, params):
         if block_f is not None:
             return max(min(block_f, rows), 1)
@@ -442,6 +594,96 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
                                dist_id=g.dist_id, params=params,
                                stacked=True)
 
+    def _run_phase(W_in, bfs_p, composed, n_steps, nt, pat, lr, warmup):
+        if _san.enabled():
+            return _san.run_checked(
+                partial(_pgd_phase, steps=n_steps, patience=pat, num_t=nt,
+                        impl=impl, bfs=bfs_p, composed=composed, lr=lr,
+                        warmup=warmup, sanitize=True),
+                dag.structure, dist_ids, idxs, stats, jnp.asarray(mask),
+                W_in, upd, jnp.float32(lam_var), jnp.float32(plateau_tol))
+        return _pgd_phase(dag.structure, dist_ids, idxs, stats,
+                          jnp.asarray(mask), W_in, upd,
+                          jnp.float32(lam_var), jnp.float32(plateau_tol),
+                          n_steps, pat, nt, impl, bfs_p, composed,
+                          lr=lr, warmup=warmup)
+
+    if _san.enabled():
+        # sanitizer tier: eager boundary validation of the stage statistics
+        # once, then both jitted phases under checkify (analysis.sanitize)
+        _san.assert_weight_rows(np.asarray(W0))
+        for g in groups:
+            _san.assert_finite("stage mus", g.mus)
+            _san.assert_finite("stage sigmas", g.sigmas)
+            _san.assert_nonneg("stage sigmas", g.sigmas)
+
+    phase_us = {}
+    t0 = time.perf_counter()
+    phase_us["starts"] = _us(t_begin, t0)
+
+    # --- phase 1: stage-local presolve at the coarse rung; stall counting
+    # waits out the first half of the cosine schedule (cold starts spend it
+    # in large-step transit where the pool best moves in bursts)
+    bfs_pre = tuple(_bf(g, R * len(g.idx), pnt, True, False) for g in groups)
+    W1, _, _, n_pre = _run_phase(W0, bfs_pre, False, pre, pnt, patience,
+                                 _PRESOLVE_LR, pre // 2)
+    jax.block_until_ready(W1)
+    t1 = time.perf_counter()
+    phase_us["presolve"] = _us(t0, t1)
+
+    # --- coarse triage: composed scores of {starts, presolve} at the same
+    # rung; the coarse/fine quadrature bias is shared across candidates, so
+    # the RANKING is meaningful at far lower resolution than the moments
+    pool0 = jnp.concatenate([W0, W1], axis=0)
+    bfs_tri = tuple(_bf(g, 2 * R * len(g.idx), pnt, False, False)
+                    for g in groups)
+    c_mu, c_var, _, _ = _score_dag(dag.structure, dist_ids, idxs, stats,
+                                   pool0, pnt, impl, bfs_tri)
+    csc = np.asarray(c_mu, np.float64) + lam_var * np.asarray(c_var,
+                                                              np.float64)
+    per_start = np.minimum(csc[:R], csc[R:])
+    W0h, W1h = np.asarray(W0), np.asarray(W1)
+    Wch = np.where((csc[R:] <= csc[:R])[:, None, None], W1h, W0h)
+    if prune_margin is None:
+        keep = np.ones(R, bool)
+    else:
+        inc = float(per_start.min())
+        keep = per_start <= inc + prune_margin * max(abs(inc), 1e-12)
+        keep[int(np.argmin(per_start))] = True
+    # collapse near-duplicate survivors: independent starts routinely
+    # presolve to the SAME frontier point; only the best-scored
+    # representative of each cluster goes on to fine-fidelity refinement
+    chosen: List[int] = []
+    for i in np.argsort(per_start, kind="stable"):
+        if not keep[i]:
+            continue
+        if any(float(np.abs(Wch[i] - Wch[j]).max()) <= _DEDUPE_TOL
+               for j in chosen):
+            keep[i] = False
+        else:
+            chosen.append(int(i))
+    if warm_start is not None:
+        keep[0] = True   # the warm start is never lost to coarse triage
+    survivors = int(keep.sum())
+    Wr0 = jnp.asarray(Wch[np.flatnonzero(keep)])
+    t2 = time.perf_counter()
+    phase_us["triage"] = _us(t1, t2)
+
+    # --- phase 2: composed refine of the survivors at solve fidelity; the
+    # survivors are presolved (near-frontier) so the step is small, but the
+    # fixed-size normalized-gradient steps still orbit the optimum until the
+    # cosine decay shrinks them — stalls count from mid-schedule here too
+    bfs_ref = tuple(_bf(g, survivors * len(g.idx), num_t, True, False)
+                    for g in groups)
+    Wf, Wb, _, n_ref = _run_phase(Wr0, bfs_ref, True, steps, num_t, patience,
+                                  _REFINE_LR, steps // 2)
+    jax.block_until_ready(Wf)
+    t3 = time.perf_counter()
+    phase_us["refine"] = _us(t2, t3)
+
+    # --- final pick at evaluation fidelity: refine inits (which include the
+    # triage winners and any warm start), best-seen and final iterates
+    cands = jnp.concatenate([Wr0, Wb, Wf], axis=0)
     ncand = int(cands.shape[0])
     bfs_eval = tuple(_bf(g, ncand * len(g.idx), et, False, False)
                      for g in groups)
@@ -449,27 +691,51 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
                                           stats, cands, et, impl, bfs_eval)
     score = np.asarray(mk_mu, np.float64) + lam_var * np.asarray(
         mk_var, np.float64)
-    method = "pgd-dag-joint"
+    t4 = time.perf_counter()
+    phase_us["final_score"] = _us(t3, t4)
+
+    method = ("pgd-dag-joint-inc" if upd_np is not None else "pgd-dag-joint")
     frag = None
+    se_stacks = None
     if posteriors is not None:
         se_stacks = _se_stacks(dag, groups, posteriors, kmax)
-        bfs_frag = tuple(_bf(g, ncand * len(g.idx), num_t, True, True)
-                         for g in groups)
-        frag = _dag_fragility(dag.structure, groups, stats, se_stacks,
-                              cands, smu, svar, num_t, impl, bfs_frag)
         if risk_lam > 0.0:
+            bfs_frag = tuple(_bf(g, ncand * len(g.idx), num_t, True, True)
+                             for g in groups)
+            frag = _dag_fragility(dag.structure, groups, stats, se_stacks,
+                                  cands, smu, svar, num_t, impl, bfs_frag)
             score = score + risk_lam * frag
-            method = "pgd-dag-joint-risk"
+            method += "-risk"
     best = int(np.argmin(score))
-    Wb = np.asarray(cands[best], np.float64)
-    weights = {s.name: Wb[i, :s.k] for i, s in enumerate(dag.stages)}
+    frag_best = None
+    if frag is not None:
+        frag_best = float(frag[best])
+    elif posteriors is not None:
+        # reported fragility only: one single-row pgrad launch for the
+        # WINNER, reusing its eval-fidelity moments for the composition
+        # cotangents instead of re-launching the whole candidate pool
+        bfs_frag = tuple(_bf(g, len(g.idx), num_t, True, True)
+                         for g in groups)
+        fb = _dag_fragility(dag.structure, groups, stats, se_stacks,
+                            cands[best:best + 1], smu[best:best + 1],
+                            svar[best:best + 1], num_t, impl, bfs_frag)
+        frag_best = float(fb[0])
+    if posteriors is not None:
+        phase_us["fragility"] = _us(t4, time.perf_counter())
+
+    Wbest = np.asarray(cands[best], np.float64)
+    weights = {s.name: Wbest[i, :s.k] for i, s in enumerate(dag.stages)}
+    profile = {"phase_us": phase_us, "starts": R, "survivors": survivors,
+               "pool": ncand, "presolve_num_t": pnt, "eval_num_t": et,
+               "presolve_steps_run": int(n_pre),
+               "refine_steps_run": int(n_ref)}
     return DAGDecision(
         weights=weights,
         makespan_mu=float(mk_mu[best]), makespan_var=float(mk_var[best]),
         stage_mu=np.asarray(smu[best], np.float64),
         stage_var=np.asarray(svar[best], np.float64),
         method=method, family_groups=len(groups),
-        fragility=(float(frag[best]) if frag is not None else None))
+        fragility=frag_best, profile=profile)
 
 
 def evaluate_dag(dag: StageDAG, weights: Dict[str, np.ndarray],
@@ -504,21 +770,54 @@ def evaluate_dag(dag: StageDAG, weights: Dict[str, np.ndarray],
 def solve_dag_greedy(dag: StageDAG, lam: float = 0.0, steps: int = 120,
                      restarts: int = 2, num_t: int = 1024,
                      impl: str = "xla",
-                     eval_num_t: Optional[int] = None) -> DAGDecision:
+                     eval_num_t: Optional[int] = None,
+                     presolve_num_t: Optional[int] = None,
+                     warm_start: Optional[Dict[str, np.ndarray]] = None,
+                     dirty: Optional[object] = None) -> DAGDecision:
     """Stage-by-stage baseline: each stage solved alone (``mu + lam var`` on
     its OWN join time), blind to where it sits in the graph — a per-stage
     Python loop over independent solves, the thing the joint solver
-    replaces. Composed moments evaluated with the shared evaluator."""
+    replaces. Composed moments evaluated with the shared evaluator.
+
+    The joint solver's knobs ride along for like-for-like comparisons:
+    ``presolve_num_t`` runs the per-stage solves at a coarse quadrature
+    rung (default None keeps them at ``num_t`` — the tracked baseline);
+    ``dirty`` (requires ``warm_start``) copies the warm split verbatim for
+    stages outside the set and re-solves only the dirty ones, warm-started.
+    """
+    if dirty is not None:
+        dset = {str(n) for n in dirty}
+        unknown = dset - {s.name for s in dag.stages}
+        if unknown:
+            raise KeyError(f"dirty stages not in the DAG: {sorted(unknown)}")
+        if warm_start is None:
+            raise ValueError("dirty= is an incremental re-solve and "
+                             "requires warm_start")
+    else:
+        dset = None
+    solve_t = num_t if presolve_num_t is None else min(presolve_num_t, num_t)
+    t0 = time.perf_counter()
     weights = {}
     for s in dag.stages:
-        dec = optimize_weights(s.mus, s.sigmas, lam=lam, steps=steps,
-                               restarts=restarts, num_t=num_t, impl=impl,
-                               family=s.family)
+        if dset is not None and s.name not in dset:
+            weights[s.name] = np.asarray(warm_start[s.name],
+                                         np.float64).copy()
+            continue
+        dec = optimize_weights(
+            s.mus, s.sigmas, lam=lam, steps=steps, restarts=restarts,
+            num_t=solve_t, impl=impl, family=s.family,
+            warm_start=(None if warm_start is None
+                        else warm_start.get(s.name)),
+            eval_num_t=num_t)
         weights[s.name] = dec.weights
+    t1 = time.perf_counter()
     out = evaluate_dag(dag, weights, num_t=eval_num_t or max(num_t, 2048),
                        impl=impl)
+    profile = {"phase_us": {"stage_solves": _us(t0, t1),
+                            "final_score": _us(t1, time.perf_counter())},
+               "solve_num_t": solve_t}
     return DAGDecision(
-        weights=out.weights, makespan_mu=out.makespan_mu,
+        weights=weights, makespan_mu=out.makespan_mu,
         makespan_var=out.makespan_var, stage_mu=out.stage_mu,
         stage_var=out.stage_var, method="greedy-per-stage",
-        family_groups=out.family_groups)
+        family_groups=out.family_groups, profile=profile)

@@ -371,6 +371,65 @@ class TestContracts:
         assert fs == []
 
 
+class TestFidelityKnob:
+    def test_rpa070_fires_on_literal_num_t(self, tmp_path):
+        fs = _lint(tmp_path, """
+            from repro.kernels import ops
+
+            def f(W, mus, sigmas, family):
+                return ops.frontier_moments(W, mus, sigmas, num_t=2048,
+                                            family=family)
+            """, select=["RPA070"])
+        assert _codes(fs) == ["RPA070"]
+
+    def test_rpa070_fires_on_constant_arithmetic(self, tmp_path):
+        fs = _lint(tmp_path, """
+            from repro.kernels import ops
+
+            def f(W, mus, sigmas, family):
+                return ops.frontier_moments_with_grads(
+                    W, mus, sigmas, num_t=2 * 1024, family=family)
+            """, select=["RPA070"])
+        assert _codes(fs) == ["RPA070"]
+
+    def test_rpa070_silent_when_threaded(self, tmp_path):
+        fs = _lint(tmp_path, """
+            from repro.kernels import ops
+
+            def f(W, mus, sigmas, family, num_t):
+                return ops.frontier_moments(W, mus, sigmas, num_t=num_t,
+                                            family=family)
+            """, select=["RPA070"])
+        assert fs == []
+
+    def test_rpa070_pragma_suppresses(self, tmp_path):
+        fs = _lint(tmp_path, """
+            from repro.kernels import ops
+
+            def f(W, mus, sigmas, family):
+                # repro: allow[RPA070] figure reproduction at pinned rung
+                return ops.frontier_moments(W, mus, sigmas, num_t=2048,
+                                            family=family)
+            """, select=["RPA070"])
+        assert fs == []
+
+    def test_rpa070_tests_dir_exempt(self, tmp_path):
+        import textwrap
+
+        from repro.analysis import run_paths
+        d = tmp_path / "tests"
+        d.mkdir()
+        (d / "test_fx.py").write_text(textwrap.dedent("""
+            from repro.kernels import ops
+
+            def test_f(W, mus, sigmas, family):
+                return ops.frontier_moments(W, mus, sigmas, num_t=128,
+                                            family=family)
+            """))
+        fs = run_paths([str(d)], select=["RPA070"])
+        assert fs == []
+
+
 # ---------------------------------------------------------------------------
 # the gate: the real tree lints clean
 # ---------------------------------------------------------------------------

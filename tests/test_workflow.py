@@ -294,6 +294,190 @@ class TestJointSolve:
                                                 abs=1e-3)
 
 
+class TestMultiFidelity:
+    """PR 8: the fidelity ladder, candidate pruning, and incremental
+    (dirty-set) re-solves. The bitwise contracts here are pinned in
+    docs/INVARIANTS.md."""
+
+    def test_ladder_final_pick_matches_full_fidelity(self):
+        """Coarse scores are triage-only: running the whole ladder at the
+        solve fidelity (no coarse rung, no prune, no early stop) must land
+        within 1e-3 relative composed makespan of the default ladder."""
+        dag = _diamond(seed=12)
+        mf = solve_dag(dag, steps=60, restarts=1, num_t=512)
+        full = solve_dag(dag, steps=60, restarts=1, num_t=512,
+                         presolve_num_t=512, prune_margin=None,
+                         plateau_patience=None)
+        assert mf.makespan_mu == pytest.approx(full.makespan_mu, rel=1e-3)
+
+    def test_coarse_rung_ranking_resolution(self):
+        """The coarse rung's MOMENTS are biased vs the fine rung (that's why
+        they never decide the winner) but by far less than the margins the
+        triage prunes on."""
+        dag = _diamond(seed=12)
+        w = {s.name: np.full(s.k, 1.0 / s.k) for s in dag.stages}
+        coarse = evaluate_dag(dag, w, num_t=128)
+        fine = evaluate_dag(dag, w, num_t=2048)
+        gap = abs(coarse.makespan_mu - fine.makespan_mu) / fine.makespan_mu
+        assert gap < 1e-3
+
+    def test_profile_attributes_ladder_phases(self):
+        dag = _diamond(seed=13)
+        dec = solve_dag(dag, steps=30, restarts=1, num_t=256)
+        prof = dec.profile
+        assert {"starts", "presolve", "triage", "refine",
+                "final_score"} <= set(prof["phase_us"])
+        assert prof["presolve_num_t"] == 128      # min(default 128, num_t)
+        assert prof["eval_num_t"] == 2048         # max(num_t, 2048)
+        assert 1 <= prof["survivors"] <= prof["pool"]
+        assert 1 <= prof["refine_steps_run"] <= 30
+
+    def test_plateau_early_stop_saves_steps(self):
+        """A huge plateau_tol makes every post-warmup step a stall, so the
+        refine must cut out right after the warmup + patience window instead
+        of running the full budget; patience=None restores the fixed count."""
+        dag = _diamond(seed=13)
+        stopped = solve_dag(dag, steps=60, restarts=0, num_t=128,
+                            plateau_tol=0.5, plateau_patience=2)
+        fixed = solve_dag(dag, steps=60, restarts=0, num_t=128,
+                          plateau_patience=None)
+        assert stopped.profile["refine_steps_run"] < 60
+        assert fixed.profile["refine_steps_run"] == 60
+
+    def test_empty_dirty_is_bitwise_noop(self, monkeypatch):
+        """An empty dirty set returns the warm split verbatim from one
+        forward evaluation — launching PGD at all is the bug."""
+        import repro.workflow.solve as solve_mod
+
+        dag = _diamond(seed=14)
+        dec = solve_dag(dag, steps=30, restarts=0, num_t=256)
+
+        def boom(*a, **k):
+            raise AssertionError("PGD launched on an empty dirty set")
+
+        monkeypatch.setattr(solve_mod, "_pgd_phase", boom)
+        dec2 = solve_dag(dag, steps=30, restarts=0, num_t=256,
+                         warm_start=dec.weights, dirty=set())
+        assert dec2.method == "pgd-dag-noop"
+        assert dec2.profile["noop"] and dec2.profile["starts"] == 0
+        for s in dag.stages:
+            assert np.array_equal(dec.weights[s.name], dec2.weights[s.name])
+        assert dec2.makespan_mu == pytest.approx(dec.makespan_mu, rel=5e-3)
+
+    def test_single_dirty_stage_freezes_other_rows_bitwise(self):
+        dag = _diamond(seed=15)
+        dec = solve_dag(dag, steps=30, restarts=0, num_t=256)
+        dec2 = solve_dag(dag, steps=20, restarts=0, num_t=256,
+                         warm_start=dec.weights, dirty={"b"})
+        assert dec2.method == "pgd-dag-joint-inc"
+        for s in dag.stages:
+            if s.name == "b":
+                continue
+            assert np.array_equal(dec.weights[s.name], dec2.weights[s.name]), \
+                f"frozen stage {s.name} moved"
+
+    def test_dirty_validation(self):
+        dag = _diamond(seed=16)
+        with pytest.raises(ValueError, match="warm_start"):
+            solve_dag(dag, steps=5, num_t=128, dirty={"b"})
+        dec = solve_dag(dag, steps=5, restarts=0, num_t=128)
+        with pytest.raises(KeyError, match="ghost"):
+            solve_dag(dag, steps=5, num_t=128, warm_start=dec.weights,
+                      dirty={"ghost"})
+
+    def test_greedy_rides_the_same_knobs(self):
+        dag = _diamond(seed=15)
+        base = solve_dag_greedy(dag, steps=20, restarts=0, num_t=256)
+        inc = solve_dag_greedy(dag, steps=10, restarts=0, num_t=256,
+                               presolve_num_t=128,
+                               warm_start=base.weights, dirty={"c"})
+        for s in dag.stages:
+            if s.name == "c":
+                continue
+            assert np.array_equal(base.weights[s.name], inc.weights[s.name])
+        with pytest.raises(ValueError, match="warm_start"):
+            solve_dag_greedy(dag, steps=5, num_t=128, dirty={"c"})
+
+    def test_autotune_keys_separate_fidelity_rungs(self):
+        """Coarse and fine rungs must resolve distinct autotune entries — a
+        silicon sweep at one fidelity can never shadow another's plan."""
+        from repro.kernels.autotune import _key
+
+        coarse = _key(8, 64, 128, "xla", False, stacked=True)
+        fine = _key(8, 64, 2048, "xla", False, stacked=True)
+        assert coarse != fine
+        assert "T128" in coarse and "T2048" in fine
+
+
+class TestIncrementalBalancer:
+    """WorkflowBalancer's fragility-gated dirty sets (PR 8)."""
+
+    def _spied(self, monkeypatch):
+        """Wrap workflow.solve.solve_dag, recording each call's dirty= —
+        the balancer imports it lazily inside weights(), so patching the
+        solve module intercepts every solver call."""
+        import repro.workflow.solve as solve_mod
+
+        calls = []
+        real = solve_mod.solve_dag
+
+        def spy(dag, **kw):
+            calls.append(kw.get("dirty"))
+            return real(dag, **kw)
+
+        monkeypatch.setattr(solve_mod, "solve_dag", spy)
+        return calls
+
+    def _bal(self, dag):
+        # risk_lam > 0 makes the composed fragility ride every solve, and
+        # the huge refresh_target_rel keeps the incremental gate open
+        return WorkflowBalancer(dag, refresh_every=1, pgd_steps=10,
+                                num_t=128, restarts=0, family="normal",
+                                risk_lam=1e-6, refresh_target_rel=100.0)
+
+    def test_drifted_stage_dirties_only_itself(self, monkeypatch):
+        calls = self._spied(monkeypatch)
+        dag = _diamond(seed=17)
+        bal = self._bal(dag)
+
+        w0 = bal.weights()
+        assert calls == [None]          # first solve is always full
+
+        w0b = bal.weights()
+        assert len(calls) == 1          # no drift: empty dirty, no solver call
+        for n in w0:
+            assert np.array_equal(w0[n], w0b[n])
+
+        # move ONE stage's posterior far past dirty_tol; the others see no
+        # observations and stay inside their snapshots
+        for _ in range(4):
+            bal.observe({"b": np.full(3, 5.0)}, {"b": w0["b"]})
+        w1 = bal.weights()
+        assert calls[-1] == {"b"}
+        for n in w0:
+            if n != "b":
+                assert np.array_equal(w0[n], w1[n]), f"frozen {n} moved"
+
+    def test_state_dict_round_trips_snapshots(self, monkeypatch):
+        calls = self._spied(monkeypatch)
+        dag = _diamond(seed=18)
+        bal = self._bal(dag)
+        w0 = bal.weights()
+        sd = bal.state_dict()
+        assert set(sd["solve_stats"]) == set(dag.names)
+        assert set(sd["solve_fams"]) == set(dag.names)
+
+        b2 = WorkflowBalancer.from_state_dict(sd, dag)
+        n_calls = len(calls)
+        w2 = b2.weights()
+        # the restored replica inherits the snapshots: nothing drifted, so
+        # its first tick is the cached split with NO solver call — the same
+        # incremental decision the original would have made
+        assert len(calls) == n_calls
+        for n in w0:
+            assert np.array_equal(w0[n], w2[n])
+
+
 class TestComposeMC:
     """Satellite acceptance: composed (mu, var) vs large-sample simulation."""
 
