@@ -4,6 +4,14 @@ system. Real tiny-model generation per group (--execute), simulated
 replica-speed physics, online learning of the split.
 
 Run:  PYTHONPATH=src python examples/serve_partitioned.py --batches 60 --execute
+
+``--engine`` demos the continuous-batching tier instead: many concurrent
+workflow instances (mixed templates, SLO deadlines) admitted from a queue,
+every dirty instance's remaining stages priced by ONE stacked launch per
+completion-time family per tick, including a mid-trace kill/restore through
+the checkpoint manifest.
+
+Run:  PYTHONPATH=src python examples/serve_partitioned.py --engine
 """
 import argparse
 import os
@@ -12,6 +20,56 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
+
+
+def run_engine_demo(ticks: int = 30) -> None:
+    """Continuous batching + SLO urgency + kill/restore, end to end."""
+    import tempfile
+
+    from repro.ckpt.store import restore_pipeline, save_pipeline
+    from repro.serve import WorkflowEngine
+    from repro.workflow.dag import Stage, StageDAG, linear_edges
+
+    templates = {
+        "etl": StageDAG([
+            Stage("extract", mus=[1.0, 1.4, 1.9], sigmas=[0.2, 0.25, 0.35]),
+            Stage("load", mus=[1.3, 1.8], sigmas=[0.25, 0.35]),
+        ], edges=linear_edges(["extract", "load"])),
+        "train": StageDAG([
+            Stage("prep", mus=[1.5, 2.0, 2.6], sigmas=[0.3, 0.4, 0.5],
+                  family="lognormal"),
+            Stage("fit", mus=[2.4, 3.1, 3.9, 4.8],
+                  sigmas=[0.5, 0.6, 0.7, 0.9], family="lognormal"),
+        ], edges=linear_edges(["prep", "fit"])),
+    }
+    eng = WorkflowEngine(templates, max_live=32, lam_var=0.02, prior_obs=4)
+    rng = np.random.default_rng(7)
+    names = list(templates)
+    with tempfile.TemporaryDirectory() as ckpt:
+        for t in range(ticks):
+            arrivals = [(names[int(rng.integers(2))],
+                         float(rng.uniform(1.5, 4.0)))
+                        for _ in range(int(rng.poisson(4.0)))]
+            out = eng.tick(arrivals)
+            save_pipeline(ckpt, eng.tick_count, eng)
+            if t == ticks // 2:
+                # the crash: drop the engine mid-flight, restore the
+                # manifest — live instances, queue, heads, sims and all
+                print(f"-- kill/restore at tick {out['tick']} "
+                      f"({out['live']} instances in flight) --")
+                eng, _, _ = restore_pipeline(ckpt, templates=templates)
+            if t % 5 == 0:
+                print(f"tick {out['tick']:3d}: live={out['live']} "
+                      f"queue={out['queue']} rows={out['rows']} "
+                      f"launches={out['launches']}")
+    s = eng.telemetry.summary()
+    c = s["counters"]
+    print(f"\nengine summary: {c['retired']} retired / {c['admitted']} "
+          f"admitted, {c['slo_misses']} SLO misses")
+    print(f"join latency p50 {s['join_latency_s']['p50']:.3f}s "
+          f"p99 {s['join_latency_s']['p99']:.3f}s; "
+          f"{c['launches']} stacked launches over {c['ticks']} ticks "
+          f"(rows/launch p50 {s['rows_per_launch']['p50']:.0f})")
 
 
 def main():
@@ -32,7 +90,16 @@ def main():
                     help="sensitivity-sized re-solve cadence")
     ap.add_argument("--refresh-every", type=int, default=1,
                     help="re-solve cadence (cap when adaptive)")
+    ap.add_argument("--engine", action="store_true",
+                    help="demo the continuous-batching WorkflowEngine "
+                         "(admission queue, stacked launches, kill/restore)")
+    ap.add_argument("--ticks", type=int, default=30,
+                    help="engine mode: trace length")
     args = ap.parse_args()
+
+    if args.engine:
+        run_engine_demo(ticks=args.ticks)
+        return
 
     import jax
 

@@ -123,4 +123,33 @@ for path in sorted(glob.glob("BENCH_dag_scale*.json")):
             f"{path}: joint slower than greedy at full scale ({ratio})"
     print(f"{path}: dag_scale acceptance OK (ratio {ratio}, "
           f"scale point {sp['stages']}st x K={sp['channels']})")
+
+# serve_trace carries the PR 9 continuous-batching acceptance surface: the
+# streaming-telemetry percentiles must be populated (p99 join latency,
+# solver-tick wall-clock, rows-per-launch occupancy), batching must beat the
+# per-instance-loop baseline on the engine's own row sets, and the tracked
+# full-scale file must show >=256 concurrent live instances with a >=4x
+# batched-vs-looped margin
+for path in sorted(glob.glob("BENCH_serve_trace*.json")):
+    with open(path) as f:
+        d = json.load(f)
+    lat = d["latency"]
+    assert lat["count"] > 0 and lat["p99"] >= lat["p50"] > 0, f"{path}: {lat}"
+    st = d["solver_tick_us"]
+    assert st["count"] > 0 and st["p99"] >= st["p50"] > 0, f"{path}: {st}"
+    rpl = d["rows_per_launch"]
+    assert rpl["count"] > 0 and rpl["max"] >= 1, f"{path}: {rpl}"
+    ratio = d["batched_vs_looped_ratio"]
+    assert ratio > 1.0, f"{path}: batching no faster than the loop ({ratio})"
+    fams = {t["family"] for t in d["templates"].values()}
+    assert len(fams) >= 3, f"{path}: template families not diverse: {fams}"
+    if not d["smoke"]:
+        assert d["live_instances"]["max"] >= 256, \
+            f"{path}: full scale never held 256 live instances " \
+            f"({d['live_instances']['max']})"
+        assert ratio >= 4.0, \
+            f"{path}: batched solve under 4x vs per-instance loop ({ratio})"
+    print(f"{path}: serve_trace acceptance OK (ratio {ratio}x, "
+          f"live max {d['live_instances']['max']}, "
+          f"p99 join {lat['p99']:.3f}s)")
 PY

@@ -13,8 +13,10 @@ Importing this package registers every rule with the framework registry
   sites (ref, kernels, VJP, autotune, sim ground truth)
 * :mod:`.fidelity`   — RPA070: frontier_moments call sites must thread the
   fidelity knob, not hard-code ``num_t``
+* :mod:`.serving`    — RPA080: no per-instance frontier_moments loops on the
+  serving path (stack rows, one launch per family group)
 
 See docs/INVARIANTS.md for the catalogue with rationale and history.
 """
-from . import (contracts, famcov, family, fidelity, staticargs,  # noqa: F401
-               vjp, vmem)
+from . import (contracts, famcov, family, fidelity, serving,  # noqa: F401
+               staticargs, vjp, vmem)

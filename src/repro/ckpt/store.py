@@ -40,6 +40,20 @@ __all__ = ["save", "restore", "latest_step", "save_pipeline",
 _SEP = "/"
 
 
+def _pipeline_kind(balancer) -> str:
+    """Manifest kind for a pipeline snapshot — dispatch is by state SHAPE.
+
+    "engine" = the continuous-batching WorkflowEngine (restores against
+    code-side templates), "workflow" = the per-stage WorkflowBalancer
+    (restores against its DAG), "balancer" = any single-fleet decider with
+    a ``UncertaintyAwareBalancer``-shaped state_dict (the batcher included).
+    """
+    name = type(balancer).__name__
+    if name == "WorkflowEngine":
+        return "engine"
+    return "workflow" if name == "WorkflowBalancer" else "balancer"
+
+
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -160,10 +174,8 @@ def save_pipeline(directory: str, step: int, balancer, *,
     manifest exists to uphold. Restore with :func:`restore_pipeline`.
     """
     from ..kernels import autotune as _autotune  # lazy: layering
-    kind = ("workflow" if type(balancer).__name__ == "WorkflowBalancer"
-            else "balancer")
     manifest = {
-        "kind": kind,
+        "kind": _pipeline_kind(balancer),
         "balancer": balancer.state_dict(),
         "inflight": inflight,
         "autotune": _autotune.cache_state() if autotune else None,
@@ -173,15 +185,17 @@ def save_pipeline(directory: str, step: int, balancer, *,
 
 
 def restore_pipeline(directory: str, *, dag=None, template=None,
-                     step: Optional[int] = None, autotune: bool = True):
+                     templates=None, step: Optional[int] = None,
+                     autotune: bool = True):
     """Restore a :func:`save_pipeline` manifest.
 
     Returns ``(balancer, inflight, meta)`` (plus the restored ``tree`` in
     ``meta["tree"]`` when a ``template`` is supplied). ``dag`` is required
-    for workflow-kind checkpoints — DAG structure is code-side configuration,
-    only the learned/derived state rides in the manifest. When ``autotune``
-    is True the saved kernel-plan cache is loaded into the process so the
-    next tick runs identical plans (the bitwise half of the parity contract).
+    for workflow-kind checkpoints and ``templates`` (name -> StageDAG) for
+    engine-kind ones — graph structure is code-side configuration, only the
+    learned/derived state rides in the manifest. When ``autotune`` is True
+    the saved kernel-plan cache is loaded into the process so the next tick
+    runs identical plans (the bitwise half of the parity contract).
     """
     from ..sched.balancer import (UncertaintyAwareBalancer,
                                   WorkflowBalancer)  # lazy: layering
@@ -192,7 +206,14 @@ def restore_pipeline(directory: str, *, dag=None, template=None,
         raise ValueError(
             f"checkpoint in {directory} has no 'pipeline' manifest — it was "
             f"written by save(), not save_pipeline()")
-    if manifest["kind"] == "workflow":
+    if manifest["kind"] == "engine":
+        from ..serve.engine import WorkflowEngine  # lazy: layering
+        if templates is None:
+            raise ValueError("engine-kind checkpoint needs the templates= "
+                             "mapping the engine was built against")
+        balancer = WorkflowEngine.from_state_dict(manifest["balancer"],
+                                                  templates)
+    elif manifest["kind"] == "workflow":
         if dag is None:
             raise ValueError("workflow-kind checkpoint needs the dag= the "
                              "balancer was built against")
@@ -249,10 +270,8 @@ class CheckpointManager:
         if step % self.interval != 0:
             return False
         from ..kernels import autotune as _autotune  # lazy: layering
-        kind = ("workflow" if type(balancer).__name__ == "WorkflowBalancer"
-                else "balancer")
         manifest = {
-            "kind": kind,
+            "kind": _pipeline_kind(balancer),
             "balancer": balancer.state_dict(),
             "inflight": inflight,
             "autotune": _autotune.cache_state(),

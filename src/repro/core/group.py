@@ -18,10 +18,44 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .distributions import resolve_family
+from .distributions import defective_moments_np, resolve_family
 from .partitioner import PartitionDecision, optimize_weights, predict_moments
 
 __all__ = ["GroupChoice", "select_channels", "select_channels_exhaustive"]
+
+
+def _expected_attempts(dist_id: str, extra, idx: np.ndarray) -> np.ndarray:
+    """Per-channel expected attempt count of a candidate subset.
+
+    The enlistment overhead (``join_cost``) is paid per ATTEMPT a channel
+    makes, not per channel enlisted: a defective channel with per-attempt
+    failure probability p joins E[attempts] = 1/(1-p) times (dispatch,
+    health-check, re-enlist on every retry). Families without failure
+    physics are always-up — exactly one attempt each, which reduces the
+    failure-aware objective to the classic ``join_cost * k``.
+    """
+    if dist_id != "defective":
+        return np.ones(len(idx), np.float64)
+    p = np.clip(np.asarray(extra[0], np.float64)[idx], 0.0, 1.0 - 1e-9)
+    return 1.0 / (1.0 - p)
+
+
+def _ranking_stats(mus: np.ndarray, sigmas: np.ndarray, dist_id: str,
+                   extra) -> tuple:
+    """Stats the cheap ranking stage scores — retry-inflated for defective.
+
+    A fast-but-flaky channel must rank by what it actually costs: the
+    defective family's moment-matched per-unit ``(a, b)`` (mean inflated by
+    expected retries, variance by retry dispersion) replace the raw
+    ``(mu, sigma)`` so the prefix order the exact stage explores already
+    prices failures. Other families pass through unchanged.
+    """
+    if dist_id != "defective":
+        return mus, sigmas
+    a, b = defective_moments_np(mus, sigmas,
+                                np.asarray(extra[0], np.float64),
+                                np.asarray(extra[1], np.float64))
+    return a, b
 
 
 @dataclass(frozen=True)
@@ -70,19 +104,24 @@ def select_channels(mus: Sequence[float], sigmas: Sequence[float], lam: float = 
     "pieced together" step); it makes the objective non-monotone in K so an
     interior K* exists. ``family`` selects the completion-time family for the
     exact stage (per-channel extras are subset alongside the statistics).
+    Under the defective family the selection is failure-aware: ranking uses
+    retry-inflated stats and the enlistment term charges expected ATTEMPTS
+    (``join_cost * sum 1/(1-p_i)``) instead of treating channels as
+    always-up — a flaky channel must buy its way in past its retries.
     """
     mus = np.asarray(mus, np.float64)
     sigmas = np.asarray(sigmas, np.float64)
     dist_id, extra = resolve_family(family, len(mus))
     extra = np.asarray(extra)
-    order = np.argsort(-_score(mus, sigmas))
+    order = np.argsort(-_score(*_ranking_stats(mus, sigmas, dist_id, extra)))
     max_k = max_k or len(mus)
 
     best: Optional[GroupChoice] = None
     for k in range(1, min(max_k, len(mus)) + 1):
         idx = np.asarray(order[:k])
         dec = _subset_decision(idx, mus, sigmas, dist_id, extra, lam, pgd_steps)
-        obj = dec.mu + lam * dec.var + join_cost * k
+        obj = dec.mu + lam * dec.var \
+            + join_cost * float(_expected_attempts(dist_id, extra, idx).sum())
         if best is None or obj < best.objective:
             best = GroupChoice(indices=idx, decision=dec, objective=float(obj))
     assert best is not None
@@ -105,7 +144,9 @@ def select_channels_exhaustive(mus: Sequence[float], sigmas: Sequence[float],
             idx = np.asarray(combo)
             dec = _subset_decision(idx, mus, sigmas, dist_id, extra, lam,
                                    pgd_steps)
-            obj = dec.mu + lam * dec.var + join_cost * k
+            obj = dec.mu + lam * dec.var \
+                + join_cost * float(_expected_attempts(dist_id, extra,
+                                                       idx).sum())
             if best is None or obj < best.objective:
                 best = GroupChoice(indices=idx, decision=dec, objective=float(obj))
     assert best is not None

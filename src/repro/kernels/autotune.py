@@ -47,11 +47,16 @@ from typing import Dict, Optional, Sequence, Tuple
 
 _log = logging.getLogger(__name__)
 
-__all__ = ["BLOCK_F_CANDIDATES", "vmem_bytes", "pick_block_f", "lookup",
-           "sweep", "clear_cache", "default_cache_path", "cache_state",
-           "load_cache_state"]
+__all__ = ["BLOCK_F_CANDIDATES", "ROW_BUCKETS", "vmem_bytes", "pick_block_f",
+           "bucket_rows", "lookup", "sweep", "clear_cache",
+           "default_cache_path", "cache_state", "load_cache_state"]
 
 BLOCK_F_CANDIDATES: Tuple[int, ...] = (32, 64, 128, 256, 512)
+
+# serving row-count buckets: the continuous-batching engine pads its stacked
+# row axis UP to one of these before the launch (see bucket_rows)
+ROW_BUCKETS: Tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512, 1024, 2048,
+                                4096)
 
 # v5e-class VMEM is ~16 MB/core; leave headroom for double buffering and the
 # compiler's own temporaries
@@ -188,6 +193,25 @@ def pick_block_f(F: int, K: int, num_t: int, backend: str = "xla",
                          stacked)]
     pick = max(feasible) if feasible else min(candidates)
     return max(min(pick, F), 1)
+
+
+def bucket_rows(F: int, buckets: Sequence[int] = ROW_BUCKETS) -> int:
+    """Round a stacked row count UP to the next serving working-set bucket.
+
+    A continuous-batching tick stacks a fluctuating number of
+    (instance, stage) rows per family launch; keying the ``:stk`` cache —
+    and the jit cache above it — at the raw count would re-key (and
+    recompile) nearly every tick as instances admit and retire. Callers pad
+    the row axis to the bucket by repeating a real row and slice the pad
+    rows off after the launch, so every family x fidelity keeps at most one
+    compiled program per bucket. Counts past the last bucket pass through
+    unchanged (that scale should be sharded, not padded further).
+    """
+    F = int(F)
+    for b in buckets:
+        if F <= b:
+            return int(b)
+    return F
 
 
 def _load_json(cache_path: str) -> None:

@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --tiny \
         --batches 50 --requests 64 --policy frontier
+
+``--engine`` switches to the continuous-batching :class:`WorkflowEngine`:
+instead of one replica fleet per batch, every tick admits queued workflow
+instances (two templates, mixed families) and prices ALL their stage splits
+through one stacked launch per family group:
+
+    PYTHONPATH=src python -m repro.launch.serve --engine --batches 40 \
+        --arrival-rate 8 --deadline 4.0
 """
 import argparse
 
@@ -12,6 +20,55 @@ from ..configs import ARCHS, get_config
 from ..models import build_model
 from ..serve import PartitionedBatcher, ReplicaGroup, ServeEngine
 from ..sim.cluster import Channel, ClusterSim
+
+
+def _engine_templates():
+    from ..workflow.dag import Stage, StageDAG, linear_edges
+    pipeline = StageDAG([
+        Stage("prefill", mus=[1.0, 1.4, 1.9], sigmas=[0.2, 0.25, 0.35]),
+        Stage("decode", mus=[2.0, 2.6, 3.3, 4.0],
+              sigmas=[0.3, 0.4, 0.5, 0.6]),
+    ], edges=linear_edges(["prefill", "decode"]))
+    diamond = StageDAG([
+        Stage("shard", mus=[1.2, 1.6, 2.1], sigmas=[0.25, 0.3, 0.4],
+              family="lognormal"),
+        Stage("rank_a", mus=[2.4, 3.0, 3.7], sigmas=[0.5, 0.6, 0.7],
+              family="lognormal"),
+        Stage("rank_b", mus=[2.1, 2.7, 3.4], sigmas=[0.45, 0.55, 0.65],
+              family="lognormal"),
+        Stage("blend", mus=[1.1, 1.5], sigmas=[0.2, 0.3],
+              family="lognormal"),
+    ], edges=[("shard", "rank_a"), ("shard", "rank_b"),
+              ("rank_a", "blend"), ("rank_b", "blend")])
+    return {"pipeline": pipeline, "diamond": diamond}
+
+
+def _run_engine(args) -> None:
+    from ..serve import WorkflowEngine
+    templates = _engine_templates()
+    eng = WorkflowEngine(templates, max_live=args.max_live, lam_var=0.02,
+                         num_t=256, prior_obs=4)
+    rng = np.random.default_rng(0)
+    names = list(templates)
+    for t in range(args.batches):
+        arrivals = []
+        for _ in range(int(rng.poisson(args.arrival_rate))):
+            tpl = names[int(rng.integers(len(names)))]
+            arrivals.append((tpl, args.deadline) if args.deadline else tpl)
+        out = eng.tick(arrivals)
+        if t % 10 == 0:
+            print(f"tick {t:3d} live={out['live']} queue={out['queue']} "
+                  f"rows={out['rows']} launches={out['launches']} "
+                  f"retired={len(out['retired'])}")
+    s = eng.telemetry.summary()
+    c = s["counters"]
+    print(f"engine: {c['ticks']} ticks, {c['retired']}/{c['admitted']} "
+          f"retired, {c['slo_misses']} SLO misses, "
+          f"{c['launches']} launches "
+          f"(rows/launch p50 {s['rows_per_launch']['p50']:.0f})")
+    print(f"join latency p50 {s['join_latency_s']['p50']:.3f}s "
+          f"p99 {s['join_latency_s']['p99']:.3f}s; "
+          f"solver tick p50 {s['solver_tick_us']['p50']:.0f}us")
 
 
 def main() -> None:
@@ -41,7 +98,23 @@ def main() -> None:
     ap.add_argument("--refresh-every", type=int, default=1,
                     help="re-solve cadence cap (the adaptive mode "
                          "stretches toward this as estimates firm up)")
+    # continuous-batching engine mode (PR 9)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve workflow instances through the "
+                         "continuous-batching WorkflowEngine instead of "
+                         "the per-batch PartitionedBatcher")
+    ap.add_argument("--max-live", type=int, default=64,
+                    help="engine mode: live-instance capacity")
+    ap.add_argument("--arrival-rate", type=float, default=6.0,
+                    help="engine mode: mean Poisson arrivals per tick")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="engine mode: SLO deadline (sim seconds) attached "
+                         "to every request")
     args = ap.parse_args()
+
+    if args.engine:
+        _run_engine(args)
+        return
 
     cfg = get_config(args.arch)
     if args.tiny:

@@ -45,7 +45,8 @@ from ..core import (NIGState, get_family, nig_init, nig_point_estimates,
                     optimize_2ch, optimize_weights, predict_moments,
                     fit_selected_family, score_families)
 
-__all__ = ["integerize", "UncertaintyAwareBalancer", "WorkflowBalancer"]
+__all__ = ["integerize", "UncertaintyAwareBalancer", "WorkflowBalancer",
+           "InstanceHeads"]
 
 
 def _cadence_from_fragility(rel_fragility: float, cap: int,
@@ -946,3 +947,78 @@ class WorkflowBalancer:
                                                   {}).items()}
         b._solve_fams = dict(d.get("solve_fams", {}))
         return b
+
+
+class InstanceHeads:
+    """Per-instance estimation heads for the continuous-batching engine.
+
+    The serving engine prices every live workflow *instance* from its own
+    posterior: two instances of the same template admitted at different
+    times have seen different service, so their rows of the shared stacked
+    launch deserve different ``(mus, sigmas)``. This bank keeps one
+    PROTOTYPE head per ``"template/stage"`` key — the fleet-wide posterior
+    that keeps learning across all traffic — and forks it at admission into
+    a private per-instance copy (a ``state_dict`` round-trip, so the fork
+    is an exact snapshot). Observations feed BOTH heads: the instance's
+    (its rows drift with its own service history) and the prototype (so
+    the next admission starts from everything the fleet has seen).
+
+    Heads are policy-less :class:`UncertaintyAwareBalancer` instances
+    (``explore=0``) used purely for their posteriors and family state —
+    their solve path is never called; the engine's batched tick is the
+    solver.
+    """
+
+    def __init__(self, prototypes: dict):
+        self.prototypes = dict(prototypes)
+        self._bank: dict = {}
+
+    # ------------------------------------------------------------ lifecycle
+    def admit(self, iid: int, keys) -> None:
+        """Fork the prototype of every ``key`` for instance ``iid``."""
+        iid = int(iid)
+        if iid in self._bank:
+            raise ValueError(f"instance {iid} already admitted")
+        bank = {}
+        for key in keys:
+            proto = self.prototypes[key]
+            bank[key] = UncertaintyAwareBalancer.from_state_dict(
+                proto.state_dict())
+        self._bank[iid] = bank
+
+    def retire(self, iid: int) -> None:
+        self._bank.pop(int(iid), None)
+
+    @property
+    def live(self):
+        return tuple(sorted(self._bank))
+
+    # ------------------------------------------------------------ accessors
+    def observe(self, iid: int, key: str, durations, work) -> None:
+        """One stage execution's feedback: instance head AND prototype."""
+        self._bank[int(iid)][key].observe(durations, work)
+        self.prototypes[key].observe(durations, work)
+
+    def estimates(self, iid: int, key: str):
+        return self._bank[int(iid)][key].estimates()
+
+    def family(self, iid: int, key: str):
+        return self._bank[int(iid)][key].selected_family
+
+    # ------------------------------------------------------------ state
+    def state_dict(self) -> dict:
+        return {
+            "prototypes": {k: p.state_dict()
+                           for k, p in self.prototypes.items()},
+            "bank": {str(iid): {k: h.state_dict() for k, h in heads.items()}
+                     for iid, heads in self._bank.items()},
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "InstanceHeads":
+        obj = cls({k: UncertaintyAwareBalancer.from_state_dict(sd)
+                   for k, sd in d["prototypes"].items()})
+        obj._bank = {int(iid): {k: UncertaintyAwareBalancer.from_state_dict(sd)
+                                for k, sd in heads.items()}
+                     for iid, heads in d.get("bank", {}).items()}
+        return obj

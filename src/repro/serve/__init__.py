@@ -1,6 +1,9 @@
-"""Serving substrate: engine + the paper-partitioned request batcher."""
-from .engine import (PartitionedBatcher, PipelineBatcher, ReplicaGroup,
-                     ServeEngine)
+"""Serving substrate: engine, the paper-partitioned request batcher, and
+the continuous-batching workflow engine."""
+from .engine import (PartitionedBatcher, ReplicaGroup, ServeEngine,
+                     WorkflowEngine, row_pgd_step)
+from .telemetry import ServeTelemetry, StreamingStat
 
-__all__ = ["PartitionedBatcher", "PipelineBatcher", "ReplicaGroup",
-           "ServeEngine"]
+__all__ = ["PartitionedBatcher", "ReplicaGroup", "ServeEngine",
+           "WorkflowEngine", "row_pgd_step", "ServeTelemetry",
+           "StreamingStat"]

@@ -30,9 +30,9 @@ import numpy as np
 
 from ..ckpt.store import restore_pipeline, save_pipeline
 from ..sched.balancer import UncertaintyAwareBalancer
-from .cluster import ClusterSim
+from .cluster import ClusterSim, WorkflowSim
 
-__all__ = ["ChaosResult", "run_chaos_trace"]
+__all__ = ["ChaosResult", "run_chaos_trace", "run_workflow_chaos_trace"]
 
 
 @dataclass
@@ -138,3 +138,97 @@ def run_chaos_trace(num_channels: int = 6, ticks: int = 24,
         ticks=ticks, kills=kills, parity_checks=parity, joins=joins,
         events=events,
         final_failed=[i for i, c in enumerate(sim.channels) if c.failed])
+
+
+def _sync_workflow_failures(bal, sim: WorkflowSim) -> None:
+    """Propagate the sim's channel health into the workflow balancer —
+    the heartbeat a real scheduler gets, stage-addressed."""
+    failed = bal.failed_channels()
+    for name, stage_sim in sim.stage_sims.items():
+        known = set(failed.get(name, ()))
+        for i, c in enumerate(stage_sim.channels):
+            if c.failed and i not in known:
+                bal.handle_failure(name, i)
+            elif not c.failed and i in known:
+                bal.handle_recovery(name, i)
+
+
+def run_workflow_chaos_trace(dag, ticks: int = 12, kill_every: int = 4,
+                             churn=None, seed: int = 0, family="normal",
+                             lam_var: float = 0.0,
+                             ckpt_dir: Optional[str] = None,
+                             verify_parity: bool = True) -> ChaosResult:
+    """The DAG twin of :func:`run_chaos_trace`: a :class:`WorkflowBalancer`
+    driving a :class:`WorkflowSim` through stage-addressed churn schedules
+    (``WorkflowSim.schedule_churn`` — fail/throttle/recover/set_load firing
+    before the step's draws) and kill/restore cycles through the
+    workflow-kind checkpoint manifest.
+
+    ``churn``: iterable of ``(step, action, stage, idx, value)`` tuples
+    (stage None broadcasts set_load workflow-wide). Joins are per-tick DAG
+    makespans. Parity compares the restored replica's next full weights
+    dict bitwise against the would-be survivor's.
+    """
+    from ..sched.balancer import WorkflowBalancer  # lazy: layering
+
+    own_dir = ckpt_dir is None
+    if own_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_chaos_wf_")
+        ckpt_dir = tmp.name
+    sim = WorkflowSim.from_dag(dag, seed=seed)
+    for ev in (churn or ()):
+        step, action, stage, idx, value = (tuple(ev) + (None, None, None))[:5]
+        sim.schedule_churn(step, action, stage=stage, idx=idx, value=value)
+    bal = WorkflowBalancer(dag, lam_var=lam_var, family=family,
+                           pgd_steps=12, restarts=0, num_t=128)
+    joins: List[float] = []
+    events: List[Tuple[int, str, str]] = []
+    kills = parity = 0
+
+    def _decide_wf(b, s):
+        _sync_workflow_failures(b, s)
+        return b.weights()
+
+    try:
+        for t in range(1, ticks + 1):
+            ws = _decide_wf(bal, sim)
+            makespan, _, durs = sim.run_dag_step(dag, ws)
+            bal.observe(durs, ws)
+            joins.append(float(makespan))
+            save_pipeline(ckpt_dir, t, bal,
+                          inflight={"sim": sim.state_dict(), "tick": t})
+            if kill_every and t % kill_every == 0 and t < ticks:
+                if verify_parity:
+                    survivor = WorkflowBalancer.from_state_dict(
+                        bal.state_dict(), dag)
+                    sim_sv = WorkflowSim.from_state_dict(sim.state_dict())
+                    w_expect = _decide_wf(survivor, sim_sv)
+                bal2, inflight, _ = restore_pipeline(ckpt_dir, dag=dag)
+                sim2 = WorkflowSim.from_state_dict(inflight["sim"])
+                if verify_parity:
+                    w_got = _decide_wf(
+                        WorkflowBalancer.from_state_dict(bal2.state_dict(),
+                                                         dag),
+                        WorkflowSim.from_state_dict(sim2.state_dict()))
+                    for name in dag.names:
+                        if not np.array_equal(np.asarray(w_expect[name]),
+                                              np.asarray(w_got[name])):
+                            raise AssertionError(
+                                f"workflow kill/restore parity broken at "
+                                f"tick {t}, stage {name!r}: survivor "
+                                f"{w_expect[name]} vs replica {w_got[name]}")
+                    parity += 1
+                bal, sim = bal2, sim2
+                kills += 1
+                events.append((t, "kill_restore",
+                               f"restored step {t} from {ckpt_dir}"))
+    finally:
+        if own_dir:
+            tmp.cleanup()
+    final_failed = sorted({(name, i)
+                           for name, s in sim.stage_sims.items()
+                           for i, c in enumerate(s.channels) if c.failed})
+    return ChaosResult(
+        ticks=ticks, kills=kills, parity_checks=parity, joins=joins,
+        events=events,
+        final_failed=[f"{name}:{i}" for name, i in final_failed])

@@ -298,6 +298,9 @@ class WorkflowSim:
 
     stage_sims: dict
     seed: int = 0
+    step_count: int = 0
+    # step -> [(action, stage, idx, value)] — the DAG twin of ClusterSim.churn
+    churn: dict = field(default_factory=dict)
 
     @classmethod
     def from_dag(cls, dag, seed: int = 0) -> "WorkflowSim":
@@ -325,6 +328,65 @@ class WorkflowSim:
             sims[s.name] = ClusterSim(channels=chans, seed=seed + 1 + i)
         return cls(stage_sims=sims, seed=seed)
 
+    # ------------------------------------------------------------- churn
+    def schedule_churn(self, step: int, action: str,
+                       stage: Optional[str] = None, idx: Optional[int] = None,
+                       value: Optional[float] = None):
+        """Queue a churn event for the ``step``-th future :meth:`tick`
+        (1-based — :meth:`run_dag_step` and the serving engine both tick
+        once per step), mirroring :meth:`ClusterSim.schedule_churn` with a
+        stage address in front: ``"fail"`` / ``"recover"`` / ``"throttle"``
+        hit channel ``idx`` of ``stage``'s fleet; ``"set_load"`` switches
+        ``stage``'s congestion regime, or — with ``stage=None`` — every
+        stage fleet at once (workflow-wide regime switches, the bursty
+        serving benchmark's knob). Events fire BEFORE the step's draws,
+        exactly like the single-fleet schedule.
+        """
+        if action not in _CHURN_ACTIONS:
+            raise ValueError(f"churn action must be one of {_CHURN_ACTIONS}, "
+                             f"got {action!r}")
+        if stage is not None and stage not in self.stage_sims:
+            raise ValueError(f"unknown stage {stage!r} "
+                             f"(stages: {sorted(self.stage_sims)})")
+        if action in ("fail", "recover", "throttle"):
+            if stage is None:
+                raise ValueError(f"churn action {action!r} needs a stage")
+            if idx is None:
+                raise ValueError(f"churn action {action!r} needs a "
+                                 f"channel idx")
+        if action in ("throttle", "set_load") and value is None:
+            raise ValueError(f"churn action {action!r} needs a value")
+        self.churn.setdefault(int(step), []).append((action, stage, idx,
+                                                     value))
+
+    def tick(self):
+        """Advance the workflow clock one step and fire due churn events
+        before the step's draws. Called at the top of :meth:`run_dag_step`;
+        the serving engine calls it directly (one tick per engine tick even
+        when many instances execute within it)."""
+        self.step_count += 1
+        for action, stage, idx, value in self.churn.pop(self.step_count, ()):
+            targets = ([self.stage_sims[stage]] if stage is not None
+                       else list(self.stage_sims.values()))
+            for sim in targets:
+                if action == "fail":
+                    sim.inject_failure(idx)
+                elif action == "recover":
+                    sim.recover(idx)
+                elif action == "throttle":
+                    sim.inject_slowdown(idx, value)
+                else:
+                    sim.set_load(value)
+
+    def set_load(self, factor: float, stage: Optional[str] = None):
+        """Immediate congestion-regime switch on one stage fleet or, with
+        ``stage=None``, on every stage fleet (the scheduled counterpart is
+        ``schedule_churn(step, "set_load", value=...)``)."""
+        targets = ([self.stage_sims[stage]] if stage is not None
+                   else self.stage_sims.values())
+        for sim in targets:
+            sim.set_load(factor)
+
     def run_dag_step(self, dag, weights: dict,
                      rng: Union[None, int, np.random.Generator] = None):
         """Execute one workflow instance.
@@ -335,6 +397,7 @@ class WorkflowSim:
         busy times. The invariant ``completion[v] >= completion[u]`` holds
         for every edge (u, v) by construction (release = max over preds).
         """
+        self.tick()
         r = (np.random.default_rng(rng) if isinstance(rng, int) else rng)
         completions, durations = {}, {}
         for name in dag.topo_order:
@@ -346,3 +409,28 @@ class WorkflowSim:
             durations[name] = durs
         makespan = max(completions[n] for n in dag.sinks)
         return makespan, completions, durations
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Full workflow-world snapshot: every stage fleet's
+        :meth:`ClusterSim.state_dict` (rng streams included) plus the
+        workflow clock and pending churn queue — the sim side of the serving
+        engine's kill/restore tick-parity contract."""
+        return {
+            "seed": self.seed,
+            "step_count": self.step_count,
+            "churn": {str(k): [list(e) for e in v]
+                      for k, v in self.churn.items()},
+            "stages": {name: sim.state_dict()
+                       for name, sim in self.stage_sims.items()},
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "WorkflowSim":
+        return cls(
+            stage_sims={name: ClusterSim.from_state_dict(sd)
+                        for name, sd in d["stages"].items()},
+            seed=d.get("seed", 0),
+            step_count=d.get("step_count", 0),
+            churn={int(k): [tuple(e) for e in v]
+                   for k, v in d.get("churn", {}).items()})

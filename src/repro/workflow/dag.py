@@ -237,8 +237,8 @@ class StageDAG:
                    max_depth: int = MAX_DEPTH_DEFAULT) -> "StageDAG":
         """Structure-only DAG (unit placeholder statistics): validation,
         topological order and precedence for callers that bring their own
-        per-stage execution (e.g. ``serve.PipelineBatcher``, whose stages
-        learn statistics online)."""
+        per-stage execution (e.g. the serving tier, whose stages learn
+        statistics online)."""
         stages = [Stage(n, np.ones(1), np.full(1, 0.1)) for n in names]
         return cls(stages, edges, max_depth=max_depth)
 

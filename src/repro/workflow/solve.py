@@ -81,7 +81,8 @@ from ..core.partitioner import optimize_weights
 from ..kernels import autotune, ops
 from .dag import StageDAG, compose_structure
 
-__all__ = ["DAGDecision", "solve_dag", "solve_dag_greedy", "evaluate_dag"]
+__all__ = ["DAGDecision", "solve_dag", "solve_dag_greedy", "evaluate_dag",
+           "stack_rows"]
 
 # default coarse rung of the fidelity ladder: presolve + triage quadrature
 _COARSE_NUM_T = 128
@@ -130,18 +131,39 @@ class _Group:
     extra: np.ndarray               # (E, n, Kmax)
 
 
-def _stage_groups(dag: StageDAG) -> Tuple[List[_Group], np.ndarray, int]:
-    """Group stages by family; returns (groups, mask (S, Kmax), Kmax)."""
-    kmax = max(s.k for s in dag.stages)
-    S = len(dag.stages)
-    mask = np.zeros((S, kmax), np.float32)
+def stack_rows(rows, kmax: Optional[int] = None
+               ) -> Tuple[List[_Group], np.ndarray, int]:
+    """Variable-shape row-block bookkeeping for stacked family launches.
+
+    ``rows`` is any sequence of ``(mus, sigmas, family)`` triples — a DAG's
+    stages, or a serving engine's live (instance, remaining-stage) pairs.
+    Channel counts may differ per row; every row zero-pads its channel axis
+    to ``kmax`` (a ``w=0`` channel is a point mass that drops out of the
+    survival product, so padding is EXACT — the returned mask keeps padded
+    weights at zero through the simplex projection). Rows group by lowered
+    ``dist_id`` (a static kernel specialization) in first-appearance order,
+    so one ``ops.frontier_moments*`` launch per group serves every row in
+    it; ``group.idx`` indexes back into ``rows``.
+
+    Pass ``kmax`` to pin the channel axis across calls: a serving tick
+    whose live set changes shape every tick would otherwise re-jit per
+    distinct max-K. Returns ``(groups, mask (N, kmax), kmax)``.
+    """
+    rows = list(rows)
+    ks = [int(np.asarray(m).shape[0]) for m, _, _ in rows]
+    kmax = max(ks) if kmax is None else int(kmax)
+    if ks and max(ks) > kmax:
+        raise ValueError(f"row channel count {max(ks)} exceeds the pinned "
+                         f"kmax={kmax}")
+    N = len(rows)
+    mask = np.zeros((N, kmax), np.float32)
     by_dist: Dict[str, List[int]] = {}
     lowered = []
-    for i, s in enumerate(dag.stages):
-        dist_id, extra = resolve_family(s.family, s.k)
+    for i, (mus_i, _, family) in enumerate(rows):
+        dist_id, extra = resolve_family(family, ks[i])
         lowered.append((dist_id, np.asarray(extra, np.float32)))
         by_dist.setdefault(dist_id, []).append(i)
-        mask[i, :s.k] = 1.0
+        mask[i, :ks[i]] = 1.0
     groups = []
     for dist_id, idx in by_dist.items():
         n = len(idx)
@@ -150,12 +172,17 @@ def _stage_groups(dag: StageDAG) -> Tuple[List[_Group], np.ndarray, int]:
         sgs = np.zeros((n, kmax), np.float32)
         ex = np.zeros((E, n, kmax), np.float32)
         for j, i in enumerate(idx):
-            s = dag.stages[i]
-            mus[j, :s.k] = s.mus
-            sgs[j, :s.k] = s.sigmas
-            ex[:, j, :s.k] = lowered[i][1]
+            k = ks[i]
+            mus[j, :k] = rows[i][0]
+            sgs[j, :k] = rows[i][1]
+            ex[:, j, :k] = lowered[i][1]
         groups.append(_Group(dist_id, tuple(idx), mus, sgs, ex))
     return groups, mask, kmax
+
+
+def _stage_groups(dag: StageDAG) -> Tuple[List[_Group], np.ndarray, int]:
+    """Group stages by family; returns (groups, mask (S, Kmax), Kmax)."""
+    return stack_rows([(s.mus, s.sigmas, s.family) for s in dag.stages])
 
 
 def _project_simplex_masked(v, mask):

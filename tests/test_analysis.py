@@ -430,6 +430,90 @@ class TestFidelityKnob:
         assert fs == []
 
 
+def _lint_serve(tmp_path, source, select=("RPA080",), subdir="serve"):
+    """Write one fixture under ``<tmp>/<subdir>/`` and lint it — RPA080
+    only patrols files whose path contains a ``serve`` directory."""
+    d = tmp_path / subdir
+    d.mkdir()
+    p = d / "engine_fx.py"
+    p.write_text(textwrap.dedent(source))
+    return run_paths([str(p)], select=list(select))
+
+
+_PER_INSTANCE_LOOP = """
+    from repro.kernels import ops
+
+    def tick(instances, num_t):
+        out = []
+        for inst in instances:
+            out.append(ops.frontier_moments_with_grads(
+                inst.W, inst.mus, inst.sigmas, num_t=num_t,
+                family=inst.family))
+        return out
+    """
+
+
+class TestServingBatchDiscipline:
+    def test_rpa080_fires_on_per_instance_loop(self, tmp_path):
+        fs = _lint_serve(tmp_path, _PER_INSTANCE_LOOP)
+        assert _codes(fs) == ["RPA080"]
+
+    def test_rpa080_fires_in_comprehension(self, tmp_path):
+        fs = _lint_serve(tmp_path, """
+            from repro.kernels import ops
+
+            def tick(instances, num_t):
+                return [ops.frontier_moments(i.W, i.mus, i.sigmas,
+                                             num_t=num_t, family=i.family)
+                        for i in instances]
+            """)
+        assert _codes(fs) == ["RPA080"]
+
+    def test_rpa080_silent_outside_serve_dir(self, tmp_path):
+        # the identical per-instance loop is legal off the serving path
+        # (e.g. a benchmark's documented looped baseline)
+        fs = _lint(tmp_path, _PER_INSTANCE_LOOP, select=["RPA080"])
+        assert fs == []
+
+    def test_rpa080_silent_for_stacked_launch(self, tmp_path):
+        # the batched idiom: the per-FAMILY-GROUP loop calls the stacked
+        # helper, and the kernel entry point sits at top level
+        fs = _lint_serve(tmp_path, """
+            from repro.kernels import ops
+
+            def row_step(W, mus, sigmas, fam, num_t):
+                return ops.frontier_moments_with_grads(
+                    W, mus, sigmas, num_t=num_t, family=fam)
+
+            def tick(groups, num_t):
+                return [row_step(g.W, g.mus, g.sigmas, g.fam, num_t)
+                        for g in groups]
+            """)
+        assert fs == []
+
+    def test_rpa080_tests_dir_exempt(self, tmp_path):
+        d = tmp_path / "serve" / "tests"
+        d.mkdir(parents=True)
+        p = d / "test_fx.py"
+        p.write_text(textwrap.dedent(_PER_INSTANCE_LOOP))
+        assert run_paths([str(p)], select=["RPA080"]) == []
+
+    def test_rpa080_pragma_suppresses(self, tmp_path):
+        fs = _lint_serve(tmp_path, """
+            from repro.kernels import ops
+
+            def tick(instances, num_t):
+                out = []
+                for inst in instances:
+                    # repro: allow[RPA080] documented migration shim
+                    out.append(ops.frontier_moments(
+                        inst.W, inst.mus, inst.sigmas, num_t=num_t,
+                        family=inst.family))
+                return out
+            """)
+        assert fs == []
+
+
 # ---------------------------------------------------------------------------
 # the gate: the real tree lints clean
 # ---------------------------------------------------------------------------

@@ -203,3 +203,50 @@ class TestGroupSelection:
         cheap = select_channels(mus, sigmas, join_cost=0.0, pgd_steps=60)
         costly = select_channels(mus, sigmas, join_cost=5.0, pgd_steps=60)
         assert len(costly.indices) <= len(cheap.indices)
+
+    def test_failure_aware_admission_excludes_flaky_fast_channel(self):
+        """Under the defective family the enlistment term charges expected
+        ATTEMPTS (join_cost / (1 - p)): the fastest channel buys its way in
+        while reliable and is priced out once flaky."""
+        from repro.core.distributions import Defective
+
+        mus = [10.0, 12.0, 12.5, 13.0]      # channel 0 fastest...
+        sigmas = [1.0, 1.2, 1.2, 1.3]
+        reliable = select_channels(
+            mus, sigmas, lam=0.05, join_cost=1.0, pgd_steps=60,
+            family=Defective(p=[0.0, 0.0, 0.0, 0.0]))
+        flaky = select_channels(
+            mus, sigmas, lam=0.05, join_cost=1.0, pgd_steps=60,
+            family=Defective(p=[0.6, 0.0, 0.0, 0.0]))   # ...but flaky
+        assert 0 in reliable.indices.tolist()
+        assert 0 not in flaky.indices.tolist()
+        # retries also inflate the objective the selection reports
+        assert flaky.objective > reliable.objective
+
+    def test_failure_aware_greedy_matches_exhaustive(self):
+        from repro.core.distributions import Defective
+
+        fam = Defective(p=[0.5, 0.0, 0.3, 0.0])
+        mus = [11.0, 14.0, 12.0, 16.0]
+        sigmas = [1.0, 1.5, 1.1, 1.8]
+        g = select_channels(mus, sigmas, lam=0.05, join_cost=0.8,
+                            pgd_steps=60, family=fam)
+        e = select_channels_exhaustive(mus, sigmas, lam=0.05, join_cost=0.8,
+                                       pgd_steps=60, family=fam)
+        assert sorted(g.indices.tolist()) == sorted(e.indices.tolist())
+        assert g.objective == pytest.approx(e.objective, rel=1e-6)
+
+    def test_always_up_families_charge_plain_join_cost(self):
+        """Attempt pricing reduces to the classic join_cost * k for families
+        without failure physics, and a p=0 defective fleet matches it."""
+        from repro.core.distributions import Defective
+
+        mus = [20.0, 24.0, 28.0]
+        sigmas = [2.0, 2.4, 2.8]
+        normal = select_channels(mus, sigmas, lam=0.05, join_cost=1.5,
+                                 pgd_steps=60)
+        zero_p = select_channels(mus, sigmas, lam=0.05, join_cost=1.5,
+                                 pgd_steps=60, family=Defective(p=0.0))
+        assert sorted(normal.indices.tolist()) == \
+            sorted(zero_p.indices.tolist())
+        assert normal.objective == pytest.approx(zero_p.objective, rel=1e-5)

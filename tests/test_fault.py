@@ -31,6 +31,7 @@ from repro.sched import StragglerPolicy, UncertaintyAwareBalancer
 from repro.sched.balancer import WorkflowBalancer
 from repro.sim import Channel, ClusterSim
 from repro.sim.chaos import run_chaos_trace
+from repro.sim.cluster import WorkflowSim
 from repro.workflow.dag import Stage, StageDAG, linear_edges
 
 pytestmark = pytest.mark.fault
@@ -52,6 +53,23 @@ def _dag(k=3):
     stages = [Stage("a", rng.uniform(10, 30, k), rng.uniform(1, 4, k)),
               Stage("b", rng.uniform(10, 30, k), rng.uniform(1, 4, k))]
     return StageDAG(stages, linear_edges(["a", "b"]))
+
+
+def _engine_templates():
+    """Two mixed-family templates for the serving-engine fault tests."""
+    wf = StageDAG([
+        Stage("a", mus=[1.0, 1.5], sigmas=[0.2, 0.3]),
+        Stage("b", mus=[2.0, 2.6, 3.2], sigmas=[0.3, 0.4, 0.5]),
+    ], edges=linear_edges(["a", "b"]))
+    fan = StageDAG([
+        Stage("src", mus=[1.2, 1.7], sigmas=[0.25, 0.3],
+              family="lognormal"),
+        Stage("left", mus=[2.1, 2.8], sigmas=[0.4, 0.5],
+              family="lognormal"),
+        Stage("right", mus=[1.9, 2.5], sigmas=[0.35, 0.45],
+              family="lognormal"),
+    ], edges=[("src", "left"), ("src", "right")])
+    return {"wf": wf, "fan": fan}
 
 
 def _seeded_workflow_balancer(dag, seed=0, **kw):
@@ -119,25 +137,91 @@ class TestKillRestoreParity:
         assert join_sv == join_rp
         np.testing.assert_array_equal(counts_sv, counts_rp)
 
-    def test_pipeline_batcher_state_round_trip(self):
-        from repro.serve.engine import (PartitionedBatcher, PipelineBatcher,
-                                        ReplicaGroup)
+    def test_workflow_engine_kill_restore_tick_parity(self, tmp_path):
+        """Engine-level kill/restore through the PR 7 manifest with
+        instances IN FLIGHT: the restored engine's next tick — admissions,
+        stacked solves, per-instance splits, retirements — is bitwise
+        identical to the survivor's."""
+        from repro.serve import WorkflowEngine
 
-        mk = lambda seed: PartitionedBatcher(
-            [ReplicaGroup(name=f"g{i}") for i in range(2)], seed=seed)
-        pl = PipelineBatcher({"enc": mk(1), "dec": mk(2)})
-        prompts = np.zeros((8, 4), np.int32)
-        pl.run_batch(prompts)
-        state = pl.state_dict()
-        pl2 = PipelineBatcher({"enc": mk(1), "dec": mk(2)})
-        pl2.load_state_dict(state)
-        end1, counts1, _ = pl.run_batch(prompts)
-        end2, counts2, _ = pl2.run_batch(prompts)
-        assert end1 == end2
-        for n in counts1:
-            np.testing.assert_array_equal(counts1[n], counts2[n])
+        templates = _engine_templates()
+        eng = WorkflowEngine(templates, max_live=4, settle_steps=2,
+                             num_t=128, seed=7)
+        for i in range(6):   # more than max_live: the queue rides too
+            eng.submit("wf" if i % 2 else "fan", deadline=6.0)
+        eng.tick()
+        assert eng.live_count > 0          # mid-flight, not a cold engine
+        assert eng.queue_depth > 0         # backpressured requests ride too
+        save_pipeline(str(tmp_path), eng.tick_count, eng)
+        survivor = eng.tick()              # the would-be survivor's tick
+        eng2, _, _ = restore_pipeline(str(tmp_path), templates=templates)
+        replica = eng2.tick()
+        assert survivor == replica
+        for iid, inst in eng._live.items():
+            for name, w in inst.weights.items():
+                np.testing.assert_array_equal(
+                    w, eng2._live[iid].weights[name])
+
+    def test_engine_kind_checkpoint_needs_templates(self, tmp_path):
+        from repro.serve import WorkflowEngine
+
+        eng = WorkflowEngine(_engine_templates(), num_t=128)
+        save_pipeline(str(tmp_path), 1, eng)
+        with pytest.raises(ValueError, match="templates"):
+            restore_pipeline(str(tmp_path))
+
+    def test_workflow_sim_churn_schedule(self):
+        dag = StageDAG([
+            Stage("s1", mus=[10.0, 14.0], sigmas=[1.0, 1.5]),
+            Stage("s2", mus=[12.0, 16.0], sigmas=[1.2, 1.8]),
+        ], edges=linear_edges(["s1", "s2"]))
+        sim = WorkflowSim.from_dag(dag, seed=0)
+        sim.schedule_churn(2, "fail", stage="s1", idx=0)
+        sim.schedule_churn(2, "set_load", value=1.5)    # stage=None: all
+        sim.schedule_churn(3, "recover", stage="s1", idx=0)
+        sim.tick()
+        assert not sim.stage_sims["s1"].channels[0].failed
+        sim.tick()          # step 2: the fail and the broadcast load fire
+        assert sim.stage_sims["s1"].channels[0].failed
+        assert all(s.load_factor == 1.5 for s in sim.stage_sims.values())
+        sim.tick()
+        assert not sim.stage_sims["s1"].channels[0].failed
+        with pytest.raises(ValueError, match="action"):
+            sim.schedule_churn(1, "explode")
         with pytest.raises(ValueError, match="stage"):
-            PipelineBatcher({"enc": mk(1)}).load_state_dict(state)
+            sim.schedule_churn(1, "fail", idx=0)        # fail needs a stage
+        with pytest.raises(ValueError, match="value"):
+            sim.schedule_churn(1, "throttle", stage="s1", idx=0)
+
+    def test_workflow_sim_state_round_trip_with_pending_churn(self):
+        dag = StageDAG([Stage("s", mus=[10.0, 14.0], sigmas=[1.0, 1.5])])
+        sim = WorkflowSim.from_dag(dag, seed=3)
+        sim.schedule_churn(2, "throttle", stage="s", idx=1, value=2.0)
+        sim.tick()
+        sim2 = WorkflowSim.from_state_dict(sim.state_dict())
+        m1, _, d1 = sim.run_dag_step(dag, {"s": np.array([0.6, 0.4])})
+        m2, _, d2 = sim2.run_dag_step(dag, {"s": np.array([0.6, 0.4])})
+        assert m1 == m2                    # rng stream AND churn both rode
+        np.testing.assert_array_equal(d1["s"], d2["s"])
+        # the pending throttle fired at step 2 in BOTH worlds (mu doubled)
+        assert sim.stage_sims["s"].channels[1].mu == pytest.approx(28.0)
+        assert sim2.stage_sims["s"].channels[1].mu == pytest.approx(28.0)
+
+    def test_workflow_chaos_trace_parity(self):
+        from repro.sim.chaos import run_workflow_chaos_trace
+
+        dag = StageDAG([
+            Stage("s1", mus=[10.0, 14.0, 18.0], sigmas=[1.0, 1.5, 2.0]),
+            Stage("s2", mus=[12.0, 16.0], sigmas=[1.2, 1.8]),
+        ], edges=linear_edges(["s1", "s2"]))
+        res = run_workflow_chaos_trace(
+            dag, ticks=6, kill_every=3, seed=1,
+            churn=[(2, "fail", "s1", 0, None),
+                   (5, "recover", "s1", 0, None)],
+            verify_parity=True)
+        assert res.kills == 1 and res.parity_checks == 1
+        assert len(res.joins) == 6 and all(j > 0 for j in res.joins)
+        assert res.final_failed == []      # recovered before the end
 
     def test_chaos_trace_verifies_parity_continuously(self):
         res = run_chaos_trace(num_channels=5, ticks=9, kill_every=3,

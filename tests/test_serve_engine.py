@@ -1,0 +1,186 @@
+"""Continuous-batching serving engine (PR 9 acceptance surface).
+
+Anchors:
+  * mixed-family instance batching — one tick over templates spanning three
+    completion-time families issues AT MOST ONE stacked
+    ``frontier_moments_with_grads`` launch per family group (spied at the
+    ops entry point), never one per instance;
+  * per-row moment parity — every engine row's priced ``(mu, var)`` matches
+    a solo unpadded ``ops.frontier_moments`` solve of the same instance
+    split at 1e-3 (the kmax/bucket padding is exact: a zero-weight channel
+    is a point mass at zero and the pad rows are sliced off);
+  * admission-queue backpressure, SLO-driven per-row risk weights, and the
+    dirty-instance protocol (settled instances contribute zero rows).
+"""
+import numpy as np
+import pytest
+
+from repro.core.distributions import Drift
+from repro.kernels import ops
+from repro.serve import WorkflowEngine
+from repro.workflow.dag import Stage, StageDAG, linear_edges
+
+
+def _templates():
+    """Three tiny templates across three completion-time families."""
+    normal = StageDAG([
+        Stage("a", mus=[1.0, 1.5], sigmas=[0.2, 0.3]),
+        Stage("b", mus=[2.0, 2.5, 3.0], sigmas=[0.3, 0.4, 0.5]),
+    ], edges=linear_edges(["a", "b"]))
+    logn = StageDAG([
+        Stage("x", mus=[1.2, 1.8], sigmas=[0.25, 0.35],
+              family="lognormal"),
+    ])
+    drift = StageDAG([
+        Stage("r", mus=[1.5, 2.0, 2.4], sigmas=[0.3, 0.35, 0.4],
+              family=Drift(0.3)),
+    ])
+    return {"normal_wf": normal, "logn_wf": logn, "drift_wf": drift}
+
+
+def _engine(**kw):
+    kw.setdefault("max_live", 8)
+    kw.setdefault("settle_steps", 2)
+    kw.setdefault("num_t", 128)
+    kw.setdefault("seed", 3)
+    return WorkflowEngine(_templates(), **kw)
+
+
+class TestBatchedLaunches:
+    def test_one_stacked_launch_per_family_group(self, monkeypatch):
+        eng = _engine()
+        for tpl in ("normal_wf", "normal_wf", "logn_wf", "drift_wf",
+                    "drift_wf"):
+            eng.submit(tpl)
+        calls = []
+        orig = ops.frontier_moments_with_grads
+
+        def spy(W, mus, sigmas, *, family, **kw):
+            calls.append((family[0], tuple(W.shape)))
+            return orig(W, mus, sigmas, family=family, **kw)
+
+        monkeypatch.setattr(ops, "frontier_moments_with_grads", spy)
+        out = eng.tick()
+        fams = [c[0] for c in calls]
+        # 5 admitted instances, 7 remaining stages, 3 families -> exactly
+        # one launch per family group, NEVER one per instance (the three
+        # single-stage instances retire within the tick, after the solve)
+        assert out["admitted"] == 5 and out["rows"] == 7
+        assert len(fams) == len(set(fams)), f"duplicate family launch: {fams}"
+        assert set(fams) == {"normal", "lognormal", "drift"}
+        assert out["launches"] == len(fams)
+        # every launch is padded to one row bucket over the pinned kmax
+        assert {s for _, s in calls} <= {(8, eng.kmax)}
+
+    def test_row_moments_match_solo_solves(self):
+        eng = _engine()
+        for tpl in ("normal_wf", "logn_wf", "drift_wf"):
+            eng.submit(tpl)
+        eng.tick()
+        assert eng.last_rows
+        for r in eng.last_rows:
+            mu, var = ops.frontier_moments(
+                np.asarray(r.w, np.float32)[None],
+                np.asarray(r.mus, np.float32)[None],
+                np.asarray(r.sigmas, np.float32)[None],
+                num_t=eng.num_t, impl=eng.impl, family=r.family)
+            assert float(mu[0]) == pytest.approx(r.mu, rel=1e-3)
+            assert float(var[0]) == pytest.approx(r.var, rel=1e-3, abs=1e-5)
+
+
+class TestAdmission:
+    def test_queue_backpressure_and_wait_telemetry(self):
+        eng = _engine(max_live=2)
+        for _ in range(5):
+            eng.submit("logn_wf")
+        out = eng.tick()
+        # single-stage instances retire the tick they run, freeing slots
+        assert out["admitted"] == 2
+        assert out["queue"] == 3
+        out = eng.tick()
+        assert out["admitted"] == 2 and out["queue"] == 1
+        tel = eng.telemetry
+        assert tel.counters["admitted"] == 4
+        assert tel.stats["queue_wait_ticks"].count == 4
+        assert tel.stats["queue_wait_ticks"].max() >= 1.0  # someone waited
+
+    def test_unknown_template_rejected(self):
+        eng = _engine()
+        with pytest.raises(ValueError, match="unknown template"):
+            eng.submit("nope")
+
+    def test_duplicate_head_admission_rejected(self):
+        from repro.sched.balancer import InstanceHeads, \
+            UncertaintyAwareBalancer
+        heads = InstanceHeads({"t/s": UncertaintyAwareBalancer(
+            num_channels=2, explore=0.0)})
+        heads.admit(0, ["t/s"])
+        with pytest.raises(ValueError, match="already"):
+            heads.admit(0, ["t/s"])
+
+
+class TestSloAndDirtiness:
+    def test_deadline_pressure_raises_row_lam(self):
+        eng = _engine(lam_var=0.01, slo_gain=1.0)
+        relaxed = eng.submit("normal_wf")                 # no SLO
+        urgent = eng.submit("normal_wf", deadline=0.5)    # nearly no slack
+        eng.tick()
+        lam = {r.iid: r.lam for r in eng.last_rows}
+        assert lam[relaxed] == pytest.approx(eng.lam_var)
+        assert lam[urgent] > lam[relaxed]
+        # urgency is capped so a blown deadline cannot send lam to infinity
+        assert lam[urgent] <= eng.lam_var + eng.slo_gain * eng.slo_lam_cap
+
+    def test_settled_instances_contribute_no_rows(self):
+        # settle after one descent; a huge dirty_tol means posterior drift
+        # never re-dirties, so tick 2 must launch NOTHING while the
+        # instance is still live
+        eng = _engine(settle_steps=1, dirty_tol=1e9)
+        eng.submit("normal_wf")
+        out1 = eng.tick()
+        assert out1["launches"] >= 1 and out1["live"] == 1
+        out2 = eng.tick()
+        assert out2["rows"] == 0 and out2["launches"] == 0
+
+    def test_urgency_drift_redirties(self):
+        # a deadline instance burns slack as stages complete, so its SLO
+        # urgency moves every tick; with a tiny dirty_tol that drift alone
+        # re-enters the settled instance into the solve
+        eng = _engine(settle_steps=1, dirty_tol=1e-6, slo_gain=1.0)
+        eng.submit("normal_wf", deadline=3.0)
+        out1 = eng.tick()
+        assert out1["launches"] >= 1
+        out2 = eng.tick()
+        assert out2["rows"] >= 1 and out2["launches"] >= 1
+
+    def test_posterior_drift_redirties(self):
+        # the drift branch itself: a settled instance whose remaining
+        # stage's priced statistics moved past dirty_tol re-seeds its
+        # descent budget
+        eng = _engine(settle_steps=3, dirty_tol=0.05)
+        eng.submit("normal_wf")
+        eng.tick()
+        inst = next(iter(eng._live.values()))
+        inst.steps_left = 0
+        mu0, sg0 = inst.stat_snap["b"]
+        inst.stat_snap["b"] = (mu0 * 2.0, sg0)   # 100% relative drift
+        eng._maybe_redirty(inst)
+        assert inst.steps_left == eng.settle_steps
+
+
+class TestEngineState:
+    def test_state_dict_json_round_trip_tick_parity(self):
+        import json
+
+        eng = _engine()
+        for tpl in ("normal_wf", "logn_wf", "drift_wf"):
+            eng.submit(tpl, deadline=6.0)
+        eng.tick()
+        state = json.loads(json.dumps(eng.state_dict()))
+        eng2 = WorkflowEngine.from_state_dict(state, _templates())
+        o1, o2 = eng.tick(), eng2.tick()
+        assert o1 == o2
+        for iid, inst in eng._live.items():
+            for name, w in inst.weights.items():
+                np.testing.assert_array_equal(
+                    w, eng2._live[iid].weights[name])

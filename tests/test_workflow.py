@@ -1,6 +1,6 @@
 """Workflow subsystem: StageDAG validation + composition, the stacked
-per-row-statistics kernel layout, the joint solver, and the runtime twins
-(WorkflowBalancer / WorkflowSim / PipelineBatcher)."""
+per-row-statistics kernel layout (``stack_rows``), the joint solver, and
+the runtime twins (WorkflowBalancer / WorkflowSim)."""
 import numpy as np
 import pytest
 
@@ -572,38 +572,36 @@ class TestWorkflowRuntime:
             assert (w >= 0.05 - 1e-9).all()
             assert abs(w.sum() - 1.0) < 1e-9
 
-    def test_pipeline_batcher_dag_latency(self):
-        from repro.serve import PartitionedBatcher, PipelineBatcher, \
-            ReplicaGroup
-        from repro.sim import ClusterSim
+    def test_stack_rows_groups_by_family(self):
+        from repro.workflow.solve import stack_rows
 
-        def mk(seed):
-            return PartitionedBatcher(
-                [ReplicaGroup(f"g{i}") for i in range(2)],
-                sim=ClusterSim.heterogeneous(2, seed=seed))
+        rows = [(np.array([1.0, 2.0]), np.array([0.1, 0.2]), "normal"),
+                (np.array([1.0, 2.0, 3.0]), np.array([0.1, 0.2, 0.3]),
+                 "lognormal"),
+                (np.array([2.0, 1.0]), np.array([0.2, 0.1]), "normal")]
+        groups, mask, kmax = stack_rows(rows)
+        assert kmax == 3
+        by = {g.dist_id: g for g in groups}
+        assert set(by) == {"normal", "lognormal"}
+        assert by["normal"].idx == (0, 2)       # original row positions
+        assert by["lognormal"].idx == (1,)
+        # ragged K pads with zeros; the mask marks the real channels
+        np.testing.assert_array_equal(mask, [[1, 1, 0], [1, 1, 1],
+                                             [1, 1, 0]])
+        assert by["normal"].mus.shape == (2, 3)
+        np.testing.assert_array_equal(by["normal"].mus[:, 2], [0.0, 0.0])
+        assert by["normal"].extra.shape[1:] == (2, 3)
 
-        pipe = PipelineBatcher({"a": mk(0), "b": mk(1), "c": mk(2)},
-                               edges=[("a", "b"), ("a", "c")])
-        prompts = np.zeros((8, 4), np.int32)
-        end, counts, comps = pipe.run_batch(prompts)
-        assert comps["b"] >= comps["a"] and comps["c"] >= comps["a"]
-        assert end == pytest.approx(max(comps["b"], comps["c"]))
-        assert set(counts) == {"a", "b", "c"}
-        assert pipe.last_tick["stages"]["a"]["family"] == "normal"
+    def test_stack_rows_pinned_kmax_and_overflow(self):
+        from repro.workflow.solve import stack_rows
 
-    def test_pipeline_batcher_rejects_cycles(self):
-        from repro.serve import PartitionedBatcher, PipelineBatcher, \
-            ReplicaGroup
-        from repro.sim import ClusterSim
-
-        def mk(seed):
-            return PartitionedBatcher(
-                [ReplicaGroup("g")], sim=ClusterSim.heterogeneous(1,
-                                                                  seed=seed))
-
-        with pytest.raises(DAGValidationError, match="cycle"):
-            PipelineBatcher({"a": mk(0), "b": mk(1)},
-                            edges=[("a", "b"), ("b", "a")])
+        rows = [(np.array([1.0, 2.0, 3.0]), np.array([0.1, 0.2, 0.3]),
+                 "normal")]
+        # a serving engine pins kmax so jit keys stay stable across ticks
+        _, mask, kmax = stack_rows(rows, kmax=5)
+        assert kmax == 5 and mask.shape == (1, 5)
+        with pytest.raises(ValueError, match="kmax"):
+            stack_rows(rows, kmax=2)
 
 
 class TestNoDeprecatedNormalShim:
