@@ -21,9 +21,11 @@
 # pyproject.toml) runs when installed — the container image doesn't ship
 # it, so its absence is not a failure.
 #
-# After the tests, the bench smoke runs, and every repo-root BENCH_*.json is
-# checked: it must parse and carry the schema keys its benchmark promises —
-# trajectory readers break silently otherwise.
+# After the tests, the bench smoke runs, then the trace tier (serve smoke
+# under REPRO_TRACE=1: JSONL/Perfetto export validity + the <5% overhead
+# contract), and every repo-root BENCH_*.json is checked: it must parse and
+# carry the schema keys its benchmark promises — trajectory readers break
+# silently otherwise.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -60,6 +62,41 @@ REPRO_SANITIZE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "fault and not slow and not mc_oracle"
 
 scripts/bench_smoke.sh
+
+# Trace tier: the cross-layer observability contract (docs/OBSERVABILITY.md).
+# The serve-engine smoke re-runs under REPRO_TRACE=1: tracing must not
+# perturb the run (the overwritten BENCH_serve_trace_smoke.json re-passes
+# the schema tier below with the same engine numbers, plus a `trace`
+# section), the exported JSONL must validate against the event schema with
+# real cross-layer coverage (>= 4 span kinds, >= 3 audit event types), the
+# Perfetto export must be loadable, and the traced-vs-untraced solver
+# wall-clock overhead must stay under 5%.
+echo "== trace tier: serve_trace smoke under REPRO_TRACE=1 =="
+REPRO_TRACE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.serve_trace --smoke --json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import json
+
+from repro.obs import export as obs_export
+
+recs = obs_export.read_jsonl("TRACE_serve_trace_smoke.jsonl")
+n = obs_export.validate_records(recs)
+kinds = obs_export.span_kinds(recs)
+types = obs_export.event_types(recs)
+assert len(kinds) >= 4, f"span kinds not cross-layer: {sorted(kinds)}"
+assert len(types) >= 3, f"audit event types too few: {sorted(types)}"
+with open("TRACE_serve_trace_smoke.perfetto.json") as f:
+    pf = json.load(f)
+assert pf["traceEvents"], "perfetto export is empty"
+with open("BENCH_serve_trace_smoke.json") as f:
+    d = json.load(f)
+tr = d["trace"]
+assert tr["overhead_pct"] < 5.0, \
+    f"tracing overhead {tr['overhead_pct']}% breaks the <5% contract"
+assert tr["dropped"] == 0, f"trace ring dropped records: {tr}"
+print(f"trace tier OK: {n} records, {len(kinds)} span kinds, "
+      f"{len(types)} audit event types, overhead {tr['overhead_pct']}%")
+PY
 
 python - <<'PY'
 import glob

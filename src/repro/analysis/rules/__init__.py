@@ -15,8 +15,11 @@ Importing this package registers every rule with the framework registry
   fidelity knob, not hard-code ``num_t``
 * :mod:`.serving`    — RPA080: no per-instance frontier_moments loops on the
   serving path (stack rows, one launch per family group)
+* :mod:`.observability` — RPA090/RPA091: span/event names come from the
+  ``repro.obs.names`` registry; no wall-clock ``time.time()`` in timing
+  paths
 
 See docs/INVARIANTS.md for the catalogue with rationale and history.
 """
-from . import (contracts, famcov, family, fidelity, serving,  # noqa: F401
-               staticargs, vjp, vmem)
+from . import (contracts, famcov, family, fidelity, observability,  # noqa: F401
+               serving, staticargs, vjp, vmem)

@@ -174,14 +174,17 @@ def save_pipeline(directory: str, step: int, balancer, *,
     manifest exists to uphold. Restore with :func:`restore_pipeline`.
     """
     from ..kernels import autotune as _autotune  # lazy: layering
+    from ..obs import events as _obs_events  # lazy: layering
     manifest = {
         "kind": _pipeline_kind(balancer),
         "balancer": balancer.state_dict(),
         "inflight": inflight,
         "autotune": _autotune.cache_state() if autotune else None,
     }
-    return save(directory, step, tree if tree is not None else {},
+    path = save(directory, step, tree if tree is not None else {},
                 meta={**(meta or {}), "pipeline": manifest})
+    _obs_events.ckpt_save(step, manifest["kind"], path)
+    return path
 
 
 def restore_pipeline(directory: str, *, dag=None, template=None,
@@ -224,6 +227,9 @@ def restore_pipeline(directory: str, *, dag=None, template=None,
     if autotune and manifest.get("autotune"):
         from ..kernels import autotune as _autotune  # lazy: layering
         _autotune.load_cache_state(manifest["autotune"])
+    from ..obs import events as _obs_events  # lazy: layering
+    _obs_events.ckpt_restore(int(meta.get("step", -1)), manifest["kind"],
+                             directory)
     if template is not None:
         meta = dict(meta)
         meta["tree"] = tree

@@ -42,6 +42,7 @@ import json
 import logging
 import os
 import re
+import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -230,6 +231,17 @@ def _load_json(cache_path: str) -> None:
             _CACHE[k] = v
 
 
+# per-thread record of how the most recent lookup resolved, read by the
+# kernel-launch span emitters (repro.obs) — a return-channel attribute, so
+# lookup's signature and call sites stay unchanged
+_LOOKUP_LOCAL = threading.local()
+
+
+def last_outcome() -> str:
+    """``"hit"`` | ``"miss"`` for this thread's latest :func:`lookup`."""
+    return getattr(_LOOKUP_LOCAL, "outcome", "none")
+
+
 def lookup(F: int, K: int, num_t: int, backend: str = "xla",
            fused: bool = False, cache_path: Optional[str] = None,
            dist_id: str = "normal", params: bool = False,
@@ -248,7 +260,9 @@ def lookup(F: int, K: int, num_t: int, backend: str = "xla",
     key = _key(F, K, num_t, backend, fused, dist_id, params, stacked)
     hit = _CACHE.get(key)
     if hit is not None:
+        _LOOKUP_LOCAL.outcome = "hit"
         return max(min(int(hit["block_f"]), F), 1)
+    _LOOKUP_LOCAL.outcome = "miss"
     bf = pick_block_f(F, K, num_t, backend, fused, dist_id=dist_id,
                       params=params, stacked=stacked)
     _log.debug(

@@ -18,6 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from ..analysis import sanitize as _san
+from ..obs import events as _obs_events
+from ..obs import names as _obs_names
+from ..obs import trace as _obs
 from . import autotune as _at
 from . import flash_attention as _fa
 from . import flash_decode as _fd
@@ -431,10 +434,28 @@ def frontier_moments(W, mus, sigmas, *, num_t: int = 1024, impl: str = "xla",
     # differentiation swaps in.
     bf_fwd = _resolve_block_f(F, K, num_t, impl, block_f, fused=False,
                               dist_id=dist_id, stacked=stacked)
+    trace_on = _obs.enabled()
+    at_out = None
+    if trace_on:
+        at_out = "explicit" if block_f is not None else _at.last_outcome()
     bf_fused = _resolve_block_f(F, K, num_t, impl, None, fused=True,
                                 dist_id=dist_id, params=True, stacked=stacked)
     if block_f is not None:
         bf_fused = min(max(min(block_f, F), 1), bf_fused)
+    if trace_on:
+        # span only on concrete (host-side) launches: recording at trace
+        # time would log once per COMPILE, not per launch, and the tracer
+        # must never plant effects inside a traced computation — a tracer
+        # hit is logged as a compile audit event instead
+        if _san.all_concrete(W, mus, sigmas, extra):
+            with _obs.span(_obs_names.SPAN_KERNEL_LAUNCH, family=dist_id,
+                           mode="fwd", F=F, K=K, num_t=num_t,
+                           block_f=bf_fwd, impl=impl, stacked=stacked,
+                           autotune=at_out):
+                return _frontier_moments_vjp(W, mus, sigmas, extra, num_t,
+                                             impl, (bf_fwd, bf_fused), z,
+                                             dist_id)
+        _obs_events.kernel_compile("fwd", F, K, num_t, impl)
     return _frontier_moments_vjp(W, mus, sigmas, extra, num_t, impl,
                                  (bf_fwd, bf_fused), z, dist_id)
 
@@ -475,6 +496,20 @@ def frontier_moments_with_grads(W, mus, sigmas, *, num_t: int = 1024,
     bf = _resolve_block_f(W.shape[0], W.shape[1], num_t, impl, block_f,
                           fused=True, dist_id=dist_id, params=param_grads,
                           stacked=stacked)
+    if _obs.enabled():
+        mode = "pgrad" if param_grads else "grad"
+        if _san.all_concrete(W, mus, sigmas, extra):
+            at_out = ("explicit" if block_f is not None
+                      else _at.last_outcome())
+            with _obs.span(_obs_names.SPAN_KERNEL_LAUNCH, family=dist_id,
+                           mode=mode, F=int(W.shape[0]), K=int(W.shape[1]),
+                           num_t=num_t, block_f=bf, impl=impl,
+                           stacked=stacked, autotune=at_out):
+                return _moments_grads(W, mus, sigmas, extra, num_t, impl,
+                                      bf, z, dist_id,
+                                      param_grads=param_grads)
+        _obs_events.kernel_compile(mode, int(W.shape[0]), int(W.shape[1]),
+                                   num_t, impl)
     return _moments_grads(W, mus, sigmas, extra, num_t, impl, bf, z, dist_id,
                           param_grads=param_grads)
 

@@ -203,7 +203,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str = DEFAULT_
     for v in mesh.shape.values():
         chips *= v
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         if partitioned:
             fn, args, shardings, meta = build_partitioned_cell(
                 arch, mesh, compress=opts.get("compress", False),
@@ -218,9 +218,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str = DEFAULT_
         meta["tag"] = tag
         with jax.set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         stats = analyze_hlo(compiled.as_text())

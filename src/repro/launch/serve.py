@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs import ARCHS, get_config
 from ..models import build_model
+from ..obs import trace as obs
 from ..serve import PartitionedBatcher, ReplicaGroup, ServeEngine
 from ..sim.cluster import Channel, ClusterSim
 
@@ -69,6 +70,31 @@ def _run_engine(args) -> None:
     print(f"join latency p50 {s['join_latency_s']['p50']:.3f}s "
           f"p99 {s['join_latency_s']['p99']:.3f}s; "
           f"solver tick p50 {s['solver_tick_us']['p50']:.0f}us")
+    if args.trace:
+        _export_trace(args.trace)
+
+
+def _export_trace(prefix: str) -> None:
+    """Dump the tracer's ring buffer as JSONL + a Perfetto-loadable trace.
+
+    Writes ``<prefix>.jsonl`` and ``<prefix>.perfetto.json``; a no-op
+    message is printed when tracing was never enabled (REPRO_TRACE unset),
+    so --trace without the env var doesn't silently produce empty files.
+    """
+    from ..obs import export as obs_export
+    recs = obs.records()
+    if not recs:
+        print("trace: no records captured — run with REPRO_TRACE=1")
+        return
+    jsonl = f"{prefix}.jsonl"
+    perfetto = f"{prefix}.perfetto.json"
+    obs_export.validate_records(recs)
+    obs_export.write_jsonl(recs, jsonl)
+    obs_export.write_perfetto(recs, perfetto)
+    print(f"trace: {len(recs)} records "
+          f"({len(obs_export.span_kinds(recs))} span kinds, "
+          f"{len(obs_export.event_types(recs))} event types, "
+          f"{obs.dropped()} dropped) -> {jsonl}, {perfetto}")
 
 
 def main() -> None:
@@ -110,7 +136,14 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="engine mode: SLO deadline (sim seconds) attached "
                          "to every request")
+    # cross-layer tracing (PR 10)
+    ap.add_argument("--trace", default=None, metavar="PREFIX",
+                    help="export the run's trace to PREFIX.jsonl and "
+                         "PREFIX.perfetto.json (enables tracing for the "
+                         "run; REPRO_TRACE=1 also works)")
     args = ap.parse_args()
+    if args.trace:
+        obs.set_enabled(True)
 
     if args.engine:
         _run_engine(args)
@@ -147,6 +180,8 @@ def main() -> None:
     print(f"policy={args.policy} family={args.family} "
           f"risk_lam={args.risk_lam}: mean join {lat.mean():.3f}s  "
           f"var {lat.var():.4f}  p99 {np.percentile(lat, 99):.3f}s")
+    if args.trace:
+        _export_trace(args.trace)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""Typed audit-event emitters: the *why* log.
+
+Spans say how long things took; these say why they happened — which stage
+went dirty and what drift pushed it over, whether the fragility gate let a
+refresh through, which family BIC selection switched to and at what
+scores, which row's SLO headroom escalated its risk lam, what churn hit
+the fleet, and every checkpoint save/restore. Each helper owns the
+attribute schema for its event type (validated in
+:mod:`repro.obs.export`), guards the tracing-off fast path, and coerces
+values to JSON-serializable scalars so numpy types never leak into the
+event log.
+
+All emitters are host-side only and draw from no RNG — see the
+zero-perturbation contract in :mod:`repro.obs.trace`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from . import names, trace
+
+__all__ = [
+    "dirty", "fragility_gate", "family_switch", "slo_lam", "churn",
+    "ckpt_save", "ckpt_restore", "kernel_compile",
+]
+
+
+def _f(x) -> Optional[float]:
+    return None if x is None else float(x)
+
+
+def dirty(scope: str, key, cause: str, drift=None) -> None:
+    """A row/stage joined the dirty set: who, and which trigger fired."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_DIRTY, scope=scope, key=str(key), cause=cause,
+                drift=_f(drift))
+
+
+def fragility_gate(passed: bool, rel_frag, target) -> None:
+    """Balancer fragility gate verdict on a refresh tick."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_FRAGILITY, passed=bool(passed),
+                rel_frag=_f(rel_frag), target=_f(target))
+
+
+def family_switch(old: str, new: str, scores: Dict[str, Any],
+                  streak: int = 0) -> None:
+    """BIC model selection changed the completion-time family."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_FAMILY_SWITCH, old=str(old), new=str(new),
+                scores={str(k): _f(v) for k, v in scores.items()},
+                streak=int(streak))
+
+
+def slo_lam(instance, lam, base, headroom=None) -> None:
+    """A row's risk lam was escalated above base by SLO deadline pressure."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_SLO_LAM, instance=str(instance), lam=_f(lam),
+                base=_f(base), headroom=_f(headroom))
+
+
+def churn(kind: str, channel, source: str, detail=None) -> None:
+    """Failure/recovery/throttle/load churn observed at ``source``."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_CHURN, kind=str(kind), channel=int(channel),
+                source=source,
+                detail=None if detail is None else str(detail))
+
+
+def ckpt_save(step, kind: str, path: str) -> None:
+    if not trace.enabled():
+        return
+    trace.event(names.EV_CKPT_SAVE, step=int(step), kind=str(kind),
+                path=str(path))
+
+
+def ckpt_restore(step, kind: str, path: str) -> None:
+    """First record of a restored replica's fresh (never-restored) trace."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_CKPT_RESTORE, step=int(step), kind=str(kind),
+                path=str(path))
+
+
+def kernel_compile(mode: str, F: int, K: int, num_t: int, impl: str) -> None:
+    """A frontier entry point was hit with tracer args (jit compile)."""
+    if not trace.enabled():
+        return
+    trace.event(names.EV_KERNEL_COMPILE, mode=str(mode), F=int(F),
+                K=int(K), num_t=int(num_t), impl=str(impl))

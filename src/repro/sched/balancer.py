@@ -44,6 +44,9 @@ from ..core import (NIGState, get_family, nig_init, nig_point_estimates,
                     nig_update_batch, equal_split, inverse_mu_split,
                     optimize_2ch, optimize_weights, predict_moments,
                     fit_selected_family, score_families)
+from ..obs import events as obs_events
+from ..obs import names as obs_names
+from ..obs import trace as obs
 
 __all__ = ["integerize", "UncertaintyAwareBalancer", "WorkflowBalancer",
            "InstanceHeads"]
@@ -207,6 +210,8 @@ class UncertaintyAwareBalancer:
         else:
             self._challenger_count += 1
         if self._challenger_count >= max(self.hysteresis, 1):
+            obs_events.family_switch(current, scores.winner, scores.bics,
+                                     streak=self._challenger_count)
             self._selected_family = fit_selected_family(scores)
             self._challenger, self._challenger_count = None, 0
             self._cached_w = None        # model change: re-solve immediately
@@ -278,18 +283,21 @@ class UncertaintyAwareBalancer:
                         and len(self._cached_w) == k else None)
                 # refresh tick rides the fused moments+gradient path: every
                 # PGD step inside is one analytic forward+grad launch
-                out = optimize_weights(mus, sigmas, lam=self.lam,
-                                       steps=self.pgd_steps,
-                                       restarts=restarts,
-                                       num_t=self.num_t, impl=self.impl,
-                                       warm_start=warm,
-                                       block_f=self.block_f,
-                                       family=fam,
-                                       risk_lam=self.risk_lam,
-                                       posterior=(self._nig if self.risk_lam > 0
-                                                  or self.adaptive_refresh
-                                                  else None),
-                                       return_sensitivity=self.adaptive_refresh)
+                with obs.span(obs_names.SPAN_SCHED_REFRESH, kind="fleet",
+                              k=k, warm=warm is not None):
+                    out = optimize_weights(
+                        mus, sigmas, lam=self.lam,
+                        steps=self.pgd_steps,
+                        restarts=restarts,
+                        num_t=self.num_t, impl=self.impl,
+                        warm_start=warm,
+                        block_f=self.block_f,
+                        family=fam,
+                        risk_lam=self.risk_lam,
+                        posterior=(self._nig if self.risk_lam > 0
+                                   or self.adaptive_refresh
+                                   else None),
+                        return_sensitivity=self.adaptive_refresh)
                 if self.adaptive_refresh:
                     dec, report = out
                     self._last_fragility = report.fragility
@@ -634,6 +642,7 @@ class WorkflowBalancer:
             raise KeyError(f"unknown stage {stage!r}")
         self._failed.setdefault(stage, set()).add(int(idx))
         self._cached = None
+        obs_events.churn("fail", idx, "balancer", detail=stage)
 
     def handle_recovery(self, stage: str, idx: int):
         """Re-admit a recovered channel (no-op if it was never failed)."""
@@ -643,6 +652,7 @@ class WorkflowBalancer:
             if not bad:
                 self._failed.pop(stage)
         self._cached = None
+        obs_events.churn("recover", idx, "balancer", detail=stage)
 
     def failed_channels(self) -> dict:
         """{stage: sorted failed channel indices} — empty when healthy."""
@@ -701,7 +711,9 @@ class WorkflowBalancer:
             return None
         rel = self._last_rel_frag
         if rel is None or rel > self.refresh_target_rel:
+            obs_events.fragility_gate(False, rel, self.refresh_target_rel)
             return None
+        obs_events.fragility_gate(True, rel, self.refresh_target_rel)
         dirty = set()
         for s in live.stages:
             snap = self._solve_stats.get(s.name)
@@ -709,6 +721,7 @@ class WorkflowBalancer:
                 self._est[s.name].selected_family)
             if snap is None or self._solve_fams.get(s.name) != fkey:
                 dirty.add(s.name)
+                obs_events.dirty("workflow", s.name, "family")
                 continue
             mu0, sg0 = snap
             mu = np.asarray(s.mus, np.float64)
@@ -720,6 +733,7 @@ class WorkflowBalancer:
                              / np.maximum(np.abs(sg0), 1e-9))))
             if drift > self.dirty_tol:
                 dirty.add(s.name)
+                obs_events.dirty("workflow", s.name, "drift", drift)
         if len(dirty) == len(live.stages):
             return None      # everything moved: a plain full solve
         return dirty
@@ -761,18 +775,22 @@ class WorkflowBalancer:
                     posteriors = {s.name: self._est[s.name]._nig
                                   for s in self.dag.stages}
                 warm = (self._cached if self._cached is not None else None)
-                dec = solve_dag(live, lam_var=self.lam_var,
-                                steps=self.pgd_steps,
-                                restarts=self.restarts,
-                                num_t=self.num_t, impl=self.impl,
-                                block_f=self.block_f, warm_start=warm,
-                                risk_lam=self.risk_lam,
-                                posteriors=posteriors,
-                                presolve_num_t=self.presolve_num_t,
-                                prune_margin=self.prune_margin,
-                                plateau_tol=self.plateau_tol,
-                                plateau_patience=self.plateau_patience,
-                                dirty=dirty)
+                with obs.span(obs_names.SPAN_SCHED_REFRESH, kind="workflow",
+                              stages=len(live.stages),
+                              dirty=(-1 if dirty is None else len(dirty)),
+                              warm=warm is not None):
+                    dec = solve_dag(live, lam_var=self.lam_var,
+                                    steps=self.pgd_steps,
+                                    restarts=self.restarts,
+                                    num_t=self.num_t, impl=self.impl,
+                                    block_f=self.block_f, warm_start=warm,
+                                    risk_lam=self.risk_lam,
+                                    posteriors=posteriors,
+                                    presolve_num_t=self.presolve_num_t,
+                                    prune_margin=self.prune_margin,
+                                    plateau_tol=self.plateau_tol,
+                                    plateau_patience=self.plateau_patience,
+                                    dirty=dirty)
                 self._last_decision = dec
                 self._last_rel_frag = dec.relative_fragility
                 if (self.adaptive_refresh

@@ -26,6 +26,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..kernels import autotune, ops
+from ..obs import events as obs_events
+from ..obs import names as obs_names
+from ..obs import trace as obs
 from ..sched.balancer import (InstanceHeads, UncertaintyAwareBalancer,
                               integerize)
 from ..sim.cluster import ClusterSim, WorkflowSim
@@ -391,6 +394,9 @@ class WorkflowEngine:
             for s in dag.stages:
                 inst.weights[s.name] = np.full(s.k, 1.0 / s.k)
             self._live[iid] = inst
+            # dirty-set membership is auditable from birth: admission IS
+            # the first dirty interval (steps_left = settle_steps)
+            obs_events.dirty("engine", str(iid), "admit")
             self.telemetry.bump("admitted")
             self.telemetry.add("queue_wait_ticks",
                                self.tick_count - req["queued_tick"])
@@ -440,11 +446,15 @@ class WorkflowEngine:
                                      / np.maximum(np.abs(mu0), 1e-12))))
             if drift > self.dirty_tol:
                 inst.steps_left = self.settle_steps
+                obs_events.dirty("engine", f"{inst.iid}/{name}", "drift",
+                                 drift)
                 return
         lam_now = self._row_lam(inst)
         if abs(lam_now - inst.lam) > self.dirty_tol * max(abs(inst.lam),
                                                           1.0):
             inst.steps_left = self.settle_steps
+            obs_events.dirty("engine", str(inst.iid), "slo",
+                             abs(lam_now - inst.lam))
 
     def _gather_rows(self) -> List[_EngineRow]:
         rows: List[_EngineRow] = []
@@ -454,6 +464,9 @@ class WorkflowEngine:
             if inst.steps_left <= 0:
                 continue
             lam_i = self._row_lam(inst)
+            if obs.enabled() and lam_i > self.lam_var:
+                obs_events.slo_lam(inst.iid, lam_i, self.lam_var,
+                                   headroom=inst.deadline - inst.elapsed)
             tpl = inst.template
             for s in self.templates[tpl].stages:
                 if s.name in inst.completions:
@@ -495,9 +508,11 @@ class WorkflowEngine:
                 W[n:], mus[n:], sgs[n:] = W[0], mus[0], sgs[0]
                 ex[:, n:] = ex[:, :1]
                 msk[n:], lam[n:] = msk[0], lam[0]
-            m, v, W2 = row_pgd_step(W, mus, sgs, g.dist_id, ex, lam, msk,
-                                    num_t=self.num_t, impl=self.impl,
-                                    lr=self.lr)
+            with obs.span(obs_names.SPAN_SOLVER_PGD, family=g.dist_id,
+                          rows=n, F=F, K=kmax, num_t=self.num_t):
+                m, v, W2 = row_pgd_step(W, mus, sgs, g.dist_id, ex, lam,
+                                        msk, num_t=self.num_t,
+                                        impl=self.impl, lr=self.lr)
             launches += 1
             self.telemetry.bump("launches")
             self.telemetry.add("rows_per_launch", n)
@@ -564,29 +579,39 @@ class WorkflowEngine:
         submit before admission — convenience for trace-driven callers.
         """
         self.tick_count += 1
-        for sim in self.sims.values():
-            sim.tick()  # scheduled churn fires before this tick's draws
-        for a in arrivals:
-            if isinstance(a, (tuple, list)):
-                self.submit(a[0], a[1])
-            else:
-                self.submit(a)
-        admitted = self._admit()
-        rows = self._gather_rows()
-        launches = self._solve_tick(rows) if rows else 0
-        self.last_rows = rows
-        retired = self._execute()
-        self.telemetry.bump("ticks")
-        self.telemetry.add("live_instances", len(self._live))
-        self.last_tick = {
-            "tick": self.tick_count,
-            "admitted": admitted,
-            "retired": retired,
-            "live": len(self._live),
-            "queue": len(self._queue),
-            "rows": len(rows),
-            "launches": launches,
-        }
+        obs.set_tick(self.tick_count)
+        with obs.span(obs_names.SPAN_ENGINE_TICK) as sp_tick:
+            for sim in self.sims.values():
+                sim.tick()  # scheduled churn fires before this tick's draws
+            for a in arrivals:
+                if isinstance(a, (tuple, list)):
+                    self.submit(a[0], a[1])
+                else:
+                    self.submit(a)
+            with obs.span(obs_names.SPAN_ENGINE_STAGE, stage="admission"):
+                admitted = self._admit()
+            with obs.span(obs_names.SPAN_ENGINE_STAGE, stage="stack_rows"):
+                rows = self._gather_rows()
+            with obs.span(obs_names.SPAN_ENGINE_STAGE, stage="launch"):
+                launches = self._solve_tick(rows) if rows else 0
+            self.last_rows = rows
+            with obs.span(obs_names.SPAN_ENGINE_STAGE, stage="commit"):
+                retired = self._execute()
+            self.telemetry.bump("ticks")
+            self.telemetry.add("live_instances", len(self._live))
+            self.last_tick = {
+                "tick": self.tick_count,
+                "admitted": admitted,
+                "retired": retired,
+                "live": len(self._live),
+                "queue": len(self._queue),
+                "rows": len(rows),
+                "launches": launches,
+            }
+            if obs.enabled():
+                sp_tick.attrs.update(live=len(self._live),
+                                     queue=len(self._queue),
+                                     rows=len(rows), launches=launches)
         return self.last_tick
 
     # ------------------------------------------------------------ state

@@ -87,6 +87,67 @@ class StreamingStat:
             "p99": self.quantile(0.99),
         }
 
+    def merge(self, other: "StreamingStat") -> "StreamingStat":
+        """Fold another stat into this one (for sharded-replica rollups).
+
+        The moment fields combine exactly — weighted (parallel) Welford:
+        with ``n = n1 + n2`` and ``d = mean2 - mean1``,
+
+            mean = mean1 + d * n2 / n
+            m2   = m2_1 + m2_2 + d^2 * n1 * n2 / n
+
+        so merged mean/var/min/max/count equal those of the concatenated
+        stream bit-for-bit (up to float round-off). The reservoir cannot
+        combine exactly — each side kept only a uniform sample — so it is
+        subsampled: every kept slot is drawn from side 1 with probability
+        ``n1 / n`` (without replacement within each side), which preserves
+        the every-element-equally-likely invariant quantile queries rest
+        on. The draws come from ``self``'s own rng, never a simulation
+        stream; merging is deterministic given both states.
+        """
+        if other.capacity != self.capacity:
+            raise ValueError(
+                f"reservoir capacities differ: {self.capacity} vs "
+                f"{other.capacity}")
+        if other._n == 0:
+            return self
+        if self._n == 0:
+            self._res = list(other._res)
+            self._n = other._n
+            self._mean = other._mean
+            self._m2 = other._m2
+            self._max = other._max
+            self._min = other._min
+            return self
+        n1, n2 = self._n, other._n
+        n = n1 + n2
+        d = other._mean - self._mean
+        self._mean += d * n2 / n
+        self._m2 += other._m2 + d * d * n1 * n2 / n
+        self._max = max(self._max, other._max)
+        self._min = min(self._min, other._min)
+        self._n = n
+        pool1 = list(self._res)
+        pool2 = list(other._res)
+        self._rng.shuffle(pool1)
+        self._rng.shuffle(pool2)
+        merged: list = []
+        want = min(self.capacity, len(pool1) + len(pool2))
+        i = j = 0
+        while len(merged) < want:
+            # weight each side by how many stream elements its pool stands
+            # in for, so the merged reservoir stays uniform over the union
+            w1 = n1 if i < len(pool1) else 0
+            w2 = n2 if j < len(pool2) else 0
+            if self._rng.random() * (w1 + w2) < w1:
+                merged.append(pool1[i])
+                i += 1
+            else:
+                merged.append(pool2[j])
+                j += 1
+        self._res = merged
+        return self
+
     # ------------------------------------------------------------ state
     def state_dict(self) -> dict:
         return {

@@ -28,6 +28,9 @@ from typing import Optional, Tuple, Union
 import numpy as np
 
 from ..core.distributions import lognormal_shape_np
+from ..obs import events as obs_events
+from ..obs import names as obs_names
+from ..obs import trace as obs
 
 __all__ = ["Channel", "ClusterSim", "WorkflowSim"]
 
@@ -146,6 +149,8 @@ class ClusterSim:
 
     def _apply_churn(self):
         for action, idx, value in self.churn.pop(self.step_count, ()):
+            obs_events.churn(action, -1 if idx is None else idx, "sim",
+                             detail=value)
             if action == "fail":
                 self.inject_failure(idx)
             elif action == "recover":
@@ -167,6 +172,7 @@ class ClusterSim:
             return rng
         return np.random.default_rng(rng)
 
+    @obs.traced(obs_names.SPAN_SIM_STEP, sim="cluster")
     def run_step(self, weights,
                  rng: Union[None, int, np.random.Generator] = None
                  ) -> Tuple[float, np.ndarray]:
@@ -359,6 +365,7 @@ class WorkflowSim:
         self.churn.setdefault(int(step), []).append((action, stage, idx,
                                                      value))
 
+    @obs.traced(obs_names.SPAN_SIM_STEP, sim="workflow")
     def tick(self):
         """Advance the workflow clock one step and fire due churn events
         before the step's draws. Called at the top of :meth:`run_dag_step`;
@@ -366,6 +373,8 @@ class WorkflowSim:
         when many instances execute within it)."""
         self.step_count += 1
         for action, stage, idx, value in self.churn.pop(self.step_count, ()):
+            obs_events.churn(action, -1 if idx is None else idx, "sim",
+                             detail=(stage if stage is not None else value))
             targets = ([self.stage_sims[stage]] if stage is not None
                        else list(self.stage_sims.values()))
             for sim in targets:

@@ -65,7 +65,6 @@ parameter adjoints come from the same stacked full-parameter launch).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional, Tuple
@@ -79,6 +78,8 @@ from ..core.bayes import nig_estimate_ses
 from ..core.distributions import resolve_family
 from ..core.partitioner import optimize_weights
 from ..kernels import autotune, ops
+from ..obs import names as obs_names
+from ..obs import trace as obs
 from .dag import StageDAG, compose_structure
 
 __all__ = ["DAGDecision", "solve_dag", "solve_dag_greedy", "evaluate_dag",
@@ -478,8 +479,32 @@ def _starts(dag: StageDAG, mask: np.ndarray, kmax: int, restarts: int,
     return out.astype(np.float32)
 
 
-def _us(t0: float, t1: float) -> float:
-    return round((t1 - t0) * 1e6, 1)
+class _PhaseClock:
+    """Sequential phase attribution on the span API (PR 10).
+
+    ``lap(next)`` closes the open ``solver.phase`` span, books its duration
+    into ``phase_us``, and opens the next phase — so the ladder profile the
+    benchmarks report and the spans a trace viewer shows are the SAME
+    measurement, not two hand timers drifting apart. ``timed_span`` always
+    measures; it records into the trace ring buffer only under
+    ``REPRO_TRACE=1``.
+    """
+
+    def __init__(self, phase_us: Dict[str, float]):
+        self.phase_us = phase_us
+        self._open = None
+
+    def start(self, phase: str) -> None:
+        self._open = obs.timed_span(obs_names.SPAN_SOLVER_PHASE,
+                                    phase=phase).__enter__()
+
+    def lap(self, next_phase: Optional[str] = None) -> None:
+        sp = self._open
+        sp.__exit__(None, None, None)
+        self.phase_us[sp.attrs["phase"]] = round(sp.dur_us, 1)
+        self._open = None
+        if next_phase is not None:
+            self.start(next_phase)
 
 
 def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
@@ -559,7 +584,9 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
     solver counters (starts, survivors, pool size, steps run per phase) so
     fidelity-ladder wins stay attributable.
     """
-    t_begin = time.perf_counter()
+    phase_us: Dict[str, float] = {}
+    clock = _PhaseClock(phase_us)
+    clock.start("starts")
     if done:
         dag = _dag_with_done(dag, done)
     S = len(dag.stages)
@@ -579,7 +606,9 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
         if not dset:
             # nothing moved: the warm split stands verbatim — one forward
             # evaluation for the reported moments, no PGD launch at all
-            base = evaluate_dag(dag, warm_start, num_t=et, impl=impl)
+            with obs.timed_span(obs_names.SPAN_SOLVER_PHASE,
+                                phase="final_score") as sp:
+                base = evaluate_dag(dag, warm_start, num_t=et, impl=impl)
             return DAGDecision(
                 weights={s.name: np.asarray(warm_start[s.name],
                                             np.float64).copy()
@@ -588,8 +617,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
                 makespan_var=base.makespan_var,
                 stage_mu=base.stage_mu, stage_var=base.stage_var,
                 method="pgd-dag-noop", family_groups=base.family_groups,
-                profile={"phase_us": {"final_score":
-                                      _us(t_begin, time.perf_counter())},
+                profile={"phase_us": {"final_score": round(sp.dur_us, 1)},
                          "noop": True, "starts": 0, "survivors": 0,
                          "pool": 1, "presolve_num_t": pnt,
                          "eval_num_t": et})
@@ -644,9 +672,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
             _san.assert_finite("stage sigmas", g.sigmas)
             _san.assert_nonneg("stage sigmas", g.sigmas)
 
-    phase_us = {}
-    t0 = time.perf_counter()
-    phase_us["starts"] = _us(t_begin, t0)
+    clock.lap("presolve")
 
     # --- phase 1: stage-local presolve at the coarse rung; stall counting
     # waits out the first half of the cosine schedule (cold starts spend it
@@ -655,8 +681,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
     W1, _, _, n_pre = _run_phase(W0, bfs_pre, False, pre, pnt, patience,
                                  _PRESOLVE_LR, pre // 2)
     jax.block_until_ready(W1)
-    t1 = time.perf_counter()
-    phase_us["presolve"] = _us(t0, t1)
+    clock.lap("triage")
 
     # --- coarse triage: composed scores of {starts, presolve} at the same
     # rung; the coarse/fine quadrature bias is shared across candidates, so
@@ -693,8 +718,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
         keep[0] = True   # the warm start is never lost to coarse triage
     survivors = int(keep.sum())
     Wr0 = jnp.asarray(Wch[np.flatnonzero(keep)])
-    t2 = time.perf_counter()
-    phase_us["triage"] = _us(t1, t2)
+    clock.lap("refine")
 
     # --- phase 2: composed refine of the survivors at solve fidelity; the
     # survivors are presolved (near-frontier) so the step is small, but the
@@ -705,8 +729,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
     Wf, Wb, _, n_ref = _run_phase(Wr0, bfs_ref, True, steps, num_t, patience,
                                   _REFINE_LR, steps // 2)
     jax.block_until_ready(Wf)
-    t3 = time.perf_counter()
-    phase_us["refine"] = _us(t2, t3)
+    clock.lap("final_score")
 
     # --- final pick at evaluation fidelity: refine inits (which include the
     # triage winners and any warm start), best-seen and final iterates
@@ -718,8 +741,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
                                           stats, cands, et, impl, bfs_eval)
     score = np.asarray(mk_mu, np.float64) + lam_var * np.asarray(
         mk_var, np.float64)
-    t4 = time.perf_counter()
-    phase_us["final_score"] = _us(t3, t4)
+    clock.lap("fragility" if posteriors is not None else None)
 
     method = ("pgd-dag-joint-inc" if upd_np is not None else "pgd-dag-joint")
     frag = None
@@ -748,7 +770,7 @@ def solve_dag(dag: StageDAG, lam_var: float = 0.0, steps: int = 120,
                             svar[best:best + 1], num_t, impl, bfs_frag)
         frag_best = float(fb[0])
     if posteriors is not None:
-        phase_us["fragility"] = _us(t4, time.perf_counter())
+        clock.lap()
 
     Wbest = np.asarray(cands[best], np.float64)
     weights = {s.name: Wbest[i, :s.k] for i, s in enumerate(dag.stages)}
@@ -823,25 +845,27 @@ def solve_dag_greedy(dag: StageDAG, lam: float = 0.0, steps: int = 120,
     else:
         dset = None
     solve_t = num_t if presolve_num_t is None else min(presolve_num_t, num_t)
-    t0 = time.perf_counter()
     weights = {}
-    for s in dag.stages:
-        if dset is not None and s.name not in dset:
-            weights[s.name] = np.asarray(warm_start[s.name],
-                                         np.float64).copy()
-            continue
-        dec = optimize_weights(
-            s.mus, s.sigmas, lam=lam, steps=steps, restarts=restarts,
-            num_t=solve_t, impl=impl, family=s.family,
-            warm_start=(None if warm_start is None
-                        else warm_start.get(s.name)),
-            eval_num_t=num_t)
-        weights[s.name] = dec.weights
-    t1 = time.perf_counter()
-    out = evaluate_dag(dag, weights, num_t=eval_num_t or max(num_t, 2048),
-                       impl=impl)
-    profile = {"phase_us": {"stage_solves": _us(t0, t1),
-                            "final_score": _us(t1, time.perf_counter())},
+    with obs.timed_span(obs_names.SPAN_SOLVER_PHASE,
+                        phase="stage_solves") as sp_solve:
+        for s in dag.stages:
+            if dset is not None and s.name not in dset:
+                weights[s.name] = np.asarray(warm_start[s.name],
+                                             np.float64).copy()
+                continue
+            dec = optimize_weights(
+                s.mus, s.sigmas, lam=lam, steps=steps, restarts=restarts,
+                num_t=solve_t, impl=impl, family=s.family,
+                warm_start=(None if warm_start is None
+                            else warm_start.get(s.name)),
+                eval_num_t=num_t)
+            weights[s.name] = dec.weights
+    with obs.timed_span(obs_names.SPAN_SOLVER_PHASE,
+                        phase="final_score") as sp_eval:
+        out = evaluate_dag(dag, weights, num_t=eval_num_t or max(num_t, 2048),
+                           impl=impl)
+    profile = {"phase_us": {"stage_solves": round(sp_solve.dur_us, 1),
+                            "final_score": round(sp_eval.dur_us, 1)},
                "solve_num_t": solve_t}
     return DAGDecision(
         weights=weights, makespan_mu=out.makespan_mu,

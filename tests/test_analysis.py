@@ -648,3 +648,99 @@ class TestSanitizerCheckify:
         with pytest.raises(JaxRuntimeError, match="non-finite"):
             solve_dag(dag, lam_var=float("nan"), steps=4, num_t=128,
                       restarts=0)
+
+
+# ---------------------------------------------------------------------------
+# RPA090/RPA091: observability discipline
+# ---------------------------------------------------------------------------
+def _lint_repro(tmp_path, source, select, subdir="repro"):
+    """Write one fixture under ``<tmp>/repro/`` — RPA090/RPA091 only
+    patrol files whose path contains a ``repro`` directory."""
+    d = tmp_path / subdir
+    d.mkdir(parents=True, exist_ok=True)
+    p = d / "mod_fx.py"
+    p.write_text(textwrap.dedent(source))
+    return run_paths([str(p)], select=list(select))
+
+
+_FREE_NAME_EMIT = """
+    from repro.obs import trace as obs
+
+    def tick():
+        with obs.span("engine.my_new_span", rows=3):
+            pass
+        obs.event("audit.surprise", cause="drift")
+    """
+
+_REGISTRY_EMIT = """
+    from repro.obs import names as obs_names
+    from repro.obs import trace as obs
+
+    def tick():
+        with obs.span(obs_names.SPAN_ENGINE_TICK, rows=3):
+            pass
+        obs.event(obs_names.EV_DIRTY, cause="drift")
+    """
+
+
+class TestObservabilityDiscipline:
+    def test_rpa090_fires_on_free_string_names(self, tmp_path):
+        fs = _lint_repro(tmp_path, _FREE_NAME_EMIT, select=("RPA090",))
+        assert _codes(fs) == ["RPA090", "RPA090"]
+        assert "repro.obs.names" in fs[0].message
+
+    def test_rpa090_silent_on_registry_constants(self, tmp_path):
+        assert _lint_repro(tmp_path, _REGISTRY_EMIT,
+                           select=("RPA090",)) == []
+
+    def test_rpa090_ignores_unrelated_event_calls(self, tmp_path):
+        # a sim's own event queue is not an obs emit site
+        assert _lint_repro(tmp_path, """
+            def drain(queue):
+                queue.event("fired", at=3)
+
+            def local():
+                def event(name):
+                    return name
+                return event("fine")
+            """, select=("RPA090",)) == []
+
+    def test_rpa090_exempts_obs_package_and_outside_repro(self, tmp_path):
+        assert _lint_repro(tmp_path, _FREE_NAME_EMIT, select=("RPA090",),
+                           subdir="repro/obs") == []
+        assert _lint(tmp_path, _FREE_NAME_EMIT, select=["RPA090"]) == []
+
+    def test_rpa091_bans_wall_clock_in_repro(self, tmp_path):
+        fs = _lint_repro(tmp_path, """
+            import time
+
+            def span():
+                t0 = time.time()
+                return time.time() - t0
+            """, select=("RPA091",))
+        assert _codes(fs) == ["RPA091", "RPA091"]
+        assert "perf_counter" in fs[0].message
+
+    def test_rpa091_allows_monotonic_and_pragma(self, tmp_path):
+        assert _lint_repro(tmp_path, """
+            import time
+
+            def span():
+                t0 = time.perf_counter()
+                return time.perf_counter() - t0
+            """, select=("RPA091",)) == []
+        assert _lint_repro(tmp_path, """
+            import time
+
+            def artifact_name():
+                # repro: allow[RPA091] artifact date stamp, not a duration
+                return int(time.time())
+            """, select=("RPA091",)) == []
+
+    def test_rpa091_silent_outside_repro(self, tmp_path):
+        assert _lint(tmp_path, """
+            import time
+
+            def now():
+                return time.time()
+            """, select=["RPA091"]) == []
